@@ -1,0 +1,99 @@
+"""Table II / Fig. 6 reproduction (reduced scale): FEDGS vs the ten
+comparison approaches on the synthetic non-i.i.d. FEMNIST stream.
+
+Paper scale is M=10, K=35, L=10, T=50, R=500 on real FEMNIST; on this CPU
+container we run a reduced-but-faithful version (same protocol, fewer
+rounds/devices) — the *relative* ordering is the reproduction target
+(DESIGN.md §2). ``quick`` runs a 5-method subset; ``--full`` runs all 15.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import femnist_cnn
+from repro.core import baselines, fedgs
+from repro.data import FactoryStreams, PartitionConfig, femnist, make_partition
+from repro.models import cnn
+
+from .common import emit
+
+# reduced-scale protocol (quick / full)
+QUICK = dict(m=4, k=12, l=4, l_rnd=1, t=10, rounds=5, b_rounds=10,
+             clients=12, steps=4, n=16)
+FULL = dict(m=10, k=35, l=10, l_rnd=2, t=25, rounds=12, b_rounds=40,
+            clients=100, steps=10, n=32)
+
+
+def run(quick: bool = True) -> None:
+    p = QUICK if quick else FULL
+    part = make_partition(PartitionConfig(num_factories=p["m"],
+                                          devices_per_factory=p["k"],
+                                          alpha=0.3, seed=0))
+    mcfg = femnist_cnn.smoke_config() if quick else femnist_cnn.CONFIG
+    model = cnn.make_model_api(mcfg)
+    tx, ty = femnist.make_test_set(n_per_class=10 if quick else 40)
+    tx, ty = jnp.asarray(tx), jnp.asarray(ty)
+
+    def eval_params(params):
+        return cnn.evaluate(params, tx, ty)
+
+    results = {}
+
+    # ---- FEDGS (ours) + random-selection ablation --------------------------
+    for sel in ("gbp_cs", "random"):
+        streams = FactoryStreams(part, batch_size=p["n"], seed=1)
+        params = cnn.init_cnn(jax.random.PRNGKey(0), mcfg)
+        cfg = fedgs.FedGSConfig(
+            num_groups=p["m"], devices_per_group=p["k"],
+            num_selected=p["l"], num_presampled=p["l_rnd"],
+            iters_per_round=p["t"], rounds=p["rounds"], lr=0.05,
+            batch_size=p["n"], selection=sel)
+        t0 = time.time()
+        final, logs = fedgs.run_fedgs(params, cnn.loss_fn, streams,
+                                      part.p_real, cfg,
+                                      eval_fn=eval_params,
+                                      eval_every=cfg.rounds)
+        tl, ta = logs[-1].test_loss, logs[-1].test_accuracy
+        div = float(np.mean([l.divergence for l in logs]))
+        name = "fedgs" if sel == "gbp_cs" else "fedgs_random_sel"
+        results[name] = (ta, tl)
+        emit(f"table2.{name}", (time.time() - t0) * 1e6,
+             f"test_acc={ta:.4f};test_loss={tl:.4f};divergence={div:.4f}")
+
+    # ---- baselines ---------------------------------------------------------
+    strategies = baselines.all_strategies(model)
+    subset = (["fedavg", "fedprox", "fedavgm", "fedadam"] if quick
+              else list(strategies))
+    bcfg = baselines.BaselineConfig(clients_per_round=p["clients"],
+                                    local_steps=p["steps"], lr=0.05,
+                                    rounds=p["b_rounds"], seed=0)
+
+    def eval_fn(pe):
+        params, extras = pe
+        return cnn.evaluate(params, tx, ty)
+
+    for name in subset:
+        streams = FactoryStreams(part, batch_size=p["n"], seed=1)
+        strat = strategies[name]
+        t0 = time.time()
+        # CGAU/FedFusion evaluate through their extras-aware head; for the
+        # Table II metric we evaluate the shared backbone+head like the paper
+        (params, extras), logs = baselines.run_baseline(
+            model, strat,
+            lambda r: streams.sample_baseline_round(p["clients"], p["steps"],
+                                                    seed=1000 + r),
+            bcfg, eval_fn=eval_fn, eval_every=bcfg.rounds)
+        ta = logs[-1].get("test_accuracy", float("nan"))
+        tl = logs[-1].get("test_loss", float("nan"))
+        results[name] = (ta, tl)
+        emit(f"table2.{name}", (time.time() - t0) * 1e6,
+             f"test_acc={ta:.4f};test_loss={tl:.4f}")
+
+    # headline claim: FEDGS ≥ FedAvg accuracy
+    if "fedavg" in results:
+        gain = results["fedgs"][0] - results["fedavg"][0]
+        emit("table2.fedgs_minus_fedavg_acc", 0.0, f"delta={gain:+.4f}")

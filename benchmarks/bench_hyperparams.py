@@ -1,0 +1,54 @@
+"""Fig. 5 reproduction (reduced grid): FEDGS test accuracy over
+(a) batch size n × iterations-per-round T, (b) groups M × selected L."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import femnist_cnn
+from repro.core import fedgs
+from repro.data import FactoryStreams, PartitionConfig, femnist, make_partition
+from repro.models import cnn
+
+from .common import emit
+
+
+def _run_one(m, k, l, t, n, rounds, mcfg, tx, ty, seed=0):
+    part = make_partition(PartitionConfig(num_factories=m,
+                                          devices_per_factory=k, seed=seed))
+    streams = FactoryStreams(part, batch_size=n, seed=seed)
+    params = cnn.init_cnn(jax.random.PRNGKey(seed), mcfg)
+    cfg = fedgs.FedGSConfig(num_groups=m, devices_per_group=k,
+                            num_selected=l, num_presampled=max(1, l // 5),
+                            iters_per_round=t, rounds=rounds, lr=0.05,
+                            batch_size=n)
+    _, logs = fedgs.run_fedgs(
+        params, cnn.loss_fn, streams, part.p_real, cfg,
+        eval_fn=lambda p: cnn.evaluate(p, tx, ty), eval_every=rounds)
+    return logs[-1].test_accuracy
+
+
+def run(quick: bool = True) -> None:
+    mcfg = femnist_cnn.smoke_config()
+    tx, ty = femnist.make_test_set(n_per_class=8)
+    tx, ty = jnp.asarray(tx), jnp.asarray(ty)
+    total_iters = 60 if quick else 300
+
+    # Fig 5a: n × T at fixed M, L (constant total iterations)
+    for n in ((8, 32) if quick else (8, 16, 32, 64)):
+        for t in ((5, 15) if quick else (10, 30, 50)):
+            t0 = time.time()
+            acc = _run_one(3, 9, 3, t, n, max(1, total_iters // t),
+                           mcfg, tx, ty)
+            emit(f"fig5a.n{n}_T{t}", (time.time() - t0) * 1e6,
+                 f"test_acc={acc:.4f}")
+    # Fig 5b: M × L
+    for m in ((2, 4) if quick else (5, 10, 20)):
+        for l in ((3, 6) if quick else (5, 10, 20)):
+            t0 = time.time()
+            acc = _run_one(m, max(l + 2, 8), l, 10, 16,
+                           max(1, total_iters // 10), mcfg, tx, ty)
+            emit(f"fig5b.M{m}_L{l}", (time.time() - t0) * 1e6,
+                 f"test_acc={acc:.4f}")

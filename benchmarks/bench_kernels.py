@@ -1,0 +1,74 @@
+"""Pallas kernel microbenchmarks (interpret mode on CPU — relative numbers
+only; the TPU-target timing story lives in the §Roofline analysis)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit, time_fn
+
+
+def run(quick: bool = True) -> None:
+    # gbp_cs fused step vs jnp step
+    from repro.core import gbp_cs
+    from repro.kernels.gbp_cs import ops as gops
+    rng = np.random.default_rng(0)
+    F, K, Lsel = 62, 33, 8
+    A = rng.integers(0, 8, (F, K)).astype(np.float32)
+    x = np.zeros(K, np.float32); x[:Lsel] = 1
+    y = (A.sum(1) * Lsel / K).astype(np.float32)
+    us_k = time_fn(lambda: jax.block_until_ready(
+        gops.fused_step(A, x, y)[0]))
+    step = jax.jit(lambda a, xx, yy: gbp_cs._default_step(a, xx, yy))
+    us_j = time_fn(lambda: jax.block_until_ready(step(A, x, y)[0]))
+    emit("kernel.gbp_cs_step_pallas", us_k, f"jnp_ref_us={us_j:.1f}")
+    # full GBP-CS solve (the paper's 15 ms claim, on-device)
+    us_full = time_fn(lambda: jax.block_until_ready(
+        gbp_cs.gbp_cs_minimize(A, y, Lsel, init="mpinv").x))
+    emit("kernel.gbp_cs_full_solve", us_full, "paper_claim_us=15000")
+
+    # flash attention
+    from repro.kernels.flash_attention import ops as fops
+    from repro.models import attention as attn
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    B, S, H, KV, D = 1, 512, 8, 4, 64
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, D), jnp.float32)
+    us_p = time_fn(lambda: jax.block_until_ready(
+        fops.flash_attention(q, k, v, causal=True)))
+    bw = jax.jit(lambda *a: attn.blockwise_attention(*a, causal=True))
+    us_b = time_fn(lambda: jax.block_until_ready(bw(q, k, v)))
+    flops = 4 * B * H * S * S * D / 2
+    emit("kernel.flash_attention_512", us_p,
+         f"xla_blockwise_us={us_b:.1f};ideal_flops={flops:.2e}")
+
+    # ssd scan
+    from repro.kernels.ssd_scan import ops as sops
+    from repro.models.ssm import ssd_chunked
+    Bt, S2, Hh, P, N = 1, 1024, 4, 64, 32
+    x2 = jax.random.normal(ks[0], (Bt, S2, Hh, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bt, S2, Hh)))
+    Am = -jnp.exp(jax.random.normal(ks[2], (Hh,)) * 0.3)
+    Bv = jax.random.normal(ks[0], (Bt, S2, N)) * 0.3
+    Cv = jax.random.normal(ks[1], (Bt, S2, N)) * 0.3
+    us_sk = time_fn(lambda: jax.block_until_ready(
+        sops.ssd_scan(x2, dt, Am, Bv, Cv, chunk=128)))
+    ch = jax.jit(lambda *a: ssd_chunked(*a, chunk=128)[0])
+    us_sx = time_fn(lambda: jax.block_until_ready(ch(x2, dt, Am, Bv, Cv)))
+    emit("kernel.ssd_scan_1024", us_sk, f"xla_chunked_us={us_sx:.1f}")
+
+    # weighted aggregation (Eq. 4): L=10 clients × 64k-param slab (interpret
+    # mode executes the grid in Python, so sizes here are illustrative; the
+    # kernel streams (K × block_p) VMEM tiles on TPU)
+    from repro.kernels.agg_weighted import ops as aops
+    kcl, psz = 10, 65_536
+    stacked = jax.random.normal(ks[0], (kcl, psz))
+    w = jax.random.uniform(ks[1], (kcl,))
+    us_a = time_fn(lambda: jax.block_until_ready(
+        aops.agg_flat(stacked, w, block_p=8192)))
+    ein = jax.jit(lambda s, ww: jnp.einsum("k,kp->p", ww, s))
+    us_e = time_fn(lambda: jax.block_until_ready(ein(stacked, w)))
+    emit("kernel.agg_weighted_10x64k", us_a,
+         f"xla_einsum_us={us_e:.1f};bytes={stacked.nbytes}")

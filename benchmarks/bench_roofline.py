@@ -1,0 +1,32 @@
+"""§Roofline table: read the dry-run artifacts and print the three terms per
+(arch × shape × mesh). Run the dry-run sweep first:
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def run(quick: bool = True) -> None:
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not files:
+        emit("roofline.missing", 0.0,
+             f"no artifacts in {DRYRUN_DIR}; run repro.launch.dryrun --all")
+        return
+    for f in files:
+        with open(f) as fh:
+            d = json.load(fh)
+        r = d["roofline"]
+        tag = f"{d['arch']}__{d['shape']}__{d['mesh']}"
+        emit(f"roofline.{tag}", d.get("compile_s", 0.0) * 1e6,
+             f"t_compute={r['t_compute_s']:.3e};"
+             f"t_memory={r['t_memory_s']:.3e};"
+             f"t_collective={r['t_collective_s']:.3e};"
+             f"bottleneck={r['bottleneck']};"
+             f"useful={r['useful_flops_ratio']:.2f}")

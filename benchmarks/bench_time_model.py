@@ -1,0 +1,27 @@
+"""Prop. 4 reproduction: T_FEDGS vs T_FedAvg over the B_int/B_ext ratio and
+the closed-form efficiency condition TL/(M(L−1)) < B_int/B_ext."""
+from __future__ import annotations
+
+from repro.core import theory
+
+from .common import emit
+
+
+def run(quick: bool = True) -> None:
+    T, M, L = 50, 10, 10
+    threshold = T * L / (M * (L - 1))  # ≈ 5.56 for the paper defaults
+    emit("prop4.threshold", 0.0, f"TL/(M(L-1))={threshold:.3f}")
+    for ratio in (1, 2, 5, 10, 20, 50, 100):
+        net = theory.NetworkModel(b_int=ratio * 5e7, b_ext=5e7)
+        tg = theory.t_fedgs_round(T, M, L, net)
+        tf = theory.t_fedavg_round(T, M, L, net)
+        cond = theory.efficiency_condition(T, M, L, net)
+        agree = cond == (tg < tf)
+        emit(f"prop4.ratio_{ratio}", 0.0,
+             f"t_fedgs={tg:.1f}s;t_fedavg={tf:.1f}s;"
+             f"fedgs_faster={tg < tf};condition={cond};agree={agree}")
+    # selection-latency sensitivity (paper: GBP-CS 15 ms is negligible)
+    for t_sel in (0.0, 0.015, 1.0):
+        net = theory.NetworkModel(b_int=1e9, b_ext=5e7, t_select=t_sel)
+        tg = theory.t_fedgs_round(T, M, L, net)
+        emit(f"prop4.t_select_{t_sel}", 0.0, f"t_fedgs={tg:.2f}s")

@@ -1,0 +1,23 @@
+"""Shared benchmark utilities: timing + the required CSV emission format."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """Required output format: ``name,us_per_call,derived``."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def time_fn(fn: Callable, *, repeats: int = 5, warmup: int = 1) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6

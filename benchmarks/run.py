@@ -1,0 +1,61 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run             # quick (CI) scale
+  PYTHONPATH=src python -m benchmarks.run --full      # paper-protocol scale
+  PYTHONPATH=src python -m benchmarks.run --only fig3 table2
+
+Output format: ``name,us_per_call,derived`` CSV lines.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (
+    bench_fedgs_vs_baselines,
+    bench_hyperparams,
+    bench_initializers,
+    bench_kernels,
+    bench_roofline,
+    bench_samplers,
+    bench_time_model,
+)
+
+SUITES = {
+    "fig3": bench_initializers.run,          # GBP-CS initializers
+    "fig4": bench_samplers.run,              # six samplers
+    "table2": bench_fedgs_vs_baselines.run,  # FEDGS vs ten baselines
+    "fig5": bench_hyperparams.run,           # hyperparameter surfaces
+    "prop4": bench_time_model.run,           # time-efficiency condition
+    "kernels": bench_kernels.run,            # Pallas kernels
+    "roofline": bench_roofline.run,          # dry-run roofline table
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-protocol scale (slow)")
+    ap.add_argument("--only", nargs="*", choices=list(SUITES),
+                    help="subset of suites")
+    args = ap.parse_args()
+    names = args.only or list(SUITES)
+    failed = []
+    for name in names:
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        try:
+            SUITES[name](quick=not args.full)
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failed:
+        print(f"# FAILED suites: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

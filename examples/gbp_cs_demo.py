@@ -1,0 +1,26 @@
+"""GBP-CS as a general constrained 0-1 optimizer (paper §V claim: "can be
+used for other practical cases such as game matching").
+
+Demo: balanced team drafting — pick L_sel players out of K so the team's
+skill-vector matches a target profile. Compares GBP-CS against random and
+Monte Carlo drafting.
+
+  PYTHONPATH=src python examples/gbp_cs_demo.py
+"""
+import numpy as np
+
+from repro.core import samplers
+
+rng = np.random.default_rng(0)
+K, F, L = 40, 6, 5                        # 40 players, 6 skills, team of 5
+skills = rng.integers(0, 10, size=(F, K)).astype(np.float32)
+target = np.asarray([25, 25, 20, 20, 15, 15], np.float32)  # desired profile
+
+print(f"drafting {L} of {K} players to match profile {target.tolist()}\n")
+for name in ("random", "mc", "gbp_cs", "brute"):
+    res = samplers.SAMPLERS[name](skills, target, L)
+    team = res.selected.tolist()
+    got = skills[:, res.selected].sum(1)
+    print(f"{name:8s} | mismatch {res.distance:7.3f} | "
+          f"{res.wall_time_s*1e3:8.1f} ms | team {team} | "
+          f"profile {got.astype(int).tolist()}")

@@ -1,0 +1,52 @@
+"""Quickstart: FEDGS in ~60 lines on the public API.
+
+Trains the paper's CNN on the synthetic non-i.i.d. FEMNIST stream with
+GBP-CS group client selection, then compares the selection divergence
+against random selection.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import femnist_cnn
+from repro.core import fedgs
+from repro.data import FactoryStreams, PartitionConfig, femnist, make_partition
+from repro.models import cnn
+
+# 1. A modern industrial park: M=4 factories × K=12 OCR cameras, non-iid.
+part = make_partition(PartitionConfig(num_factories=4, devices_per_factory=12,
+                                      alpha=0.3, seed=0))
+streams = FactoryStreams(part, batch_size=16, seed=0)
+
+# 2. The paper's 4-layer CNN (reduced for CPU quickstart).
+mcfg = femnist_cnn.smoke_config()
+params = cnn.init_cnn(jax.random.PRNGKey(0), mcfg)
+
+# 3. FEDGS: GBP-CS selects L=4 devices per factory each iteration
+#    (L_rnd=1 random + L_sel=3 optimized); internal sync every iteration,
+#    external sync every T=10.
+cfg = fedgs.FedGSConfig(num_groups=4, devices_per_group=12, num_selected=4,
+                        num_presampled=1, iters_per_round=10, rounds=8,
+                        lr=0.05, batch_size=16, selection="gbp_cs")
+
+test_x, test_y = femnist.make_test_set(n_per_class=8)
+eval_fn = lambda p: cnn.evaluate(p, jnp.asarray(test_x), jnp.asarray(test_y))
+
+final_params, logs = fedgs.run_fedgs(
+    params, cnn.loss_fn, streams, part.p_real, cfg,
+    eval_fn=eval_fn, eval_every=2,
+    log_fn=lambda l: print(
+        f"round {l.round:2d}  loss {l.loss:.3f}  divergence {l.divergence:.4f}"
+        + (f"  acc {l.test_accuracy:.3f}" if l.test_accuracy else "")))
+
+print(f"\nfinal divergence (GBP-CS): {logs[-1].divergence:.4f}")
+
+# 4. Ablation: the same run with FedAvg-style random selection.
+cfg_r = fedgs.FedGSConfig(**{**vars(cfg), "selection": "random"})
+streams_r = FactoryStreams(part, batch_size=16, seed=0)
+_, logs_r = fedgs.run_fedgs(cnn.init_cnn(jax.random.PRNGKey(0), mcfg),
+                            cnn.loss_fn, streams_r, part.p_real, cfg_r)
+print(f"final divergence (random):  {logs_r[-1].divergence:.4f}")
+print("GBP-CS super nodes are closer to the global class distribution" if
+      logs[-1].divergence < logs_r[-1].divergence else "unexpected!")

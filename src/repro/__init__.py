@@ -1,0 +1,9 @@
+"""FEDGS reproduction framework (JAX + Pallas).
+
+Data Heterogeneity-Robust Federated Learning via Group Client Selection in
+Industrial IoT (Li et al., 2022) — group client selection (GBP-CS) and the
+compound-step synchronization protocol as a first-class feature of a
+multi-pod JAX training/serving stack. See DESIGN.md / EXPERIMENTS.md.
+"""
+
+__version__ = "0.1.0"

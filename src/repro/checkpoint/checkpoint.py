@@ -1,0 +1,83 @@
+"""Pytree checkpointing: .npz leaves + JSON treedef manifest.
+
+No orbax offline; this covers the framework need (save/restore params +
+optimizer state + step counter, atomic write, latest-step discovery).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+_MANIFEST = "manifest.json"
+_ARRAYS = "arrays.npz"
+
+
+def _flatten(tree: PyTree) -> tuple[list[np.ndarray], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return [np.asarray(l) for l in leaves], treedef
+
+
+def save(path: str, tree: PyTree, *, step: int | None = None,
+         metadata: dict | None = None) -> str:
+    """Save a pytree checkpoint to ``path`` (a directory), atomically."""
+    leaves, treedef = _flatten(tree)
+    os.makedirs(path, exist_ok=True)
+    tmp = tempfile.mkdtemp(dir=path, prefix=".tmp_")
+    np.savez(os.path.join(tmp, _ARRAYS),
+             **{f"leaf_{i}": l for i, l in enumerate(leaves)})
+    manifest = {
+        "treedef": str(treedef),
+        "num_leaves": len(leaves),
+        "step": step,
+        "metadata": metadata or {},
+        "dtypes": [str(l.dtype) for l in leaves],
+        "shapes": [list(l.shape) for l in leaves],
+    }
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=1)
+    final = os.path.join(path, f"step_{step if step is not None else 0}")
+    if os.path.exists(final):
+        import shutil
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def load(ckpt_dir: str) -> tuple[list[np.ndarray], dict]:
+    """Load raw leaves + manifest from one step directory."""
+    with open(os.path.join(ckpt_dir, _MANIFEST)) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(ckpt_dir, _ARRAYS))
+    leaves = [data[f"leaf_{i}"] for i in range(manifest["num_leaves"])]
+    return leaves, manifest
+
+
+def restore(ckpt_dir: str, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (shape/dtype-checked)."""
+    leaves, manifest = load(ckpt_dir)
+    like_leaves, treedef = jax.tree.flatten(like)
+    if len(leaves) != len(like_leaves):
+        raise ValueError(
+            f"checkpoint has {len(leaves)} leaves, template has "
+            f"{len(like_leaves)}")
+    for i, (got, want) in enumerate(zip(leaves, like_leaves)):
+        if tuple(got.shape) != tuple(np.shape(want)):
+            raise ValueError(f"leaf {i}: shape {got.shape} != {np.shape(want)}")
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def latest_step(path: str) -> str | None:
+    """Most recent step directory under ``path`` (or None)."""
+    if not os.path.isdir(path):
+        return None
+    steps = [(int(d.split("_", 1)[1]), d) for d in os.listdir(path)
+             if d.startswith("step_") and d.split("_", 1)[1].isdigit()]
+    if not steps:
+        return None
+    return os.path.join(path, max(steps)[1])

@@ -1,0 +1,209 @@
+"""ArchConfig: architecture/config system for the assigned model pool.
+
+Every assigned architecture gets one module in ``repro/configs/`` exporting
+``CONFIG`` (the exact full-size spec) and ``smoke_config()`` (a reduced
+variant — ≤2 layers, d_model ≤ 512, ≤4 experts — for CPU smoke tests).
+
+Input shapes are the four assigned global shapes; ``input_specs`` builds
+``jax.ShapeDtypeStruct`` stand-ins (no device allocation) for the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+DENSE = "dense"
+MOE = "moe"
+SSM = "ssm"
+HYBRID = "hybrid"
+VLM = "vlm"
+AUDIO = "audio"
+
+VOCAB_PAD = 256  # pad vocab to a multiple of 256 (MXU + 16-way sharding)
+
+
+def pad_vocab(v: int) -> int:
+    return int(math.ceil(v / VOCAB_PAD) * VOCAB_PAD)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    arch_type: str                    # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    n_heads: int                      # 0 for attention-free
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0                   # 0 -> d_model // n_heads
+    source: str = ""                  # citation bracket from the assignment
+
+    # --- MoE ---
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+
+    # --- MLA (DeepSeek-V2) ---
+    kv_lora_rank: int = 0             # 0 -> standard GQA attention
+    rope_head_dim: int = 64
+
+    # --- SSM (Mamba2 / Zamba2) ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 128
+    attn_every: int = 0               # hybrid: shared attn block every k layers
+
+    # --- modality stubs ---
+    is_encoder_decoder: bool = False  # audio (whisper): enc-dec split
+    vision_prefix_frac: float = 0.0   # vlm: fraction of seq that is patch embeds
+
+    # --- misc ---
+    gated_mlp: bool = True            # swiglu (3 mats) vs gelu (2 mats)
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    sliding_window: int = 4096        # used by long_500k attention variant
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+
+    @property
+    def head_dim(self) -> int:
+        if self.d_head:
+            return self.d_head
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def padded_vocab(self) -> int:
+        return pad_vocab(self.vocab_size)
+
+    @property
+    def has_attention(self) -> bool:
+        return self.n_heads > 0
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def with_(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ---- parameter counting (roofline MODEL_FLOPS = 6·N·D) ----
+    def param_count(self, active_only: bool = False) -> int:
+        """Approximate parameter count; ``active_only`` counts top-k routed
+        experts only (MoE 6·N_active·D convention)."""
+        d, v = self.d_model, self.padded_vocab
+        n = v * d  # token embedding
+        if not self.tie_embeddings:
+            n += v * d  # lm head
+        per_layer = 0
+        if self.has_attention:
+            hd, H, KV = self.head_dim, self.n_heads, self.n_kv_heads
+            if self.kv_lora_rank:
+                r, rd = self.kv_lora_rank, self.rope_head_dim
+                per_attn = (d * H * (hd + rd)       # q (nope+rope)
+                            + d * (r + rd)          # kv down + k_rope
+                            + r * H * hd * 2        # k/v up
+                            + H * hd * d)           # out
+            else:
+                per_attn = d * H * hd + 2 * d * KV * hd + H * hd * d
+        ffn = (3 if self.gated_mlp else 2) * d * self.d_ff if self.d_ff else 0
+        if self.arch_type in (SSM,):
+            ssm = (d * 2 * self.d_inner                 # in_proj (x, z)
+                   + d * 2 * self.ssm_state             # B, C proj
+                   + d * self.ssm_heads                 # dt proj
+                   + self.d_inner * d)                  # out proj
+            per_layer = ssm
+            n += self.num_layers * per_layer
+            return n
+        if self.arch_type == HYBRID:
+            ssm = (d * 2 * self.d_inner + d * 2 * self.ssm_state
+                   + d * self.ssm_heads + self.d_inner * d)
+            n += self.num_layers * ssm
+            # ONE shared attention block (attn + MLP), Zamba weight sharing
+            n += per_attn + ffn
+            return n
+        if self.arch_type == MOE:
+            n_routed = self.n_experts if not active_only else self.top_k
+            moe_ffn = 3 * d * self.d_ff * (n_routed + self.n_shared_experts)
+            router = d * self.n_experts
+            per_layer = per_attn + moe_ffn + router
+        else:  # dense / vlm / audio
+            per_layer = per_attn + ffn
+        layers = self.num_layers * (2 if self.is_encoder_decoder else 1)
+        if self.is_encoder_decoder:
+            per_layer += per_attn  # decoder cross-attention
+        n += layers * per_layer
+        return n
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape,
+                *, dtype=jnp.int32) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input (DESIGN.md §4).
+
+    train/prefill: token ids (+labels for train); modality archs replace a
+    prefix of the sequence with precomputed embeddings (stub frontend).
+    decode: one new token + KV cache / SSM state placeholders are built by
+    the launch layer (they depend on the sharded cache layout).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    emb = cfg.compute_dtype
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), dtype)}
+    if cfg.arch_type == AUDIO and cfg.is_encoder_decoder:
+        s_enc, s_dec = s // 2, s - s // 2
+        specs = {
+            # precomputed mel-frame embeddings (conv frontend stub)
+            "encoder_frames": jax.ShapeDtypeStruct((b, s_enc, cfg.d_model), emb),
+            "tokens": jax.ShapeDtypeStruct((b, s_dec), dtype),
+        }
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s_dec), dtype)
+        return specs
+    if cfg.arch_type == VLM and cfg.vision_prefix_frac > 0:
+        s_vis = int(s * cfg.vision_prefix_frac)
+        s_txt = s - s_vis
+        specs = {
+            # precomputed ViT patch embeddings, already projected (stub)
+            "vision_embeds": jax.ShapeDtypeStruct((b, s_vis, cfg.d_model), emb),
+            "tokens": jax.ShapeDtypeStruct((b, s_txt), dtype),
+        }
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s_txt), dtype)
+        return specs
+    specs = {"tokens": jax.ShapeDtypeStruct((b, s), dtype)}
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), dtype)
+    return specs

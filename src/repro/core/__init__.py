@@ -1,0 +1,17 @@
+"""FEDGS core: the paper's primary contribution.
+
+- gbp_cs / selection / samplers: group client selection (§V)
+- sync / fedgs: compound-step synchronization protocol (§IV)
+- baselines: the ten Table II comparison approaches
+- theory: §VI convergence + time-efficiency results
+"""
+from . import (  # noqa: F401
+    baselines,
+    distributions,
+    fedgs,
+    gbp_cs,
+    samplers,
+    selection,
+    sync,
+    theory,
+)

@@ -1,0 +1,364 @@
+"""The ten comparison FL approaches of Table II, on one trainer skeleton.
+
+FedAvg, FedProx, FedMMD, FedFusion(Conv/Multi/Single), IDA(+INTRAC/+FedAvg),
+CGAU, FedAvgM, FedAdagrad, FedAdam, FedYogi.
+
+All share the classic FedAvg workflow (paper §III): per round, sample C
+clients at random across all factories, each runs ``local_steps`` mini-batch
+SGD steps (e local epochs), uploads its model; the server aggregates and
+applies a server-side optimizer. Strategies differ in (a) the client
+objective, (b) extra client-side modules, and/or (c) the server aggregation
+— isolated behind the :class:`Strategy` interface so the Table II comparison
+isolates the strategy, not the harness.
+
+Model access goes through :class:`ModelAPI` (init/apply/features/head) so
+feature-level strategies (FedMMD, FedFusion, CGAU) stay model-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+
+PyTree = Any
+Array = jax.Array
+
+
+class ModelAPI(NamedTuple):
+    """Minimal model protocol for the baseline strategies."""
+    init: Callable[[Array], PyTree]
+    apply: Callable[[PyTree, Array], Array]        # x -> logits
+    features: Callable[[PyTree, Array], Array]     # x -> penultimate features
+    head: Callable[[PyTree, Array], Array]         # features -> logits
+    feature_dim: int
+    num_classes: int
+
+
+def softmax_xent(logits: Array, labels: Array) -> Array:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[..., None], axis=-1))
+
+
+def accuracy(logits: Array, labels: Array) -> Array:
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+
+
+def _mmd2_linear(f1: Array, f2: Array) -> Array:
+    """Linear-kernel MMD² between two feature batches (FedMMD §II)."""
+    d = jnp.mean(f1, axis=0) - jnp.mean(f2, axis=0)
+    return jnp.sum(d * d)
+
+
+def _tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(lambda x, y: x.astype(jnp.float32) - y.astype(jnp.float32), a, b)
+
+
+def _tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(lambda x, y: (x + y).astype(x.dtype), a, b)
+
+
+def _tree_norm(a: PyTree) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(a)))
+
+
+def _tree_weighted_mean(stack: PyTree, w: Array) -> PyTree:
+    wn = w / jnp.maximum(jnp.sum(w), 1e-12)
+
+    def avg(leaf):
+        wb = wn.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.sum(leaf.astype(jnp.float32) * wb, axis=0)
+
+    return jax.tree.map(avg, stack)
+
+
+# ---------------------------------------------------------------------------
+# Strategy interface
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Strategy:
+    """A (client objective, extras, server aggregation) triple."""
+    name: str
+    # client_loss(params, extras, global_params, global_extras, batch) -> loss
+    client_loss: Callable[..., Array]
+    # aggregate(stacked client (params, extras), weights, client train acc,
+    #           server state, global (params, extras)) -> (params, extras, state)
+    aggregate: Callable[..., tuple]
+    init_extras: Callable[[Array, ModelAPI], PyTree] = lambda k, m: ()
+    init_server_state: Callable[[PyTree], PyTree] = lambda p: ()
+
+
+def _plain_loss(model: ModelAPI):
+    def loss(params, extras, gparams, gextras, batch):
+        x, y = batch
+        return softmax_xent(model.apply(params, x), y)
+    return loss
+
+
+def _fedavg_aggregate(stack_p, stack_e, w, accs, state, gp, ge):
+    return (_tree_weighted_mean(stack_p, w),
+            _tree_weighted_mean(stack_e, w) if jax.tree.leaves(stack_e) else ge,
+            state)
+
+
+def fedavg(model: ModelAPI) -> Strategy:
+    return Strategy("fedavg", _plain_loss(model), _fedavg_aggregate)
+
+
+def fedprox(model: ModelAPI, mu: float = 0.1) -> Strategy:
+    """FedProx (Li et al.): + (μ/2)||w − w_global||² proximal term."""
+    def loss(params, extras, gparams, gextras, batch):
+        x, y = batch
+        task = softmax_xent(model.apply(params, x), y)
+        prox = sum(jnp.sum(jnp.square(p.astype(jnp.float32) -
+                                      g.astype(jnp.float32)))
+                   for p, g in zip(jax.tree.leaves(params),
+                                   jax.tree.leaves(gparams)))
+        return task + 0.5 * mu * prox
+    return Strategy(f"fedprox(mu={mu})", loss, _fedavg_aggregate)
+
+
+def fedmmd(model: ModelAPI, gamma: float = 0.1) -> Strategy:
+    """FedMMD (Yao et al.): two-stream MMD between local features and the
+    frozen global model's features on the same batch."""
+    def loss(params, extras, gparams, gextras, batch):
+        x, y = batch
+        task = softmax_xent(model.apply(params, x), y)
+        f_local = model.features(params, x)
+        f_global = jax.lax.stop_gradient(model.features(gparams, x))
+        return task + gamma * _mmd2_linear(f_local, f_global)
+    return Strategy(f"fedmmd(gamma={gamma})", loss, _fedavg_aggregate)
+
+
+def fedfusion(model: ModelAPI, mode: str = "multi") -> Strategy:
+    """FedFusion (Yao et al.): fuse global & local features.
+
+    mode='single': scalar α;  'multi': per-channel vector;  'conv': 1×1 conv
+    (a (C,C) matrix on the feature vector). Fusion params are client extras,
+    trained locally and averaged like the model."""
+    fdim = model.feature_dim
+
+    def init_extras(key, m):
+        if mode == "single":
+            return {"alpha": jnp.asarray(0.5, jnp.float32)}
+        if mode == "multi":
+            return {"alpha": jnp.full((fdim,), 0.5, jnp.float32)}
+        if mode == "conv":
+            return {"w_local": jnp.eye(fdim, dtype=jnp.float32) * 0.5,
+                    "w_global": jnp.eye(fdim, dtype=jnp.float32) * 0.5}
+        raise ValueError(mode)
+
+    def fuse(extras, f_local, f_global):
+        if mode == "conv":
+            return f_local @ extras["w_local"].T + f_global @ extras["w_global"].T
+        a = extras["alpha"]
+        return a * f_local + (1.0 - a) * f_global
+
+    def loss(params, extras, gparams, gextras, batch):
+        x, y = batch
+        f_local = model.features(params, x)
+        f_global = jax.lax.stop_gradient(model.features(gparams, x))
+        logits = model.head(params, fuse(extras, f_local, f_global))
+        return softmax_xent(logits, y)
+
+    return Strategy(f"fedfusion+{mode}", loss, _fedavg_aggregate, init_extras)
+
+
+def cgau(model: ModelAPI, units: int = 256, layers: int = 1) -> Strategy:
+    """CGAU (Rieger et al.): conditional gated activation units on top of the
+    backbone: z = tanh(U f) ⊙ σ(V f); logits = W z (+ per-layer stacking).
+    'FineTuning+n×CGAU': the backbone fine-tunes jointly."""
+    fdim, ncls = model.feature_dim, model.num_classes
+
+    def init_extras(key, m):
+        ks = jax.random.split(key, 2 * layers + 1)
+        ps = {}
+        d_in = fdim
+        for i in range(layers):
+            s = 1.0 / np.sqrt(d_in)
+            ps[f"u{i}"] = jax.random.normal(ks[2 * i], (d_in, units)) * s
+            ps[f"v{i}"] = jax.random.normal(ks[2 * i + 1], (d_in, units)) * s
+            d_in = units
+        ps["w_out"] = jax.random.normal(ks[-1], (d_in, ncls)) / np.sqrt(d_in)
+        return ps
+
+    def loss(params, extras, gparams, gextras, batch):
+        x, y = batch
+        z = model.features(params, x)
+        for i in range(layers):
+            z = jnp.tanh(z @ extras[f"u{i}"]) * jax.nn.sigmoid(z @ extras[f"v{i}"])
+        return softmax_xent(z @ extras["w_out"], y)
+
+    return Strategy(f"cgau({layers}x{units})", loss, _fedavg_aggregate,
+                    init_extras)
+
+
+def ida(model: ModelAPI, variant: str = "plain") -> Strategy:
+    """IDA (Yeganeh et al.): inverse-distance aggregation weights
+    ‖w_k − w̄‖⁻¹; variants multiply by inverse train accuracy (INTRAC) or by
+    data size (+FedAvg)."""
+    def aggregate(stack_p, stack_e, w, accs, state, gp, ge):
+        mean_p = _tree_weighted_mean(stack_p, jnp.ones_like(w))
+        def dist_one(i):
+            diff = jax.tree.map(lambda s, m: s[i].astype(jnp.float32) - m,
+                                stack_p, mean_p)
+            return _tree_norm(diff)
+        dists = jax.vmap(dist_one)(jnp.arange(w.shape[0]))
+        inv = 1.0 / jnp.maximum(dists, 1e-8)
+        if variant == "intrac":
+            inv = inv * (1.0 / jnp.maximum(accs, 1e-3))
+        elif variant == "fedavg":
+            inv = inv * w
+        return (_tree_weighted_mean(stack_p, inv),
+                _tree_weighted_mean(stack_e, inv) if jax.tree.leaves(stack_e) else ge,
+                state)
+
+    suffix = {"plain": "", "intrac": "+intrac", "fedavg": "+fedavg"}[variant]
+    return Strategy(f"ida{suffix}", _plain_loss(model), aggregate)
+
+
+def _server_opt_strategy(model: ModelAPI, name: str,
+                         opt: optim.Optimizer) -> Strategy:
+    """FedOpt family (Reddi et al.): server optimizer on the pseudo-gradient
+    Δ = w̄_clients − w_global. FedAvgM is the momentum instance (Hsu et al.)."""
+    def init_server_state(params):
+        return opt.init(params)
+
+    def aggregate(stack_p, stack_e, w, accs, state, gp, ge):
+        mean_p = _tree_weighted_mean(stack_p, w)
+        # pseudo-gradient (negated delta, so optimizers descend)
+        pseudo_grad = jax.tree.map(
+            lambda g, m: g.astype(jnp.float32) - m, gp, mean_p)
+        updates, state = opt.update(pseudo_grad, state, gp)
+        new_p = optim.apply_updates(gp, updates)
+        new_e = _tree_weighted_mean(stack_e, w) if jax.tree.leaves(stack_e) else ge
+        return new_p, new_e, state
+
+    return Strategy(name, _plain_loss(model), aggregate,
+                    init_server_state=init_server_state)
+
+
+def fedavgm(model: ModelAPI, server_lr: float = 1.0, beta: float = 0.9) -> Strategy:
+    return _server_opt_strategy(model, f"fedavgm(b={beta})",
+                                optim.momentum(server_lr, beta))
+
+
+def fedadagrad(model: ModelAPI, server_lr: float = 0.05, tau: float = 1e-3) -> Strategy:
+    return _server_opt_strategy(model, "fedadagrad",
+                                optim.adagrad(server_lr, eps=tau))
+
+
+def fedadam(model: ModelAPI, server_lr: float = 0.02, tau: float = 1e-3) -> Strategy:
+    return _server_opt_strategy(model, "fedadam",
+                                optim.adam(server_lr, 0.9, 0.99, eps=tau))
+
+
+def fedyogi(model: ModelAPI, server_lr: float = 0.02, tau: float = 1e-3) -> Strategy:
+    return _server_opt_strategy(model, "fedyogi",
+                                optim.yogi(server_lr, 0.9, 0.99, eps=tau))
+
+
+def all_strategies(model: ModelAPI) -> dict[str, Strategy]:
+    """The Table II lineup."""
+    return {
+        "fedavg": fedavg(model),
+        "fedprox": fedprox(model),
+        "fedmmd": fedmmd(model),
+        "fedfusion_conv": fedfusion(model, "conv"),
+        "fedfusion_multi": fedfusion(model, "multi"),
+        "fedfusion_single": fedfusion(model, "single"),
+        "ida": ida(model, "plain"),
+        "ida_intrac": ida(model, "intrac"),
+        "ida_fedavg": ida(model, "fedavg"),
+        "cgau": cgau(model),
+        "fedavgm": fedavgm(model),
+        "fedadagrad": fedadagrad(model),
+        "fedadam": fedadam(model),
+        "fedyogi": fedyogi(model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Shared trainer skeleton
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BaselineConfig:
+    clients_per_round: int = 100      # M*L — matches FEDGS participation
+    local_steps: int = 10             # e epochs worth of mini-batches
+    lr: float = 0.01
+    rounds: int = 100
+    seed: int = 0
+
+
+def make_round_fn(model: ModelAPI, strategy: Strategy, cfg: BaselineConfig):
+    """One federated round, jitted: client updates (scan over local steps,
+    vmapped over clients) + server aggregation."""
+
+    def client_update(gparams, gextras, batches):
+        # batches: leaves (S, n, ...) — S local steps
+        def step(carry, batch):
+            params, extras = carry
+            def loss(pe):
+                return strategy.client_loss(pe[0], pe[1], gparams, gextras, batch)
+            (params, extras) = jax.tree.map(
+                lambda p, g: (p - cfg.lr * g).astype(p.dtype), (params, extras),
+                jax.grad(loss)((params, extras)))
+            return (params, extras), ()
+        (params, extras), _ = jax.lax.scan(step, (gparams, gextras), batches)
+        # client train accuracy on the last batch (for IDA+INTRAC)
+        x, y = jax.tree.map(lambda l: l[-1], batches)
+        acc = accuracy(model.apply(params, x), y)
+        return params, extras, acc
+
+    @jax.jit
+    def round_fn(gparams, gextras, server_state, batches, weights):
+        stack_p, stack_e, accs = jax.vmap(
+            client_update, in_axes=(None, None, 0))(gparams, gextras, batches)
+        new_p, new_e, server_state = strategy.aggregate(
+            stack_p, stack_e, weights, accs, server_state, gparams, gextras)
+        # cast back to the original dtypes
+        new_p = jax.tree.map(lambda n, o: n.astype(o.dtype), new_p, gparams)
+        return new_p, new_e, server_state
+
+    return round_fn
+
+
+def run_baseline(
+    model: ModelAPI,
+    strategy: Strategy,
+    sample_round_batches: Callable[[int], tuple[PyTree, np.ndarray]],
+    cfg: BaselineConfig,
+    *,
+    eval_fn: Callable[[PyTree], tuple[float, float]] | None = None,
+    eval_every: int = 5,
+    params: PyTree | None = None,
+) -> tuple[PyTree, list[dict]]:
+    """Run ``cfg.rounds`` federated rounds of ``strategy``.
+
+    ``sample_round_batches(r)`` returns (batches, weights): batches leaves
+    (C, S, n, ...) for the C=clients_per_round sampled clients and their
+    aggregation weights (data sizes)."""
+    key = jax.random.PRNGKey(cfg.seed)
+    if params is None:
+        params = model.init(key)
+    extras = strategy.init_extras(jax.random.fold_in(key, 1), model)
+    server_state = strategy.init_server_state(params)
+    round_fn = make_round_fn(model, strategy, cfg)
+    logs = []
+    for r in range(cfg.rounds):
+        batches, weights = sample_round_batches(r)
+        params, extras, server_state = round_fn(
+            params, extras, server_state, batches, jnp.asarray(weights, jnp.float32))
+        entry = {"round": r, "strategy": strategy.name}
+        if eval_fn is not None and (r + 1) % eval_every == 0:
+            tl, ta = eval_fn((params, extras))
+            entry |= {"test_loss": float(tl), "test_accuracy": float(ta)}
+        logs.append(entry)
+    return (params, extras), logs

@@ -1,0 +1,85 @@
+"""Class-distribution utilities for FEDGS (paper §III–§V).
+
+All distributions are represented as length-F vectors. Devices report only
+integer class-count vectors ``a^{m,k} = n^{m,k} * P^{m,k}`` — never raw data.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def norm(v: Array, axis: int = -1, eps: float = 1e-12) -> Array:
+    """Probability normalization ``norm(.)`` used in Eq. (2)."""
+    v = jnp.asarray(v, jnp.float32)
+    s = jnp.sum(v, axis=axis, keepdims=True)
+    return v / jnp.maximum(s, eps)
+
+
+def estimate_p_real(counts: Array) -> Array:
+    """Eq. (2): P_real = norm(sum_{m,k} N^{m,k} P^{m,k}).
+
+    Args:
+      counts: integer class counts, shape (..., F) — any leading device axes.
+        Since ``N^{m,k} * P^{m,k}`` is exactly the per-device class-count
+        vector, P_real is the normalized global count histogram.
+    """
+    c = jnp.asarray(counts, jnp.float32)
+    total = jnp.sum(c.reshape(-1, c.shape[-1]), axis=0)
+    return norm(total)
+
+
+def distribution_divergence(p: Array, p_real: Array) -> Array:
+    """Eq. (6): L2 divergence || P - P_real ||_2 (supports leading batch axes)."""
+    p = jnp.asarray(p, jnp.float32)
+    return jnp.linalg.norm(p - p_real, axis=-1)
+
+
+def supernode_distribution(counts: Array, mask: Array | None = None) -> Array:
+    """Mean class distribution P_t^m of a selected device set (Eq. 6 context).
+
+    Args:
+      counts: (K, F) per-device next-batch class counts.
+      mask: optional (K,) 0/1 selection vector; all devices if None.
+    Returns:
+      (F,) normalized distribution of pooled counts.
+    """
+    c = jnp.asarray(counts, jnp.float32)
+    if mask is not None:
+        c = c * jnp.asarray(mask, jnp.float32)[:, None]
+    return norm(jnp.sum(c, axis=0))
+
+
+def selection_objective(A: Array, x: Array, y: Array) -> Array:
+    """Eq. (10): || A x - y ||_2 with A (F, K), x (K,), y (F,)."""
+    r = A.astype(jnp.float32) @ x.astype(jnp.float32) - y.astype(jnp.float32)
+    return jnp.linalg.norm(r)
+
+
+def selection_divergence(A: Array, x: Array, b: Array, p_real: Array) -> Array:
+    """Eq. (7): divergence of the full super node (pre-sampled b + selected Ax)."""
+    pooled = A.astype(jnp.float32) @ x.astype(jnp.float32) + b.astype(jnp.float32)
+    return distribution_divergence(norm(pooled), p_real)
+
+
+def class_counts(labels: Array, num_classes: int) -> Array:
+    """Per-class count vector a = n * P of a label batch. Shape (F,), int32."""
+    return jnp.bincount(
+        jnp.asarray(labels, jnp.int32).reshape(-1), length=num_classes
+    ).astype(jnp.int32)
+
+
+def token_bucket_counts(tokens: Array, num_buckets: int) -> Array:
+    """LM-arch label statistics: hash token ids into F coarse buckets.
+
+    For language models the 'classes' of next-token prediction are vocab ids;
+    GBP-CS uses F coarse buckets (DESIGN.md §6) so the statistic stays tiny.
+    """
+    t = jnp.asarray(tokens, jnp.uint32).reshape(-1)
+    # Knuth multiplicative hash keeps buckets balanced for contiguous ids
+    # (uint32 arithmetic — the constant overflows int32).
+    bucket = (t * jnp.uint32(2654435761)) % jnp.uint32(num_buckets)
+    return jnp.bincount(bucket.astype(jnp.int32),
+                        length=num_buckets).astype(jnp.int32)

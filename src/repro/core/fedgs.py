@@ -1,0 +1,201 @@
+"""FEDGS: Federated Group Synchronization — paper Alg. 1.
+
+The simulator vectorizes the hierarchy: groups (factories) are a vmapped
+axis of size M; the L selected devices of a group are a second vmapped axis.
+One *internal iteration* (Alg. 1 lines 3–8: client selection → local
+training → internal synchronization) is a single jitted function; *external
+synchronization* (line 10) runs every T iterations.
+
+Workflow equivalence (paper §IV): FEDGS == FedAvg over M homogeneous super
+nodes, each running mini-batch SGD with batch nL for T local iterations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Iterator, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import gbp_cs, selection, sync
+
+PyTree = Any
+Array = jax.Array
+LossFn = Callable[[PyTree, Any], Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class FedGSConfig:
+    num_groups: int = 10          # M
+    devices_per_group: int = 35   # K^m
+    num_selected: int = 10        # L
+    num_presampled: int = 2       # L_rnd
+    iters_per_round: int = 50     # T
+    rounds: int = 500             # R
+    lr: float = 0.01              # η
+    batch_size: int = 32          # n
+    num_classes: int = 62         # F
+    init: str = gbp_cs.MPINV
+    gbp_max_iters: int = 64
+    selection: str = "gbp_cs"     # 'gbp_cs' | 'random'
+    seed: int = 0
+
+    @property
+    def l_sel(self) -> int:
+        return self.num_selected - self.num_presampled
+
+
+class IterationStats(NamedTuple):
+    loss: Array          # (M,) mean selected-device loss per group
+    divergence: Array    # (M,) || P_t^m − P_real ||
+    gbp_iterations: Array  # (M,)
+
+
+def _gather_selected(tree: PyTree, mask: Array, l: int) -> PyTree:
+    """Gather the L selected devices' leading-axis entries (mask has exactly
+    L ones) so local training only computes on selected devices."""
+    idx = jnp.argsort(-mask)[:l]
+    return jax.tree.map(lambda leaf: leaf[idx], tree)
+
+
+def make_fedgs_iteration(loss_fn: LossFn, cfg: FedGSConfig):
+    """Build the jitted internal-synchronization iteration (Alg. 1 lines 3–8).
+
+    Returns fn(group_params, key, batches, counts, p_real) ->
+    (group_params', IterationStats) where group_params leaves are (M, ...),
+    batches leaves are (M, K, n, ...), counts is (M, K, F).
+    """
+
+    def per_group(params_m: PyTree, key: Array, batch_m: PyTree,
+                  counts_m: Array, p_real: Array):
+        # -- Client Selection (line 4)
+        if cfg.selection == "gbp_cs":
+            sel = selection.select_clients_via_gbp_cs(
+                key, counts_m, p_real, cfg.num_selected, cfg.num_presampled,
+                init=cfg.init, max_iters=cfg.gbp_max_iters)
+        else:
+            sel = selection.select_clients_random(
+                key, counts_m, p_real, cfg.num_selected)
+        # -- Local Training (lines 5–7): one mini-batch SGD step per device
+        sel_batches = _gather_selected(batch_m, sel.mask, cfg.num_selected)
+        dev_step = lambda b: sync.local_step(params_m, b, loss_fn, cfg.lr)
+        new_params, losses = jax.vmap(dev_step)(sel_batches)
+        # -- Internal Synchronization (line 8, Eq. 4); uniform n (paper §V.A)
+        synced = sync.weighted_average(
+            new_params, jnp.ones((cfg.num_selected,), jnp.float32))
+        return synced, (jnp.mean(losses), sel.divergence, sel.iterations)
+
+    @jax.jit
+    def iteration(group_params: PyTree, key: Array, batches: PyTree,
+                  counts: Array, p_real: Array):
+        keys = jax.random.split(key, cfg.num_groups)
+        new_params, (loss, div, it) = jax.vmap(
+            per_group, in_axes=(0, 0, 0, 0, None))(
+                group_params, keys, batches, counts, p_real)
+        return new_params, IterationStats(loss, div, it)
+
+    return iteration
+
+
+@jax.jit
+def external_sync_and_broadcast(group_params: PyTree) -> PyTree:
+    """Alg. 1 line 10 (Eq. 5): ω_t = mean_m ω_t^m, then ω_t^m ← ω_t."""
+    global_params = sync.external_sync(group_params)
+    m = jax.tree.leaves(group_params)[0].shape[0]
+    broadcast = jax.tree.map(
+        lambda leaf: jnp.broadcast_to(leaf[None], (m,) + leaf.shape),
+        global_params)
+    return broadcast
+
+
+def replicate_for_groups(params: PyTree, m: int) -> PyTree:
+    return jax.tree.map(
+        lambda leaf: jnp.broadcast_to(leaf[None], (m,) + leaf.shape), params)
+
+
+def global_params(group_params: PyTree) -> PyTree:
+    return sync.external_sync(group_params)
+
+
+def make_group_train_step(loss_fn: LossFn, cfg: FedGSConfig):
+    """Train-only half of the iteration (used by the two-phase host loop):
+    selected batches (M, L, n, ...) -> internally-synced group params."""
+
+    def per_group(params_m: PyTree, batches_m: PyTree):
+        dev_step = lambda b: sync.local_step(params_m, b, loss_fn, cfg.lr)
+        new_params, losses = jax.vmap(dev_step)(batches_m)
+        synced = sync.weighted_average(
+            new_params, jnp.ones((cfg.num_selected,), jnp.float32))
+        return synced, jnp.mean(losses)
+
+    @jax.jit
+    def step(group_params: PyTree, batches: PyTree):
+        return jax.vmap(per_group)(group_params, batches)
+
+    return step
+
+
+@dataclasses.dataclass
+class RoundLog:
+    round: int
+    loss: float
+    divergence: float
+    test_accuracy: float | None = None
+    test_loss: float | None = None
+
+
+def run_fedgs(
+    params: PyTree,
+    loss_fn: LossFn,
+    streams,                     # FactoryStreams-like: next_counts / fetch_selected
+    p_real: Array,
+    cfg: FedGSConfig,
+    *,
+    eval_fn: Callable[[PyTree], tuple[float, float]] | None = None,
+    eval_every: int = 10,
+    log_fn: Callable[[RoundLog], None] | None = None,
+) -> tuple[PyTree, list[RoundLog]]:
+    """Alg. 1 end to end — two-phase host loop (DESIGN.md §10.1):
+
+    per iteration: (1) devices report next-batch class counts; (2) the BS
+    runs GBP-CS (jitted) to pick C_t^m; (3) ONLY the selected devices
+    generate/fetch data and take one local SGD step; (4) internal sync.
+    External sync every T iterations.
+    """
+    train_step = make_group_train_step(loss_fn, cfg)
+    gp = replicate_for_groups(params, cfg.num_groups)
+    key = jax.random.PRNGKey(cfg.seed)
+    p_real = jnp.asarray(p_real, jnp.float32)
+    logs: list[RoundLog] = []
+    for r in range(cfg.rounds):
+        losses, divs = [], []
+        for _ in range(cfg.iters_per_round):
+            key, sub = jax.random.split(key)
+            counts = jnp.asarray(streams.next_counts())
+            keys = jax.random.split(sub, cfg.num_groups)
+            if cfg.selection == "gbp_cs":
+                sel = selection.select_groups(
+                    keys, counts, p_real, cfg.num_selected,
+                    cfg.num_presampled, init=cfg.init,
+                    max_iters=cfg.gbp_max_iters)
+            else:
+                sel = jax.vmap(
+                    lambda k, c: selection.select_clients_random(
+                        k, c, p_real, cfg.num_selected))(keys, counts)
+            masks = np.asarray(sel.mask)
+            imgs, labs = streams.fetch_selected(masks, cfg.num_selected)
+            gp, loss = train_step(gp, (jnp.asarray(imgs), jnp.asarray(labs)))
+            losses.append(float(jnp.mean(loss)))
+            divs.append(float(jnp.mean(sel.divergence)))
+        gp = external_sync_and_broadcast(gp)
+        log = RoundLog(round=r, loss=float(np.mean(losses)),
+                       divergence=float(np.mean(divs)))
+        if eval_fn is not None and (r + 1) % eval_every == 0:
+            tl, ta = eval_fn(global_params(gp))
+            log.test_loss, log.test_accuracy = float(tl), float(ta)
+        logs.append(log)
+        if log_fn is not None:
+            log_fn(log)
+    return global_params(gp), logs

@@ -1,0 +1,90 @@
+"""Select-Clients-Via-GBP-CS (paper Alg. 2 line 1 + Alg. 1 line 4).
+
+Per group m: pre-sample L_rnd devices uniformly (keeps every device's
+selection probability nonzero — paper §V.A), build b from the pre-sampled
+devices' next-batch counts and A from the remaining candidates, then run
+GBP-CS for the remaining L_sel slots. Fully jittable and vmappable over
+groups.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import gbp_cs
+from .distributions import norm
+
+Array = jax.Array
+
+
+class SelectionResult(NamedTuple):
+    mask: Array          # (K,) 0/1 over ALL devices of the group (= C_t^m)
+    divergence: Array    # || P_t^m - P_real ||_2 of the resulting super node
+    distance: Array      # GBP-CS objective || A x - y ||_2
+    iterations: Array    # GBP-CS permutation steps taken
+
+
+def select_clients_via_gbp_cs(
+    key: Array,
+    counts: Array,            # (K, F) next-batch class counts a_t^{m,k}
+    p_real: Array,            # (F,) global class distribution
+    l: int,                   # L devices to select in total
+    l_rnd: int,               # randomly pre-sampled devices
+    *,
+    init: str = gbp_cs.MPINV,
+    max_iters: int = 64,
+    step_fn=None,
+) -> SelectionResult:
+    """One group's client selection. K and F are static; jit-friendly."""
+    k_total, f = counts.shape
+    l_sel = l - l_rnd
+    counts = jnp.asarray(counts, jnp.float32)
+
+    key_pre, key_opt = jax.random.split(key)
+    perm = jax.random.permutation(key_pre, k_total)
+    pre_idx = perm[:l_rnd]                      # C^m_rnd
+    cand_idx = perm[l_rnd:]                     # C^m \ C^m_rnd
+    pre_mask = jnp.zeros((k_total,), jnp.float32).at[pre_idx].set(1.0)
+
+    b = jnp.sum(counts[pre_idx], axis=0)        # (F,) b_t^m
+    A = counts[cand_idx].T                      # (F, K - L_rnd)  A_t^m
+    n_total = jnp.sum(counts) / k_total * l     # nL with per-device batch n
+    y = n_total * jnp.asarray(p_real, jnp.float32) - b   # Eq. (11)
+
+    res = gbp_cs.gbp_cs_minimize(
+        A, y, l_sel, key=key_opt, init=init, max_iters=max_iters,
+        step_fn=step_fn,
+    )
+    sel_mask = jnp.zeros((k_total,), jnp.float32).at[cand_idx].set(res.x)
+    mask = pre_mask + sel_mask                  # C_t^m = C_rnd ∪ C_sel (Eq. 18)
+
+    pooled = jnp.sum(counts * mask[:, None], axis=0)
+    divergence = jnp.linalg.norm(norm(pooled) - p_real)
+    return SelectionResult(mask=mask, divergence=divergence,
+                           distance=res.distance, iterations=res.iterations)
+
+
+def select_clients_random(key: Array, counts: Array, p_real: Array,
+                          l: int) -> SelectionResult:
+    """FedAvg's random selection in the same interface (for baselines)."""
+    k_total, _ = counts.shape
+    perm = jax.random.permutation(key, k_total)
+    mask = jnp.zeros((k_total,), jnp.float32).at[perm[:l]].set(1.0)
+    counts = jnp.asarray(counts, jnp.float32)
+    pooled = jnp.sum(counts * mask[:, None], axis=0)
+    divergence = jnp.linalg.norm(norm(pooled) - jnp.asarray(p_real, jnp.float32))
+    return SelectionResult(mask=mask, divergence=divergence,
+                           distance=divergence, iterations=jnp.int32(0))
+
+
+@functools.partial(jax.jit, static_argnames=("l", "l_rnd", "init", "max_iters"))
+def select_groups(keys: Array, counts: Array, p_real: Array, l: int,
+                  l_rnd: int, *, init: str = gbp_cs.MPINV,
+                  max_iters: int = 64) -> SelectionResult:
+    """vmap over M groups: keys (M,2), counts (M, K, F)."""
+    fn = lambda k, c: select_clients_via_gbp_cs(
+        k, c, p_real, l, l_rnd, init=init, max_iters=max_iters)
+    return jax.vmap(fn)(keys, counts)

@@ -1,0 +1,110 @@
+"""Compound-step synchronization protocol (paper §IV, Eqs. 3–5).
+
+Three primitives:
+
+* :func:`local_step` — Eq. (3): one mini-batch SGD step on a device.
+* :func:`internal_sync` — Eq. (4): BS-side weighted average of the selected
+  devices' models (one-step synchronization, SSGD-equivalent).
+* :func:`external_sync` — Eq. (5): top-server uniform average of BS models
+  (multi-step synchronization, every T iterations).
+
+Each has a *simulator* form (explicit client axis) and a *distributed* form
+(``_pmean``-style collectives for use inside ``shard_map`` on the production
+mesh, DESIGN.md §4: internal = psum over 'data', external = psum over 'pod').
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Array = jax.Array
+
+
+def local_step(params: PyTree, batch: Any, loss_fn: Callable[..., Array],
+               lr: float) -> tuple[PyTree, Array]:
+    """Eq. (3): w ← w − (η / n) Σ ∇L(w, D_t). ``loss_fn(params, batch)`` must
+    return the *mean* loss over the mini-batch (so the η/n scaling of the
+    summed gradient is already applied)."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+    new = jax.tree.map(lambda p, g: (p - lr * g).astype(p.dtype), params, grads)
+    return new, loss
+
+
+def weighted_average(trees: PyTree, weights: Array) -> PyTree:
+    """Weighted average over a leading client axis.
+
+    Args:
+      trees: pytree whose leaves have shape (K, ...) — stacked client models.
+      weights: (K,) nonnegative weights (zero for unselected devices).
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    denom = jnp.maximum(jnp.sum(w), 1e-12)
+    wn = w / denom
+
+    def avg(leaf):
+        wb = wn.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.sum(leaf.astype(jnp.float32) * wb, axis=0).astype(leaf.dtype)
+
+    return jax.tree.map(avg, trees)
+
+
+def internal_sync(client_params: PyTree, mask: Array,
+                  batch_sizes: Array | None = None) -> PyTree:
+    """Eq. (4): ω_t^m = Σ_{k∈C_t^m} (n^{m,k}/n^m) ω_t^{m,k}.
+
+    Args:
+      client_params: leaves (K, ...) — all K devices of the group (selected
+        or not; unselected are masked out).
+      mask: (K,) 0/1 selection C_t^m.
+      batch_sizes: (K,) mini-batch sizes n^{m,k}; uniform if None.
+    """
+    w = jnp.asarray(mask, jnp.float32)
+    if batch_sizes is not None:
+        w = w * jnp.asarray(batch_sizes, jnp.float32)
+    return weighted_average(client_params, w)
+
+
+def external_sync(group_params: PyTree) -> PyTree:
+    """Eq. (5): ω_t = (1/M) Σ_m ω_t^m over a leading group axis (M, ...)."""
+    return jax.tree.map(
+        lambda leaf: jnp.mean(leaf.astype(jnp.float32), axis=0).astype(leaf.dtype),
+        group_params)
+
+
+# ---------------------------------------------------------------------------
+# Distributed (collective) forms — used inside shard_map on the mesh.
+# ---------------------------------------------------------------------------
+
+def internal_sync_collective(params: PyTree, weight: Array,
+                             axis_name: str = "data") -> PyTree:
+    """Eq. (4) as a weighted psum over the intra-pod 'data' axis.
+
+    ``weight`` is this shard's n^{m,k} (0 if the local device was not
+    selected this iteration)."""
+    w = jnp.asarray(weight, jnp.float32)
+    denom = jax.lax.psum(w, axis_name)
+
+    def avg(leaf):
+        s = jax.lax.psum(leaf.astype(jnp.float32) * w, axis_name)
+        return (s / jnp.maximum(denom, 1e-12)).astype(leaf.dtype)
+
+    return jax.tree.map(avg, params)
+
+
+def external_sync_collective(params: PyTree, axis_name: str = "pod") -> PyTree:
+    """Eq. (5) as a pmean over the inter-pod axis."""
+    return jax.tree.map(
+        lambda leaf: jax.lax.pmean(leaf.astype(jnp.float32), axis_name)
+        .astype(leaf.dtype),
+        params)
+
+
+def grad_internal_sync_collective(grads: PyTree, weight: Array,
+                                  axis_name: str = "data") -> PyTree:
+    """Gradient-space form of Eq. (4) (equivalent for one SGD step from a
+    common ω_{t−1}^m: averaging one-step models == averaging gradients).
+    Used by the production train_step so the optimizer update happens once."""
+    return internal_sync_collective(grads, weight, axis_name)

@@ -1,0 +1,80 @@
+"""Analytic results of paper §VI: convergence bounds and time-efficiency.
+
+Pure functions over floats — used by tests and ``benchmarks/bench_time_model``
+(the Prop. 4 reproduction).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+def h(T: float, eta: float, beta: float) -> float:
+    """h(T) = (1/β)((ηβ+1)^T − 1) − ηT  (Prop. 3). h(1)=0, grows with T."""
+    return ((eta * beta + 1.0) ** T - 1.0) / beta - eta * T
+
+
+def convergence_upper_bound(T: int, R: int, *, eta: float, beta: float,
+                            rho: float, delta: float, varphi: float,
+                            epsilon: float) -> float:
+    """Prop. 3: L(ω_TR) − L(ω*) ≤ 1 / (TR(ηφ − ρδh(T)/(Tε²)))."""
+    denom = T * R * (eta * varphi - rho * delta * h(T, eta, beta) / (T * epsilon ** 2))
+    if denom <= 0:
+        return math.inf
+    return 1.0 / denom
+
+
+def optimality_gap_bound(T: int, R: int, *, eta: float, beta: float,
+                         rho: float, delta: float, varphi: float) -> float:
+    """Prop. 3 (relaxed form, requires η ≤ 1/β):
+    G ≤ 1/(ηφTR) + ρδh(T) + sqrt(ρδh(T)/(ηφT))."""
+    assert eta <= 1.0 / beta + 1e-12, "bound requires eta <= 1/beta"
+    hT = h(T, eta, beta)
+    return (1.0 / (eta * varphi * T * R) + rho * delta * hT
+            + math.sqrt(rho * delta * hT / (eta * varphi * T)))
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkModel:
+    """§VI.B communication model (Assumption 2 symmetric variant)."""
+    model_size_bytes: float = 26.4e6   # S — the paper CNN ≈ 6.6M fp32 params
+    b_int: float = 1e9                 # B^int: device<->BS (5G edge), bit/s
+    b_ext: float = 50e6                # B^ext: BS<->cloud (WAN), bit/s
+    snr: float = 10.0                  # γ (linear); β_link = log2(1+γ)
+    t_comp: float = 0.05               # per-local-update compute delay, s
+    t_select: float = 0.015            # GBP-CS latency (paper: 15 ms)
+
+    @property
+    def beta_link(self) -> float:
+        return math.log2(1.0 + self.snr)
+
+
+def t_fedgs_round(T: int, M: int, L: int, net: NetworkModel) -> float:
+    """Eq. (24): T_FEDGS = 2SM/(βB_ext) + T(T_select + 2SL/(βB_int) + T_comp)."""
+    s_bits = 8.0 * net.model_size_bytes
+    ext = 2.0 * s_bits * M / (net.beta_link * net.b_ext)
+    per_iter = (net.t_select + 2.0 * s_bits * L / (net.beta_link * net.b_int)
+                + net.t_comp)
+    return ext + T * per_iter
+
+
+def t_fedavg_round(T: int, M: int, L: int, net: NetworkModel) -> float:
+    """Eq. (25): T_FedAvg = 2SML/(βB_ext) + T·T_comp."""
+    s_bits = 8.0 * net.model_size_bytes
+    return 2.0 * s_bits * M * L / (net.beta_link * net.b_ext) + T * net.t_comp
+
+
+def efficiency_condition(T: int, M: int, L: int, net: NetworkModel) -> bool:
+    """Prop. 4 (with T_select ≈ 0): FEDGS faster iff TL/(M(L−1)) < B_int/B_ext."""
+    return (T * L) / (M * (L - 1)) < net.b_int / net.b_ext
+
+
+def efficiency_condition_exact(T: int, M: int, L: int,
+                               net: NetworkModel) -> bool:
+    """Exact inequality before the T_select≈0 relaxation (Proof 4):
+    (B_ext/B_int)·S·L + T_select·β·B_ext/2 < S·M·(L−1)/T  (S in bits)."""
+    s_bits = 8.0 * net.model_size_bytes
+    lhs = (net.b_ext / net.b_int) * s_bits * L \
+        + net.t_select * net.beta_link * net.b_ext / 2.0
+    rhs = s_bits * M * (L - 1) / T
+    return lhs < rhs

@@ -1,0 +1,102 @@
+"""FIFO streaming device data (paper §I: rapidly changing streaming data).
+
+Every device holds only its *next* mini-batch (labels pre-drawn so the
+class-count vector a_t^{m,k} is reportable to the BS before selection);
+images are generated lazily ONLY for the devices that are actually selected
+— mirroring the paper's workflow where unselected devices neither train nor
+upload. After each iteration all devices advance (sensors keep sampling;
+old data is overwritten, one-shot semantics §IV).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from . import femnist
+from .partition import Partition
+
+
+class FactoryStreams:
+    """Vectorized streams for all M×K devices."""
+
+    def __init__(self, part: Partition, batch_size: int = 32, seed: int = 0):
+        self.part = part
+        self.n = batch_size
+        self.m, self.k, self.f = part.class_probs.shape
+        self._rng = np.random.default_rng(seed + 7)
+        self._t = 0
+        self._next_labels = None
+        self._draw_next()
+
+    def _draw_next(self) -> None:
+        """Draw next-batch labels for every device: (M, K, n)."""
+        probs = self.part.class_probs                     # (M,K,F)
+        u = self._rng.random((self.m, self.k, self.n, 1))
+        cdf = np.cumsum(probs, axis=-1)[:, :, None, :]    # (M,K,1,F)
+        self._next_labels = (u > cdf).sum(axis=-1).astype(np.int32)
+        self._t += 1
+
+    def next_counts(self) -> np.ndarray:
+        """a_t^{m,k} for all devices: (M, K, F) int32."""
+        onehot = (self._next_labels[..., None]
+                  == np.arange(self.f)[None, None, None, :])
+        return onehot.sum(axis=2).astype(np.int32)
+
+    def fetch_selected(self, masks: np.ndarray, l: int
+                       ) -> tuple[np.ndarray, np.ndarray]:
+        """Generate images for the selected devices only.
+
+        Args:
+          masks: (M, K) 0/1 selection; exactly ``l`` ones per group.
+        Returns:
+          images (M, L, n, 28, 28), labels (M, L, n) — device order matches
+          ``argsort(-mask)[:L]`` (the gather order used by the trainer).
+        """
+        imgs = np.zeros((self.m, l, self.n, femnist.IMAGE_SIZE,
+                         femnist.IMAGE_SIZE), np.float32)
+        labs = np.zeros((self.m, l, self.n), np.int32)
+        for mi in range(self.m):
+            sel = np.argsort(-masks[mi], kind="stable")[:l]
+            for j, ki in enumerate(sel):
+                labels = self._next_labels[mi, ki]
+                wid = int(self.part.writer_ids[mi, ki])
+                sample_ids = (self._t * 1_000_000
+                              + (mi * self.k + ki) * self.n
+                              + np.arange(self.n))
+                imgs[mi, j] = femnist.generate_images(
+                    labels, np.full(self.n, wid), sample_ids)
+                labs[mi, j] = labels
+        self._draw_next()  # streaming: every device's buffer rolls over
+        return imgs, labs
+
+    def fetch_device_batches(self, mi: int, ki: int, steps: int
+                             ) -> tuple[np.ndarray, np.ndarray]:
+        """S consecutive mini-batches of one device (baseline local epochs)."""
+        probs = self.part.class_probs[mi, ki]
+        rng = np.random.default_rng((self._t * 9973 + mi * 131 + ki) % (2**31))
+        labels = rng.choice(self.f, size=(steps, self.n), p=probs)
+        wid = int(self.part.writer_ids[mi, ki])
+        sample_ids = (self._t * 1_000_000 + rng.integers(0, 2**20)
+                      + np.arange(steps * self.n))
+        imgs = femnist.generate_images(
+            labels.reshape(-1), np.full(steps * self.n, wid), sample_ids)
+        return (imgs.reshape(steps, self.n, femnist.IMAGE_SIZE,
+                             femnist.IMAGE_SIZE), labels.astype(np.int32))
+
+    def sample_baseline_round(self, clients: int, steps: int, seed: int
+                              ) -> tuple[tuple[np.ndarray, np.ndarray],
+                                         np.ndarray]:
+        """FedAvg-style round data: ``clients`` devices sampled uniformly
+        across all factories, each with ``steps`` local batches.
+
+        Returns ((images (C,S,n,28,28), labels (C,S,n)), weights (C,))."""
+        rng = np.random.default_rng(seed)
+        flat = rng.choice(self.m * self.k, size=clients, replace=False)
+        imgs = np.zeros((clients, steps, self.n, femnist.IMAGE_SIZE,
+                         femnist.IMAGE_SIZE), np.float32)
+        labs = np.zeros((clients, steps, self.n), np.int32)
+        for c, idx in enumerate(flat):
+            mi, ki = divmod(int(idx), self.k)
+            imgs[c], labs[c] = self.fetch_device_batches(mi, ki, steps)
+        self._t += 1
+        weights = np.full(clients, float(steps * self.n), np.float32)
+        return (imgs, labs), weights

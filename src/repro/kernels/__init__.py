@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+- gbp_cs:          the client-selection permutation step (§V hot loop)
+- flash_attention: blocked causal/windowed attention (serving + LM training)
+- ssd_scan:        Mamba2 chunked SSD scan (assigned SSM/hybrid archs)
+- agg_weighted:    BS-side weighted model aggregation (Eqs. 4/5)
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper; auto-interpret on CPU), ref.py (pure-jnp oracle).
+"""

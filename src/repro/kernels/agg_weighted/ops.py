@@ -1,0 +1,49 @@
+"""Jit'd wrapper: pytree-level weighted aggregation via the Pallas kernel.
+
+Drop-in for core.sync.weighted_average — flattens the stacked client pytree
+into one (K, P) buffer, runs the blocked kernel, unflattens.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..common import pad_to, use_interpret
+from . import kernel
+
+PyTree = Any
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
+def agg_flat(stacked: jax.Array, weights: jax.Array, *, block_p: int = 512,
+             interpret: bool | None = None) -> jax.Array:
+    interp = use_interpret(interpret)
+    k, p = stacked.shape
+    pp = pad_to(p, block_p)
+    buf = jnp.pad(stacked, ((0, 0), (0, pp - p)))
+    out = kernel.agg_weighted_kernel(buf, weights.astype(jnp.float32),
+                                     block_p=block_p, interpret=interp)
+    return out[:p]
+
+
+def weighted_average_tree(trees: PyTree, weights: jax.Array, *,
+                          block_p: int = 512,
+                          interpret: bool | None = None) -> PyTree:
+    """Same contract as core.sync.weighted_average (leaves (K, ...))."""
+    w = weights.astype(jnp.float32)
+    wn = w / jnp.maximum(jnp.sum(w), 1e-12)
+    leaves, treedef = jax.tree.flatten(trees)
+    k = leaves[0].shape[0]
+    sizes = [l.size // k for l in leaves]
+    flat = jnp.concatenate(
+        [l.reshape(k, -1).astype(jnp.float32) for l in leaves], axis=1)
+    out = agg_flat(flat, wn, block_p=block_p, interpret=interpret)
+    parts, off = [], 0
+    for leaf, sz in zip(leaves, sizes):
+        parts.append(out[off:off + sz].reshape(leaf.shape[1:])
+                     .astype(leaf.dtype))
+        off += sz
+    return jax.tree.unflatten(treedef, parts)

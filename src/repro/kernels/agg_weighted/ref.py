@@ -1,0 +1,7 @@
+"""Oracle for weighted aggregation."""
+import jax.numpy as jnp
+
+
+def agg_weighted_ref(stacked, weights):
+    return jnp.einsum("k,kp->p", weights.astype(jnp.float32),
+                      stacked.astype(jnp.float32))

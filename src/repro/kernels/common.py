@@ -1,0 +1,16 @@
+"""Shared kernel utilities."""
+from __future__ import annotations
+
+import jax
+
+
+def use_interpret(override: bool | None = None) -> bool:
+    """Pallas interpret mode: forced on for CPU (this container's runtime);
+    compiled mode on real TPU."""
+    if override is not None:
+        return override
+    return jax.default_backend() == "cpu"
+
+
+def pad_to(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult

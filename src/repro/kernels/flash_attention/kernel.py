@@ -1,0 +1,111 @@
+"""Pallas TPU flash attention (forward) with causal + sliding-window masks
+and GQA head grouping.
+
+Grid = (batch, q_heads, num_q_blocks, num_kv_blocks); the last grid axis is
+sequential on TPU, so the online-softmax running state (m, l, acc) lives in
+VMEM scratch carried across kv blocks. Fully-masked kv blocks (above the
+causal diagonal, or outside the sliding window) are *skipped* via
+``pl.when`` — unlike the XLA fallback, no wasted MXU work. BlockSpecs tile
+q/k/v into (block_q × d) / (block_k × d) VMEM tiles; d and blocks are
+128-aligned for the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  block_q: int, block_k: int, n_kv_blocks: int,
+                  causal: bool, window: int | None, sm_scale: float):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+    # block-level reachability: skip fully-masked kv blocks entirely
+    needed = True
+    if causal:
+        needed = k_start <= q_start + block_q - 1
+    if window is not None:
+        # newest q in the block must reach the oldest k in the block
+        needed = jnp.logical_and(
+            needed, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)                # (bk, dv)
+        s = (q @ k.T) * sm_scale                           # (bq, bk)
+        qpos = q_start + jax.lax.iota(jnp.int32, block_q)[:, None]
+        kpos = k_start + jax.lax.iota(jnp.int32, block_k)[None, :]
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + p @ v
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int | None = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True) -> jax.Array:
+    """q (B, H, Sq, D); k/v (B, KV, Sk, D/Dv) — GQA via head index mapping."""
+    b, h, sq, d = q.shape
+    kvh, sk, dv = k.shape[1], k.shape[2], v.shape[-1]
+    assert sq % block_q == 0 and sk % block_k == 0
+    group = h // kvh
+    nq, nk = sq // block_q, sk // block_k
+    sm_scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, n_kv_blocks=nk,
+        causal=causal, window=window, sm_scale=sm_scale)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h_, iq, ik: (b_, h_ // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, dv),
+                         lambda b_, h_, iq, ik: (b_, h_ // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dv),
+                               lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,27 @@
+"""Jit'd wrapper: model-layout (B, S, H, D) flash attention entry point."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import use_interpret
+from . import kernel
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """Model layout q (B,S,H,D), k/v (B,S,KV,D/Dv) -> (B,S,H,Dv)."""
+    interp = use_interpret(interpret)
+    qt = jnp.moveaxis(q, 2, 1)          # (B,H,S,D)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    out = kernel.flash_attention_kernel(
+        qt, kt, vt, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interp)
+    return jnp.moveaxis(out, 1, 2)

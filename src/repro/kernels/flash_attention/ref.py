@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for flash attention (layout (B, H, S, D))."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int | None = None
+                  ) -> jax.Array:
+    """q (B,H,Sq,D), k/v (B,KV,Sk,D/Dv) -> (B,H,Sq,Dv)."""
+    b, h, sq, d = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, sq, d)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(d)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, sq, v.shape[-1]).astype(q.dtype)

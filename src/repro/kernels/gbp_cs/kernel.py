@@ -1,0 +1,127 @@
+"""Pallas TPU kernels for the GBP-CS permutation step (paper Alg. 2 lines 5-8).
+
+TPU adaptation (DESIGN.md §5): one permutation step is two fused stages —
+
+  residual_kernel:  r = A x − y and d² = ‖r‖²   (grid over K blocks,
+                    accumulating partial mat-vecs in a VMEM scratch)
+  select_kernel:    g = Aᵀ r per block; running masked argmin over x=0 and
+                    argmax over x=1 carried across the sequential grid in
+                    SMEM scratch → the swap pair (i_{0→1}, i_{1→0}).
+
+F (number of classes, ≤ a few hundred) is padded to the 128-lane register
+width; K (candidate devices) is tiled BK at a time. The data-dependent outer
+loop (repeat until d stops decreasing) stays a lax.while_loop on the scalar
+core — there is no TPU analogue of dynamic device-side loop spawning, nor is
+one needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -3.4e38
+POS = 3.4e38
+
+
+def _residual_kernel(x_ref, a_ref, y_ref, r_ref, d_ref, *, nk: int):
+    """Grid (nk,): accumulate r += A_blk @ x_blk; finish with r -= y, d=‖r‖²."""
+    ik = pl.program_id(0)
+
+    @pl.when(ik == 0)
+    def _init():
+        r_ref[...] = jnp.zeros_like(r_ref)
+
+    a = a_ref[...]                       # (F, BK)
+    x = x_ref[...]                       # (1, BK)
+    r_ref[...] += jnp.sum(a * x, axis=1, keepdims=True).T  # (1, F)
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        r = r_ref[...] - y_ref[...]
+        r_ref[...] = r
+        d_ref[0, 0] = jnp.sum(r * r)
+
+
+def _select_kernel(r_ref, a_ref, x_ref, best_ref, *, nk: int, bk: int,
+                   k_valid: int):
+    """Grid (nk,): g_blk = A_blkᵀ r; carry running (min g | x=0, idx) and
+    (max g | x=1, idx) in the output ref across the sequential grid."""
+    ik = pl.program_id(0)
+
+    @pl.when(ik == 0)
+    def _init():
+        best_ref[0, 0] = POS   # min value over x=0
+        best_ref[0, 1] = -1.0  # its index
+        best_ref[0, 2] = NEG   # max value over x=1
+        best_ref[0, 3] = -1.0  # its index
+
+    a = a_ref[...]                       # (F, BK)
+    r = r_ref[...]                       # (1, F)
+    g = jnp.sum(a * r.T, axis=0)         # (BK,)  = A_blkᵀ r
+    x = x_ref[...][0]                    # (BK,)
+    idx = ik * bk + jax.lax.iota(jnp.int32, bk)
+    valid = idx < k_valid
+    g0 = jnp.where((x < 0.5) & valid, g, POS)
+    g1 = jnp.where((x > 0.5) & valid, g, NEG)
+    i0 = jnp.argmin(g0)
+    i1 = jnp.argmax(g1)
+
+    @pl.when(jnp.min(g0) < best_ref[0, 0])
+    def _upd0():
+        best_ref[0, 0] = jnp.min(g0)
+        best_ref[0, 1] = (ik * bk + i0).astype(jnp.float32)
+
+    @pl.when(jnp.max(g1) > best_ref[0, 2])
+    def _upd1():
+        best_ref[0, 2] = jnp.max(g1)
+        best_ref[0, 3] = (ik * bk + i1).astype(jnp.float32)
+
+
+def residual(A: jax.Array, x: jax.Array, y: jax.Array, *, bk: int = 128,
+             interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """r = A x − y (padded shapes), d² = ‖r‖². A (F, Kp), x (Kp,), y (F,)."""
+    f, kp = A.shape
+    nk = kp // bk
+    r, d2 = pl.pallas_call(
+        functools.partial(_residual_kernel, nk=nk),
+        grid=(nk,),
+        in_specs=[
+            pl.BlockSpec((1, bk), lambda i: (0, i)),
+            pl.BlockSpec((f, bk), lambda i: (0, i)),
+            pl.BlockSpec((1, f), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, f), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, f), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x[None], A, y[None])
+    return r[0], d2[0, 0]
+
+
+def select_swap(A: jax.Array, x: jax.Array, r: jax.Array, *, k_valid: int,
+                bk: int = 128, interpret: bool = True
+                ) -> tuple[jax.Array, jax.Array]:
+    """Swap pair (i_{0→1}, i_{1→0}) from the gradient g = Aᵀ r̂ (Eq. 15-16)."""
+    f, kp = A.shape
+    nk = kp // bk
+    best = pl.pallas_call(
+        functools.partial(_select_kernel, nk=nk, bk=bk, k_valid=k_valid),
+        grid=(nk,),
+        in_specs=[
+            pl.BlockSpec((1, f), lambda i: (0, 0)),
+            pl.BlockSpec((f, bk), lambda i: (0, i)),
+            pl.BlockSpec((1, bk), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, 4), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 4), jnp.float32),
+        interpret=interpret,
+    )(r[None], A, x[None])
+    return best[0, 1].astype(jnp.int32), best[0, 3].astype(jnp.int32)

@@ -1,0 +1,51 @@
+"""Jit'd wrapper: drop-in ``step_fn`` for core.gbp_cs.gbp_cs_minimize."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import pad_to, use_interpret
+from . import kernel
+
+LANE = 128
+
+
+def _pad_inputs(A: jax.Array, x: jax.Array, y: jax.Array, bk: int):
+    f, k = A.shape
+    fp, kp = pad_to(f, 8), pad_to(k, bk)
+    Ap = jnp.pad(A, ((0, fp - f), (0, kp - k)))
+    xp = jnp.pad(x, (0, kp - k))
+    yp = jnp.pad(y, (0, fp - f))
+    return Ap, xp, yp, k
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def fused_step(A: jax.Array, x: jax.Array, y: jax.Array, *, bk: int = LANE,
+               interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
+    """One GBP-CS permutation step via the Pallas kernels.
+
+    Returns (x_next, d_next) — same contract as core.gbp_cs._default_step,
+    so ``gbp_cs_minimize(..., step_fn=fused_step)`` swaps it in.
+    """
+    interp = use_interpret(interpret)
+    Ap, xp, yp, k = _pad_inputs(A.astype(jnp.float32), x.astype(jnp.float32),
+                                y.astype(jnp.float32), bk)
+    r, _ = kernel.residual(Ap, xp, yp, bk=bk, interpret=interp)
+    i0, i1 = kernel.select_swap(Ap, xp, r, k_valid=k, bk=bk, interpret=interp)
+    x_next = xp.at[i0].set(1.0).at[i1].set(0.0)
+    _, d2 = kernel.residual(Ap, x_next, yp, bk=bk, interpret=interp)
+    return x_next[:k], jnp.sqrt(jnp.maximum(d2, 0.0))
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def residual_distance(A: jax.Array, x: jax.Array, y: jax.Array, *,
+                      bk: int = LANE, interpret: bool | None = None
+                      ) -> jax.Array:
+    """d = ‖A x − y‖₂ via the residual kernel (used by benchmarks)."""
+    interp = use_interpret(interpret)
+    Ap, xp, yp, _ = _pad_inputs(A.astype(jnp.float32), x.astype(jnp.float32),
+                                y.astype(jnp.float32), bk)
+    _, d2 = kernel.residual(Ap, xp, yp, bk=bk, interpret=interp)
+    return jnp.sqrt(jnp.maximum(d2, 0.0))

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: Mamba2 chunked SSD scan (arXiv:2405.21060, §SSD).
+
+Grid = (batch, heads, num_chunks); the chunk axis is sequential on TPU, so
+the recurrent inter-chunk state (N, P) is carried in VMEM scratch — the
+kernel fuses the intra-chunk quadratic term (MXU matmuls on Q×Q tiles,
+Q=128-aligned) with the state update, avoiding the HBM round-trip of the
+states tensor that the XLA fallback (lax.scan over chunks) incurs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr, *,
+                chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)        # (Q,)
+    A = a_ref[0]                                    # scalar
+    B = b_ref[0].astype(jnp.float32)                # (Q, N)
+    C = c_ref[0].astype(jnp.float32)                # (Q, N)
+
+    a = dt * A                                      # (Q,) log-decay
+    cum = jnp.cumsum(a)                             # (Q,)
+    seg = cum[:, None] - cum[None, :]               # (Q, Q)
+    tri = jax.lax.iota(jnp.int32, chunk)[:, None] >= \
+        jax.lax.iota(jnp.int32, chunk)[None, :]
+    L = jnp.where(tri, jnp.exp(seg), 0.0)
+    G = C @ B.T                                     # (Q, Q)
+    xd = x * dt[:, None]                            # (Q, P)
+    y = (G * L) @ xd                                # intra-chunk
+
+    st = state_scr[...]                             # (N, P)
+    y += (C @ st) * jnp.exp(cum)[:, None]           # inter-chunk
+
+    decay_state = jnp.exp(cum[-1] - cum)            # (Q,)
+    new_state = (B * decay_state[:, None]).T @ xd   # (N, P)
+    state_scr[...] = st * jnp.exp(cum[-1]) + new_state
+
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan_kernel(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                    C: jax.Array, *, chunk: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """x (Bt,S,H,P), dt (Bt,S,H), A (H,), B/C (Bt,S,N) -> y (Bt,S,H,P)."""
+    bt, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=(bt, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda b_, h_, c_: (b_, c_, h_, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b_, h_, c_: (b_, c_, h_)),
+            pl.BlockSpec((1,), lambda b_, h_, c_: (h_,)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, c_: (b_, c_, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, c_: (b_, c_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, p),
+                               lambda b_, h_, c_: (b_, c_, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct((bt, s, h, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C)

@@ -1,0 +1,20 @@
+"""Jit'd wrapper for the SSD scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from ..common import use_interpret
+from . import kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+             C: jax.Array, *, chunk: int = 128,
+             interpret: bool | None = None) -> jax.Array:
+    """Drop-in for models.ssm.ssd_chunked (returns y only; zero init state)."""
+    interp = use_interpret(interpret)
+    chunk = min(chunk, x.shape[1])
+    return kernel.ssd_scan_kernel(x, dt, A, B, C, chunk=chunk,
+                                  interpret=interp)

@@ -1,0 +1,2 @@
+"""Oracle: the naive semiseparable materialization from models/ssm.py."""
+from repro.models.ssm import ssd_chunked, ssd_reference  # noqa: F401

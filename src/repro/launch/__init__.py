@@ -1,0 +1,4 @@
+"""Launch layer: production mesh, sharding rules, train/serve steps,
+multi-pod dry-run, and CLI drivers. NOTE: do not import ``dryrun`` from
+other code — it sets XLA_FLAGS at import time (512 host devices)."""
+from . import hlo_analysis, mesh, sharding, steps  # noqa: F401

@@ -1,0 +1,300 @@
+"""Multi-pod dry-run: lower + compile every (arch × input shape × mesh)
+combination against the production mesh, with ShapeDtypeStruct stand-ins
+(no device allocation), and emit memory/cost/roofline artifacts.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+Artifacts land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
+
+The XLA_FLAGS line below MUST run before any other jax-touching import —
+jax locks the device count on first init.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch import hlo_analysis, roofline_model, sharding as shlib, steps
+from repro.launch.mesh import make_production_mesh
+from repro.models import build
+
+# per-(shape) gradient-accumulation defaults: keep saved activations ≈2 GB
+# per chip under layer remat (see EXPERIMENTS.md §Dry-run)
+GRAD_ACCUM = {
+    "train_4k": {
+        "deepseek-v2-236b": 16, "internvl2-26b": 16, "granite-8b": 8,
+        "minitron-8b": 8, "granite-3-2b": 4, "whisper-large-v3": 4,
+        "qwen1.5-4b": 4, "zamba2-7b": 8, "mamba2-780m": 2, "dbrx-132b": 16,
+    },
+}
+
+LR = 1e-2  # η (Eq. 3); value irrelevant for lowering
+
+# --preset optimized: the §Perf-winning flags per architecture family
+# (EXPERIMENTS.md §Perf). MoE archs skip activation pinning (it forces
+# resharding around the sort-based dispatch) and use EP-only experts; small
+# dense models additionally drop FSDP (tp_only); every decode uses the
+# flash-decoding (seq-sharded) cache layout.
+SMALL_DENSE = {"granite-3-2b", "qwen1.5-4b", "whisper-large-v3",
+               "mamba2-780m"}
+
+
+def optimized_flags(arch: str, cfg) -> dict:
+    flags = {"cross_mode": "seq_sharded"}
+    if cfg.arch_type == "moe":
+        flags["moe_mode"] = "ep_only"
+        # empirically (EXPERIMENTS.md §Perf addendum): activation pinning
+        # COMPOSES with EP-only for coarse-grained MoE (dbrx: 1 expert/shard,
+        # no shared experts → −52%/−74% train/prefill) but HURTS deepseek
+        # (10 experts/shard + shared experts + MLA re-shards around the pin)
+        if arch == "dbrx-132b":
+            flags["act_sharding"] = "batch"
+            flags["embed_mode"] = "vocab_model"
+    else:
+        flags["act_sharding"] = "batch"
+        flags["embed_mode"] = "vocab_model"
+    if arch in SMALL_DENSE:
+        flags["param_mode"] = "tp_only"
+    return flags
+
+
+def _dtype_cfg(cfg):
+    return cfg.with_(compute_dtype=jnp.bfloat16)
+
+
+def _enc_len(shape) -> int:
+    return min(shape.seq_len // 2, 4096)
+
+
+def _loop_trips(cfg, shape, ga: int) -> tuple[float, ...]:
+    """Structural trip counts, outermost loop first (hlo_analysis docstring).
+    Hybrid archs scan per attn_every-segment (segments are unrolled)."""
+    l_scan = cfg.attn_every if cfg.arch_type == "hybrid" else cfg.num_layers
+    nblk = max(1, shape.seq_len // 512)
+    if shape.kind == "train":
+        return (float(ga), float(l_scan), float(nblk), float(nblk))
+    if shape.kind == "prefill":
+        return (float(l_scan), float(nblk), float(nblk))
+    return (float(l_scan),)
+
+
+def lower_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
+                grad_accum: int | None = None, attn_impl: str = "auto",
+                embed_mode: str = "fsdp", accum_mode: str = "grad_each",
+                gather_dtype: str = "fp32", grad_sharding: str = "none",
+                act_sharding: str = "none", param_mode: str = "fsdp",
+                moe_mode: str = "ep_fsdp", cross_mode: str = "head_sharded",
+                verbose: bool = True) -> dict:
+    """Lower + compile one (arch × shape × mesh); return the artifact dict.
+
+    The defaults are the BASELINE configuration recorded in EXPERIMENTS.md
+    §Roofline; the §Perf hillclimb flips embed_mode / accum_mode /
+    gather_dtype (see EXPERIMENTS.md §Perf).
+    """
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = _dtype_cfg(configs.get_config(arch))
+    shape = configs.INPUT_SHAPES[shape_name]
+    fns = build(cfg)
+    chips = mesh.devices.size
+    t0 = time.time()
+
+    params_sds = jax.eval_shape(lambda: fns.init(jax.random.PRNGKey(0)))
+    pspecs = shlib.param_pspecs(params_sds, mesh, embed_mode=embed_mode,
+                                param_mode=param_mode, moe_mode=moe_mode)
+
+    if shape.kind == "train":
+        ga = grad_accum or GRAD_ACCUM.get(shape_name, {}).get(arch, 1)
+        n_pods = 2 if multi_pod else 1
+        window = None
+        act_sh = None
+        if act_sharding == "batch":
+            act_sh = NamedSharding(mesh, P("data", None, None))
+        step = steps.make_train_step(
+            cfg, lr=LR, grad_accum=ga, window=window, attn_impl=attn_impl,
+            remat=True, accum_mode=accum_mode, gather_dtype=gather_dtype,
+            grad_pspecs=pspecs if grad_sharding == "fsdp" else None,
+            mesh=mesh if grad_sharding == "fsdp" else None,
+            act_sharding=act_sh, spmd_pod=multi_pod)
+        stacked_sds = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_pods,) + s.shape, s.dtype),
+            params_sds)
+        stacked_specs = shlib.stack_pspecs_for_pods(pspecs, mesh)
+        batch_sds = shlib.stacked_batch_sds(cfg, shape, mesh)
+        batch_specs = shlib.batch_pspecs(cfg, shape, mesh)
+        in_sh = (shlib.shardings(stacked_specs, mesh),
+                 shlib.shardings(batch_specs, mesh))
+        out_sh = (shlib.shardings(stacked_specs, mesh),
+                  NamedSharding(mesh, P()))
+        lowered = jax.jit(step, in_shardings=in_sh,
+                          out_shardings=out_sh).lower(stacked_sds, batch_sds)
+        extra = {"grad_accum": ga, "embed_mode": embed_mode,
+                 "accum_mode": accum_mode, "gather_dtype": gather_dtype,
+                 "grad_sharding": grad_sharding,
+                 "act_sharding": act_sharding, "param_mode": param_mode,
+                 "moe_mode": moe_mode}
+        # External synchronization (Eq. 5): lowered + compiled separately —
+        # it runs every T internal iterations and crosses the 'pod' axis.
+        ext_sh = shlib.shardings(stacked_specs, mesh)
+        ext_compiled = jax.jit(
+            steps.external_sync_step, in_shardings=(ext_sh,),
+            out_shardings=ext_sh).lower(stacked_sds).compile()
+        ext_coll = hlo_analysis.collective_bytes(ext_compiled.as_text())
+        extra["external_sync_collective_bytes"] = ext_coll
+        extra["external_sync_t_s"] = sum(
+            v for k, v in ext_coll.items()
+            if k != "count") / hlo_analysis.LINK_BW
+    elif shape.kind == "prefill":
+        dp_t = shlib.dp_spec_axes(mesh)
+        act_sh = NamedSharding(mesh, P(dp_t, None, None)) \
+            if act_sharding == "batch" else None
+
+        def prefill_step(params, batch):
+            return fns.forward(params, batch, attn_impl=attn_impl,
+                               act_sharding=act_sh)
+        batch_sds = {k: v for k, v in
+                     configs.input_specs(cfg, shape).items()}
+        batch_specs = shlib.batch_pspecs(cfg, shape, mesh, pod_stacked=False)
+        dp = shlib.dp_spec_axes(mesh)
+        batch_specs = {k: P(dp, *([None] * (len(v.shape) - 1)))
+                       for k, v in batch_sds.items()}
+        in_sh = (shlib.shardings(pspecs, mesh),
+                 shlib.shardings(batch_specs, mesh))
+        # logits: batch over dp, vocab over model
+        out_sh = NamedSharding(mesh, P(dp, None, "model"))
+        lowered = jax.jit(prefill_step, in_shardings=in_sh,
+                          out_shardings=out_sh).lower(params_sds, batch_sds)
+        extra = {}
+    else:  # decode
+        windowed = cfg.has_attention and shape_name == "long_500k"
+        b = shape.global_batch
+        kw = {"windowed": windowed} if not cfg.is_encoder_decoder else \
+             {"windowed": windowed, "enc_len": _enc_len(shape)}
+        cache_sds = jax.eval_shape(
+            lambda: fns.init_decode_cache(b, shape.seq_len, **kw))
+        cache_specs = shlib.decode_cache_pspecs(cfg, cache_sds, mesh,
+                                                batch=b, cross_mode=cross_mode)
+        dp = shlib.dp_spec_axes(mesh)
+        tok_spec = P(dp, None) if b > 1 else P(None, None)
+        step = steps.make_serve_step(cfg, windowed=windowed)
+        tokens_sds = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+        in_sh = (shlib.shardings(pspecs, mesh),
+                 shlib.shardings(cache_specs, mesh),
+                 NamedSharding(mesh, tok_spec), NamedSharding(mesh, P()))
+        out_sh = (NamedSharding(mesh, tok_spec),
+                  shlib.shardings(cache_specs, mesh))
+        lowered = jax.jit(step, in_shardings=in_sh,
+                          out_shardings=out_sh).lower(
+                      params_sds, cache_sds, tokens_sds, pos_sds)
+        extra = {"windowed": windowed, "cross_mode": cross_mode}
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            mem = {k: int(getattr(ma, k)) for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(ma, k)}
+    except Exception as e:  # CPU backend may not support it
+        mem = {"error": str(e)}
+
+    ga_used = extra.get("grad_accum", 1)
+    analytic = roofline_model.analytic_roofline(cfg, shape,
+                                                grad_accum=ga_used)
+    roof = hlo_analysis.analyze(compiled, chips=chips, analytic=analytic,
+                                loop_trips=_loop_trips(cfg, shape, ga_used))
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "params": cfg.param_count(),
+        "params_active": cfg.param_count(active_only=True),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory_analysis": mem,
+        "roofline": roof.as_dict(),
+        **extra,
+    }
+    if verbose:
+        r = roof
+        print(f"[dryrun] {arch} × {shape_name} × {result['mesh']}: "
+              f"compile {t_compile:.0f}s | FLOPs {r.flops:.3e} | "
+              f"bytes {r.hbm_bytes:.3e} | coll {r.total_coll_bytes:.3e} | "
+              f"bottleneck={r.bottleneck} "
+              f"useful={r.useful_flops_ratio:.2f}")
+        if mem:
+            print(f"         memory_analysis: {mem}")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=configs.ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(configs.INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch × shape) for the chosen mesh")
+    ap.add_argument("--grad-accum", type=int, default=None)
+    ap.add_argument("--embed-mode", choices=("fsdp", "replicated_vocab"),
+                    default="fsdp")
+    ap.add_argument("--accum-mode", choices=("grad_each", "loss_scan"),
+                    default="grad_each")
+    ap.add_argument("--gather-dtype", choices=("fp32", "bf16"),
+                    default="fp32")
+    ap.add_argument("--act-sharding", choices=("none", "batch"),
+                    default="none")
+    ap.add_argument("--param-mode", choices=("fsdp", "tp_only"),
+                    default="fsdp")
+    ap.add_argument("--moe-mode", choices=("ep_fsdp", "ep_only"),
+                    default="ep_fsdp")
+    ap.add_argument("--preset", choices=("baseline", "optimized"),
+                    default="baseline",
+                    help="'optimized' applies the §Perf-winning flags "
+                         "per arch family (overrides individual flags)")
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    combos = ([(a, s) for a in configs.ARCH_IDS
+               for s in configs.INPUT_SHAPES]
+              if args.all else [(args.arch, args.shape)])
+    failures = []
+    for arch, shape in combos:
+        tag = f"{arch}__{shape}__{'2x16x16' if args.multi_pod else '16x16'}"
+        flags = {"embed_mode": args.embed_mode,
+                 "accum_mode": args.accum_mode,
+                 "gather_dtype": args.gather_dtype,
+                 "act_sharding": args.act_sharding,
+                 "param_mode": args.param_mode,
+                 "moe_mode": args.moe_mode}
+        if args.preset == "optimized":
+            flags.update(optimized_flags(arch, configs.get_config(arch)))
+        try:
+            res = lower_combo(arch, shape, multi_pod=args.multi_pod,
+                              grad_accum=args.grad_accum, **flags)
+            with open(os.path.join(args.out_dir, tag + ".json"), "w") as f:
+                json.dump(res, f, indent=1)
+        except Exception:
+            print(f"[dryrun] FAILED {tag}")
+            traceback.print_exc()
+            failures.append(tag)
+    if failures:
+        raise SystemExit(f"dry-run failures: {failures}")
+    print("[dryrun] all combinations lowered + compiled OK")
+
+
+if __name__ == "__main__":
+    main()

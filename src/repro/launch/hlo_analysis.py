@@ -1,0 +1,169 @@
+"""Roofline terms from compiled dry-run artifacts (§Roofline).
+
+compute    = FLOPs / (chips × 197e12)              [TPU v5e bf16 peak]
+memory     = HBM_bytes / (chips × 819e9)           [HBM bandwidth]
+collective = collective_bytes / (chips × 50e9)     [per-link ICI]
+
+Collective bytes are parsed from the compiled HLO text: operand sizes of
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+Ops inside while-loop bodies (lax.scan over layers / grad-accum microbatches)
+execute trip-count times but appear once in the text, so each collective is
+weighted by its computation's loop multiplier: we build the while-op →body
+mapping and apply the structural trip product supplied by the caller
+(layers × grad_accum for train; layers for decode). FLOPs/HBM come from the
+analytic model (see roofline_model.py for why the CPU backend's
+cost_analysis cannot be used directly); raw counters are kept in artifacts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+_COLL_RE = re.compile(r"=\s*(.*?)\s*(all-gather|all-reduce|reduce-scatter|"
+                      r"all-to-all|collective-permute)(-start|-done)?\(")
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_ops(hlo_text: str) -> list[dict]:
+    """Every collective op in the module: type, result bytes, loop depth.
+
+    Loop depth = number of '/while/' segments in the op's ``op_name``
+    metadata — each corresponds to one enclosing lax.scan/while (grad-accum,
+    layer stack, attention block loops, ...). SPMD-inserted collectives
+    inherit the op_name of the op they reshard, so depth is preserved.
+    """
+    ops = []
+    for line in hlo_text.splitlines():
+        mc = _COLL_RE.search(line)
+        if not mc or mc.group(3) == "-done":
+            continue
+        mo = _OPNAME_RE.search(line)
+        op_name = mo.group(1) if mo else ""
+        depth = op_name.count("/while")
+        ops.append({"type": mc.group(2), "bytes": _shape_bytes(mc.group(1)),
+                    "depth": depth, "op_name": op_name})
+    return ops
+
+
+def collective_bytes(hlo_text: str, *, loop_trips: tuple[float, ...] = ()
+                     ) -> dict:
+    """Total collective bytes with loop-trip weighting.
+
+    ``loop_trips`` = structural trip counts outermost-first, e.g.
+    (grad_accum, num_layers, n_q_blocks, n_kv_blocks) for a train step. An
+    op at while-depth d is weighted by prod(loop_trips[:d]) (clamped)."""
+    out = {c: 0.0 for c in _COLLECTIVES}
+    out["count"] = 0
+    for op in collective_ops(hlo_text):
+        mult = 1.0
+        for t in loop_trips[:op["depth"]]:
+            mult *= t
+        out[op["type"]] += op["bytes"] * mult
+        out["count"] += 1
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # analytic, global per step (XLA-fallback)
+    flops_ideal: float           # analytic with block-skipping attention
+    hbm_bytes: float             # analytic, global per step
+    coll_bytes: dict             # HLO-parsed, loop-corrected, global
+    chips: int
+    model_flops: float = 0.0     # 6·N·D convention
+    raw_cost_analysis: dict | None = None  # per-device, loop-body-once
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return float(sum(v for k, v in self.coll_bytes.items()
+                         if k != "count"))
+
+    @property
+    def t_collective(self) -> float:
+        # parsed bytes are per-device program bytes (SPMD module is
+        # per-partition); each link carries that traffic
+        return self.total_coll_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_xla": self.flops,
+            "flops_ideal": self.flops_ideal,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.coll_bytes,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "raw_cost_analysis": self.raw_cost_analysis,
+        }
+
+
+def analyze(compiled, *, chips: int, analytic,
+            loop_trips: tuple[float, ...] = (),
+            hlo_text: str | None = None) -> Roofline:
+    """Combine HLO-parsed collectives with the analytic compute/memory model.
+
+    ``analytic``: roofline_model.AnalyticRoofline.
+    """
+    try:
+        cost = dict(compiled.cost_analysis() or {})
+        raw = {k: float(v) for k, v in cost.items()
+               if isinstance(v, (int, float)) and k in
+               ("flops", "bytes accessed", "transcendentals")}
+    except Exception:
+        raw = None
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text, loop_trips=loop_trips)
+    return Roofline(flops=analytic.flops_xla,
+                    flops_ideal=analytic.flops_ideal,
+                    hbm_bytes=analytic.hbm_bytes,
+                    coll_bytes=coll, chips=chips,
+                    model_flops=analytic.model_flops,
+                    raw_cost_analysis=raw)

@@ -1,0 +1,32 @@
+"""Production mesh construction (DESIGN.md §4).
+
+single-pod: (16, 16)   axes ("data", "model")   — one FL super node,
+            16-way hierarchical data parallel × 16-way tensor parallel.
+multi-pod:  (2, 16, 16) axes ("pod", "data", "model") — each pod is one
+            FEDGS super node; external synchronization crosses 'pod'.
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(*, data: int = 1, model: int = 1, pod: int = 1):
+    """Small mesh over however many (host) devices exist — for tests."""
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """The data-parallel axes of a mesh: ('pod','data') or ('data',)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)

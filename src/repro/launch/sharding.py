@@ -1,0 +1,262 @@
+"""Per-architecture PartitionSpec rules (DESIGN.md §4).
+
+Conventions on the production mesh:
+  * 'model'  — tensor parallelism: flattened head×head_dim / ff / expert dims
+               (avoids non-divisible logical-head sharding, e.g. 20 heads on
+               a 16-way axis).
+  * 'data'   — hierarchical data parallel (within a super node) AND the FSDP
+               axis for parameters (weights are *logically* replicated within
+               a super node; FSDP gathers reconstruct identical values, so
+               Eq. 4 semantics are preserved while fitting HBM).
+  * 'pod'    — FL super nodes: parameters get a leading stacked pod axis so
+               each pod holds its own model copy between external syncs.
+
+Every rule checks divisibility against the actual mesh and falls back to
+replication, so the same rules serve the 256-chip production mesh and the
+tiny host meshes used in tests.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+def _axis_size(mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def _maybe(axis: str | None, dim: int, mesh) -> str | None:
+    """Use ``axis`` for a dim only if the dim divides by the axis size."""
+    if axis is None or axis not in mesh.axis_names:
+        return None
+    return axis if dim % _axis_size(mesh, axis) == 0 else None
+
+
+def _spec(mesh, dims: tuple[int, ...], axes: tuple[str | None, ...]) -> P:
+    assert len(dims) == len(axes)
+    return P(*[_maybe(a, d, mesh) for d, a in zip(dims, axes)])
+
+
+# --- per-leaf rules, matched by path suffix ---------------------------------
+
+def _rule(path: str, shape: tuple[int, ...], mesh, *,
+          embed_mode: str = "fsdp", param_mode: str = "fsdp",
+          moe_mode: str = "ep_fsdp") -> P:
+    nd = len(shape)
+
+    def pad(axes):  # right-align axes against the trailing dims (stacked L)
+        axes = tuple(axes)
+        if param_mode == "tp_only":
+            # §Perf iteration 6: models that fit HBM replicated-over-'data'
+            # skip FSDP entirely — contractions never hit a 'data'-sharded
+            # dim, so no per-matmul partial-sum all-reduces.
+            axes = tuple(a if a == "model" else None for a in axes)
+        return _spec(mesh, shape, (None,) * (nd - len(axes)) + axes)
+
+    # lm_head sharded over ('model' vocab, 'data' d) so logits shard on vocab
+    if path.endswith("lm_head/table"):
+        return pad(("model", "data"))
+    # gather-side embedding: §Perf iteration 1 — FSDP-sharding the vocab dim
+    # over 'data' makes the backward scatter-add hit SPMD's "involuntary full
+    # rematerialization" (collective-permute of the full activation per
+    # microbatch); replicating vocab over 'data' (still 'model'-sharded on
+    # d) removes it. 'fsdp' keeps the old behaviour for comparison.
+    if path.endswith("embed/table"):
+        if embed_mode == "replicated_vocab":
+            return pad((None, "model"))
+        if embed_mode == "vocab_model":
+            # vocab over 'model', d replicated — gather lowers to the
+            # standard select+all-reduce pattern, avoiding the partitioner's
+            # gather-resharding bug when activations are pinned batch-sharded
+            return pad(("model", None))
+        return pad(("data", "model"))  # baseline: FSDP over vocab
+
+    # attention projections
+    if path.endswith(("attn/wq/w", "attn/wk/w", "attn/wv/w",
+                      "xattn/wq/w", "xattn/wk/w", "xattn/wv/w")):
+        return pad(("data", "model"))
+    if path.endswith(("attn/wo/w", "xattn/wo/w")):
+        return pad(("model", "data"))
+    if path.endswith(("wq/b", "wk/b", "wv/b")):
+        return pad(("model",))
+    if path.endswith("wo/b"):
+        return pad(("data",))
+
+    # MLA
+    if path.endswith(("w_dkv/w", "w_kr/w")):
+        return pad(("data", None))
+    if path.endswith(("w_uk/w", "w_uv/w")):
+        return pad((None, "model"))
+
+    # dense MLP / shared expert
+    if path.endswith(("gate/w", "up/w")):
+        return pad(("data", "model"))
+    if path.endswith("down/w"):
+        return pad(("model", "data"))
+
+    # MoE experts: expert-parallel over 'model'; 'ep_fsdp' additionally
+    # FSDP-shards d over 'data' (needed only when E/|model| experts don't
+    # fit HBM); 'ep_only' (§Perf pair-2 iteration 2) keeps d replicated so
+    # the grouped matmuls never contract a 'data'-sharded dim.
+    if path.endswith(("moe/w_gate", "moe/w_up", "moe/w_down")):
+        if moe_mode == "ep_only":
+            return pad(("model", None, None))
+        return pad(("model", "data", None))
+    if path.endswith("router/w"):
+        return pad((None, None))
+
+    # Mamba2
+    if path.endswith("in_proj/w"):
+        return pad(("data", "model"))
+    if path.endswith("dt_proj/w"):
+        return pad(("data", "model"))
+    if path.endswith("out_proj/w"):
+        return pad(("model", "data"))
+    if path.endswith("conv_w"):
+        return pad((None, "model"))
+    if path.endswith("conv_b"):
+        return pad(("model",))
+    if path.endswith(("A_log", "D", "dt_proj/bias")):
+        return pad((None,))
+
+    # norms + everything else small: replicated
+    return P()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_pspecs(params: PyTree, mesh, *,
+                 embed_mode: str = "fsdp",
+                 param_mode: str = "fsdp",
+                 moe_mode: str = "ep_fsdp") -> PyTree:
+    """PartitionSpec tree for a model's params (no pod axis)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _rule(_path_str(path), np.shape(leaf), mesh,
+                                 embed_mode=embed_mode,
+                                 param_mode=param_mode,
+                                 moe_mode=moe_mode),
+        params)
+
+
+def stack_pspecs_for_pods(pspecs: PyTree, mesh) -> PyTree:
+    """Prepend the 'pod' axis for the stacked-per-pod training layout."""
+    pod = "pod" if "pod" in mesh.axis_names else None
+    return jax.tree.map(lambda s: P(pod, *s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def shardings(pspecs: PyTree, mesh) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# --- batch / cache specs ----------------------------------------------------
+
+def batch_pspecs(cfg, shape, mesh, *, pod_stacked: bool = True) -> PyTree:
+    """Specs for the training/prefill batch, stacked (n_pods, B/n_pods, ...)."""
+    from repro.configs import input_specs
+    pod = "pod" if ("pod" in mesh.axis_names and pod_stacked) else None
+    specs = {}
+    for name, sds in input_specs(cfg, shape).items():
+        trailing = (None,) * (len(sds.shape) - 1)
+        specs[name] = P(pod, "data", *trailing) if pod_stacked \
+            else P("data", *trailing)
+    return specs
+
+
+def stacked_batch_sds(cfg, shape, mesh) -> dict:
+    """ShapeDtypeStructs with the leading pod axis folded out of B."""
+    from repro.configs import input_specs
+    n_pods = _axis_size(mesh, "pod")
+    out = {}
+    for name, sds in input_specs(cfg, shape).items():
+        b = sds.shape[0]
+        assert b % max(n_pods, 1) == 0, (name, b, n_pods)
+        out[name] = jax.ShapeDtypeStruct(
+            (max(n_pods, 1), b // max(n_pods, 1)) + sds.shape[1:], sds.dtype)
+    return out
+
+
+def dp_spec_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def decode_cache_pspecs(cfg, cache: PyTree, mesh, *, batch: int,
+                        cross_mode: str = "head_sharded") -> PyTree:
+    """PartitionSpec tree matching the init_decode_cache structure.
+
+    batch > 1: shard the cache batch dim over ('pod','data'), heads/head_dim
+    over 'model'. batch == 1 (long_500k): shard the cache *sequence* (ring
+    capacity) or SSM heads over 'data' instead.
+
+    cross_mode (§Perf pair-3): enc-dec cross K/V sharded on head_dim
+    ('head_sharded', baseline) or on the encoder sequence ('seq_sharded' —
+    avoids SPMD all-gathering the whole cross cache per decode layer).
+    """
+    dp = dp_spec_axes(mesh)
+    dp_ax = dp if batch % int(np.prod([_axis_size(mesh, a) for a in dp])) == 0 \
+        and batch > 1 else None
+
+    def leaf_spec(path, leaf) -> P:
+        p = _path_str(path)
+        shape = np.shape(leaf)
+        nd = len(shape)
+        if "cross_" in p and cross_mode == "seq_sharded":
+            # (L, B, S_enc, KV, hd): shard the encoder sequence over 'model'
+            lead = (None,) * (nd - 4)
+            return P(*lead, dp_ax, _maybe("model", shape[-3], mesh),
+                     None, None)
+        if p.endswith("/k") or p.endswith("/v") or "cross_" in p:
+            # (L, B, C, KV, hd) or (B, C, KV, hd)
+            lead = (None,) * (nd - 4)
+            if cross_mode == "seq_sharded":
+                # flash-decoding layout: KV sequence over 'model'; scores
+                # reduce locally per chunk, only (max, sum, ctx) cross chips
+                return P(*lead, dp_ax, _maybe("model", shape[-3], mesh),
+                         None, None)
+            if dp_ax:
+                axes = lead + (dp_ax, None, None,
+                               _maybe("model", shape[-1], mesh))
+            else:
+                axes = lead + (None, _maybe("data", shape[-3], mesh), None,
+                               _maybe("model", shape[-1], mesh))
+            return P(*axes)
+        if p.endswith("/c") or p.endswith("/kr"):
+            # MLA compressed cache (L, B, C, r)
+            lead = (None,) * (nd - 3)
+            if dp_ax:
+                return P(*lead, dp_ax, None, None)
+            return P(*lead, None, _maybe("data", shape[-2], mesh), None)
+        if p.endswith("/h"):
+            # SSM state (L, B, H, N, P)
+            lead = (None,) * (nd - 4)
+            if dp_ax:
+                return P(*lead, dp_ax, _maybe("model", shape[-3], mesh),
+                         None, None)
+            return P(*lead, None, _maybe("data", shape[-3], mesh), None,
+                     _maybe("model", shape[-1], mesh))
+        if p.endswith("/conv"):
+            # conv state (L, B, W-1, C)
+            lead = (None,) * (nd - 3)
+            if dp_ax:
+                return P(*lead, dp_ax, None, _maybe("model", shape[-1], mesh))
+            return P(*lead, None, None, _maybe("model", shape[-1], mesh))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache)

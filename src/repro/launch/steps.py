@@ -1,0 +1,172 @@
+"""Production train / serve steps with FEDGS compound-step semantics.
+
+Training layout (DESIGN.md §4): params carry a leading *pod* axis (one model
+copy per FL super node, sharded over 'pod'); each pod's copy is FSDP/TP
+sharded over ('data','model'). One ``train_step`` = the FEDGS *internal
+iteration* on every pod at once: per-device gradients are all-reduced over
+'data' by SPMD (Eq. 4 in gradient space), the SGD update (Eq. 3) is applied
+per pod, and NO cross-pod traffic occurs. ``external_sync_step`` = Eq. 5:
+mean over the pod axis, broadcast back — lowered/compiled separately and
+invoked every T steps by the driver.
+
+``serve_step`` is one-token batched decode with the KV/SSM cache as explicit
+input/output (no FL collectives — DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import build
+
+PyTree = Any
+
+
+def make_loss_fn(cfg, *, window=None, attn_impl="auto", remat=True,
+                 act_sharding=None):
+    fns = build(cfg)
+
+    def loss_fn(params, batch):
+        return fns.loss(params, batch, window=window, attn_impl=attn_impl,
+                        remat=remat, act_sharding=act_sharding)
+
+    return loss_fn
+
+
+def make_train_step(cfg, *, lr: float = 1e-3, grad_accum: int = 1,
+                    window=None, attn_impl="auto", remat=True,
+                    accum_mode: str = "grad_each",
+                    gather_dtype: str = "fp32",
+                    grad_pspecs=None, mesh=None,
+                    act_sharding=None, spmd_pod: bool = False):
+    """Returns train_step(stacked_params, stacked_batch) -> (params', loss).
+
+    stacked_params leaves: (n_pods, ...); stacked_batch leaves
+    (n_pods, B/n_pods, ...).
+
+    accum_mode (§Perf iteration 2):
+      'grad_each'  — baseline: value_and_grad per microbatch, accumulate in a
+                     scan carry. SPMD all-reduces each microbatch's grads
+                     over 'data' inside the loop (≈ ga× the AR traffic).
+      'loss_scan'  — beyond-paper: scan the *loss* over microbatches (with a
+                     checkpointed body) and differentiate once; the backward
+                     scan accumulates local grads and XLA can hoist/merge the
+                     data all-reduce to once per step.
+    gather_dtype (§Perf iteration 3): 'bf16' casts parameters once at step
+    start so FSDP all-gathers move 2-byte weights instead of 4-byte masters.
+    grad_pspecs (§Perf iteration 4, ZeRO-2-style): constrain per-microbatch
+    gradients to the FSDP param sharding so SPMD emits reduce-scatter over
+    'data' (1/16 of the bytes) instead of all-reduce-then-slice.
+    """
+    loss_fn = make_loss_fn(cfg, window=window, attn_impl=attn_impl,
+                           remat=remat, act_sharding=act_sharding)
+    from jax.sharding import NamedSharding
+
+    def constrain_grads(grads):
+        if grad_pspecs is None or mesh is None:
+            return grads
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(
+                g, NamedSharding(mesh, s)),
+            grads, grad_pspecs)
+
+    def cast_params(params):
+        if gather_dtype == "bf16":
+            return jax.tree.map(
+                lambda p: p.astype(jnp.bfloat16)
+                if p.dtype == jnp.float32 and p.ndim >= 2 else p, params)
+        return params
+
+    def _micro(batch):
+        def reshape(leaf):
+            b = leaf.shape[0]
+            assert b % grad_accum == 0, (b, grad_accum)
+            return leaf.reshape((grad_accum, b // grad_accum) + leaf.shape[1:])
+        return jax.tree.map(reshape, batch)
+
+    def pod_grads(params, batch):
+        """One pod's internal iteration: grads averaged over its devices
+        (SPMD inserts the all-reduce over 'data' — Eq. 4)."""
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(cast_params(p), batch))(params)
+            return constrain_grads(grads), loss
+        micro = _micro(batch)
+
+        if accum_mode == "loss_scan":
+            def total_loss(p):
+                pc = cast_params(p)
+
+                def body(c, mb):
+                    return c + loss_fn(pc, mb), None
+                body = jax.checkpoint(body, prevent_cse=False)
+                tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), micro)
+                return tot / grad_accum
+            loss, grads = jax.value_and_grad(total_loss)(params)
+            return grads, loss
+
+        def acc(carry, mb):
+            g_acc, l_acc = carry
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(cast_params(p), mb))(params)
+            grads = constrain_grads(grads)
+            g_acc = jax.tree.map(jnp.add, g_acc, grads)
+            return (g_acc, l_acc + loss), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss), _ = jax.lax.scan(acc, (g0, jnp.zeros((), jnp.float32)),
+                                        micro)
+        scale = 1.0 / grad_accum
+        return jax.tree.map(lambda g: g * scale, grads), loss * scale
+
+    def train_step(stacked_params: PyTree, stacked_batch: PyTree):
+        vmap_kw = {"spmd_axis_name": "pod"} if spmd_pod else {}
+        grads, losses = jax.vmap(pod_grads, **vmap_kw)(
+            stacked_params, stacked_batch)
+        # Eq. 3: one mini-batch SGD step per pod (FEDGS uses plain SGD)
+        new_params = jax.tree.map(
+            lambda p, g: (p - lr * g.astype(jnp.float32)).astype(p.dtype),
+            stacked_params, grads)
+        return new_params, jnp.mean(losses)
+
+    return train_step
+
+
+def external_sync_step(stacked_params: PyTree) -> PyTree:
+    """Eq. 5: ω ← (1/M) Σ_m ω^m across pods, broadcast back to every pod."""
+    def sync(leaf):
+        mean = jnp.mean(leaf.astype(jnp.float32), axis=0, keepdims=True)
+        return jnp.broadcast_to(mean, leaf.shape).astype(leaf.dtype)
+    return jax.tree.map(sync, stacked_params)
+
+
+def make_serve_step(cfg, *, windowed: bool = False):
+    """Returns serve_step(params, cache, tokens, pos) -> (next_tokens, cache)."""
+    fns = build(cfg)
+
+    def serve_step(params: PyTree, cache: PyTree, tokens: jax.Array,
+                   pos: jax.Array):
+        logits, cache = fns.decode_step(params, cache, tokens, pos,
+                                        windowed=windowed)
+        next_tokens = jnp.argmax(logits[..., :cfg.vocab_size], axis=-1)
+        return next_tokens.astype(jnp.int32), cache
+
+    return serve_step
+
+
+def make_select_step(num_selected: int, num_presampled: int, *,
+                     init: str = "mpinv", max_iters: int = 64):
+    """The GBP-CS client-selection step (counts -> masks), lowered alongside
+    the train step in the dry-run to show the full FEDGS iteration cost."""
+    from repro.core import selection
+
+    def select_step(keys, counts, p_real):
+        fn = lambda k, c: selection.select_clients_via_gbp_cs(
+            k, c, p_real, num_selected, num_presampled, init=init,
+            max_iters=max_iters)
+        return jax.vmap(fn)(keys, counts)
+
+    return select_step

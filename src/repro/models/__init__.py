@@ -1,0 +1,4 @@
+"""Model zoo: transformer stacks (dense/moe/ssm/hybrid/vlm), whisper-style
+enc-dec, and the paper's FEMNIST CNN."""
+from . import attention, cnn, encdec, factory, layers, moe, ssm, transformer  # noqa: F401
+from .factory import ModelFns, build, make_dummy_batch  # noqa: F401

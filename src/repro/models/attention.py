@@ -1,0 +1,361 @@
+"""Attention variants: MHA/GQA, MLA (DeepSeek-V2), sliding window, KV cache.
+
+Three execution paths:
+  * ``naive``      — materialized scores; small shapes / oracle.
+  * ``blockwise``  — online-softmax scan over (q-block, kv-block) tiles in
+                     pure jnp; the XLA fallback for long sequences (this is
+                     also the numerical reference for the Pallas kernel).
+  * ``local``      — sliding-window: each q block attends only to the
+                     window's kv blocks (gathered), sub-quadratic.
+Pallas flash attention (repro.kernels.flash_attention) is the TPU-target
+implementation; model code selects it via ``impl='pallas'``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, init_linear, init_rmsnorm, linear, rmsnorm
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def init_attention(key: Array, cfg, *, dtype=None) -> dict:
+    """GQA attention params (or MLA if cfg.kv_lora_rank > 0)."""
+    dtype = dtype or cfg.param_dtype
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    if cfg.kv_lora_rank:
+        r, dr = cfg.kv_lora_rank, cfg.rope_head_dim
+        return {
+            "wq": init_linear(ks[0], d, H * (hd + dr), dtype=dtype),
+            "w_dkv": init_linear(ks[1], d, r, dtype=dtype),
+            "w_kr": init_linear(ks[2], d, dr, dtype=dtype),
+            "kv_norm": init_rmsnorm(r, dtype),
+            "w_uk": init_linear(ks[3], r, H * hd, dtype=dtype),
+            "w_uv": init_linear(ks[4], r, H * hd, dtype=dtype),
+            "wo": init_linear(ks[5], H * hd, d, dtype=dtype),
+        }
+    return {
+        "wq": init_linear(ks[0], d, H * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": init_linear(ks[1], d, KV * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": init_linear(ks[2], d, KV * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": init_linear(ks[3], H * hd, d, dtype=dtype),
+    }
+
+
+def init_cross_attention(key: Array, cfg, *, dtype=None) -> dict:
+    return init_attention(key, cfg.with_(kv_lora_rank=0), dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+def _group_heads(q: Array, n_kv: int) -> Array:
+    """(B,S,H,D) -> (B,S,KV,G,D) for GQA."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def naive_attention(q: Array, k: Array, v: Array, *, causal: bool,
+                    window: int | None = None,
+                    q_offset: int | Array = 0) -> Array:
+    """Materialized-scores attention. q/k (…,D), v may have D_v ≠ D (MLA)."""
+    b, sq, h, d = q.shape
+    kv, dv = k.shape[2], v.shape[-1]
+    qg = _group_heads(q, kv)                                   # B,Sq,KV,G,D
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = q_offset + jnp.arange(sq)
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def blockwise_attention(q: Array, k: Array, v: Array, *, causal: bool,
+                        window: int | None = None,
+                        block_q: int = 512, block_k: int = 512) -> Array:
+    """Online-softmax tiled attention (pure jnp; flash-attention algorithm).
+
+    Memory is O(block_q × block_k) scores per tile instead of O(S²). The
+    fully-masked kv tiles of the causal triangle are still *computed* then
+    masked in this XLA fallback (≈2× FLOPs overhead recorded in the
+    roofline); the Pallas kernel skips them via its grid.
+    """
+    b, sq, h, d = q.shape
+    sk, kvh, dv = k.shape[1], k.shape[2], v.shape[-1]
+    block_q, block_k = min(block_q, sq), min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    nq, nk = sq // block_q, sk // block_k
+    qg = _group_heads(q, kvh).reshape(b, nq, block_q, kvh, h // kvh, d)
+    kb = k.reshape(b, nk, block_k, kvh, d)
+    vb = v.reshape(b, nk, block_k, kvh, dv)
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+
+    def q_block(args):
+        qi, qblk = args                                         # (), (B,bq,KV,G,D)
+        qpos = qi * block_q + jnp.arange(block_q)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, kblk, vblk = inp
+            kpos = ki * block_k + jnp.arange(block_k)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qblk.astype(jnp.float32),
+                           kblk.astype(jnp.float32)) * scale
+            mask = jnp.ones((block_q, block_k), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p, vblk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, h // kvh, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, h // kvh, block_q), jnp.float32)
+        a0 = jnp.zeros((b, kvh, h // kvh, block_q, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]            # B,KV,G,bq,D
+        return jnp.einsum("bkgqd->bqkgd", out)
+
+    outs = jax.lax.map(q_block, (jnp.arange(nq), jnp.moveaxis(qg, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, dv)
+    return out.astype(q.dtype)
+
+
+def local_attention(q: Array, k: Array, v: Array, *, window: int,
+                    block: int = 512) -> Array:
+    """Sliding-window causal attention, sub-quadratic: q block i attends to
+    the gathered kv blocks [i − w_blocks, i]. Work = O(S · window)."""
+    b, sq, h, d = q.shape
+    sk, kvh, dv = k.shape[1], k.shape[2], v.shape[-1]
+    assert sq == sk and sq % block == 0
+    nblk = sq // block
+    wblk = max(1, -(-window // block))                          # ceil
+    qg = _group_heads(q, kvh).reshape(b, nblk, block, kvh, h // kvh, d)
+    kb = k.reshape(b, nblk, block, kvh, d)
+    vb = v.reshape(b, nblk, block, kvh, dv)
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+
+    def q_block(args):
+        qi, qblk = args
+        # gather the window's kv blocks (clamped; masked below)
+        offs = qi - jnp.arange(wblk, -1, -1)                    # wblk+1 ids
+        offs_c = jnp.clip(offs, 0, nblk - 1)
+        kw = jnp.take(kb, offs_c, axis=1)                       # B,W+1,bk,KV,D
+        vw = jnp.take(vb, offs_c, axis=1)
+        kw = kw.reshape(b, (wblk + 1) * block, kvh, d)
+        vw = vw.reshape(b, (wblk + 1) * block, kvh, dv)
+        qpos = qi * block + jnp.arange(block)
+        kpos = (offs_c[:, None] * block + jnp.arange(block)[None, :]).reshape(-1)
+        valid = (offs >= 0)[:, None].repeat(block, 1).reshape(-1)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qblk.astype(jnp.float32),
+                       kw.astype(jnp.float32)) * scale
+        mask = (kpos[None, :] <= qpos[:, None]) \
+            & (kpos[None, :] > qpos[:, None] - window) & valid[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", p, vw.astype(jnp.float32))
+        return out
+
+    outs = jax.lax.map(q_block, (jnp.arange(nblk), jnp.moveaxis(qg, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, dv)
+    return out.astype(q.dtype)
+
+
+def attend(q, k, v, *, causal=True, window=None, impl="auto",
+           block_q=512, block_k=512):
+    """Dispatch: 'naive' | 'blockwise' | 'local' | 'pallas' | 'auto'."""
+    if impl == "auto":
+        s = max(q.shape[1], k.shape[1])
+        if window is not None and q.shape[1] == k.shape[1] \
+                and window < q.shape[1] and q.shape[1] % block_q == 0:
+            impl = "local"
+        elif s > 2048 and q.shape[1] % block_q == 0 and k.shape[1] % block_k == 0:
+            impl = "blockwise"
+        else:
+            impl = "naive"
+    if impl == "naive":
+        return naive_attention(q, k, v, causal=causal, window=window)
+    if impl == "blockwise":
+        return blockwise_attention(q, k, v, causal=causal, window=window,
+                                   block_q=block_q, block_k=block_k)
+    if impl == "local":
+        return local_attention(q, k, v, window=window, block=block_q)
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(q, k, v, causal=causal, window=window)
+    raise ValueError(impl)
+
+
+# ---------------------------------------------------------------------------
+# Full layers (projections + attention), prefill/train form
+# ---------------------------------------------------------------------------
+
+def gqa_forward(p: dict, x: Array, positions: Array, cfg, *, causal=True,
+                window=None, impl="auto", kv_override=None) -> Array:
+    """Standard GQA attention layer. kv_override supplies cross-attn K/V."""
+    b, s, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = linear(p["wq"], x).reshape(b, s, H, hd)
+    if kv_override is None:
+        k = linear(p["wk"], x).reshape(b, s, KV, hd)
+        v = linear(p["wv"], x).reshape(b, s, KV, hd)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    else:
+        k, v = kv_override                                      # (B,Sk,KV,hd)
+    out = attend(q, k, v, causal=causal, window=window, impl=impl)
+    return linear(p["wo"], out.reshape(b, s, H * hd))
+
+
+def mla_forward(p: dict, x: Array, positions: Array, cfg, *, causal=True,
+                window=None, impl="auto") -> Array:
+    """MLA (explicit / non-absorbed form — compute-optimal for prefill)."""
+    b, s, _ = x.shape
+    H, hd, dr, r = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim, cfg.kv_lora_rank
+    q = linear(p["wq"], x).reshape(b, s, H, hd + dr)
+    qn, qr = q[..., :hd], apply_rope(q[..., hd:], positions, cfg.rope_theta)
+    c = rmsnorm(p["kv_norm"], linear(p["w_dkv"], x))            # (B,S,r)
+    kr = apply_rope(linear(p["w_kr"], x).reshape(b, s, 1, dr),
+                    positions, cfg.rope_theta)                  # shared head
+    kn = linear(p["w_uk"], c).reshape(b, s, H, hd)
+    v = linear(p["w_uv"], c).reshape(b, s, H, hd)
+    qf = jnp.concatenate([qn, qr], axis=-1)
+    kf = jnp.concatenate([kn, jnp.broadcast_to(kr, (b, s, H, dr))], axis=-1)
+    out = attend(qf, kf, v, causal=causal, window=window, impl=impl)
+    return linear(p["wo"], out.reshape(b, s, H * hd))
+
+
+def attention_forward(p, x, positions, cfg, **kw):
+    if cfg.kv_lora_rank:
+        return mla_forward(p, x, positions, cfg, **kw)
+    return gqa_forward(p, x, positions, cfg, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single new token, KV cache)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype=None) -> dict:
+    """Per-layer cache. GQA: ring-buffered K/V of min(max_len, window)+pos.
+    MLA: compressed (c_kv, k_rope) — the 512+64 per-token cache."""
+    dtype = dtype or cfg.compute_dtype
+    if cfg.kv_lora_rank:
+        return {
+            "c": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "kr": jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype),
+        }
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def gqa_decode(p: dict, x: Array, cache: dict, pos: Array, cfg,
+               *, windowed: bool = False) -> tuple[Array, dict]:
+    """One-token decode. x (B,1,d); cache K/V (B,C,KV,hd); pos scalar.
+
+    If windowed, the cache is a ring buffer of size C=window: slot =
+    pos % C, and entries older than pos−window are masked out.
+    """
+    b = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    cap = cache["k"].shape[1]
+    q = linear(p["wq"], x).reshape(b, 1, H, hd)
+    k = linear(p["wk"], x).reshape(b, 1, KV, hd)
+    v = linear(p["wv"], x).reshape(b, 1, KV, hd)
+    posv = jnp.full((b, 1), pos, jnp.int32)
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k = apply_rope(k, posv, cfg.rope_theta)
+    slot = pos % cap if windowed else pos
+    cache = {"k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, 1),
+             "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, 1)}
+    kc, vc = cache["k"], cache["v"]
+    qg = _group_heads(q, KV)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   kc.astype(jnp.float32)) / jnp.sqrt(hd)
+    idx = jnp.arange(cap)
+    if windowed:
+        # entry slot i holds absolute position: reconstruct from ring layout
+        abs_pos = jnp.where(idx <= slot, pos - (slot - idx),
+                            pos - (slot + cap - idx))
+        valid = (abs_pos >= 0) & (abs_pos > pos - cap)
+    else:
+        valid = idx <= pos
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", pr, vc.astype(jnp.float32))
+    out = out.reshape(b, 1, H * hd).astype(x.dtype)
+    return linear(p["wo"], out), cache
+
+
+def mla_decode(p: dict, x: Array, cache: dict, pos: Array, cfg,
+               *, windowed: bool = False) -> tuple[Array, dict]:
+    """Absorbed MLA decode: score and output computed in the r-dim latent
+    space so the per-token cache is only r + rope_dim floats. If windowed,
+    the compressed cache is a ring buffer of the sliding window."""
+    b = x.shape[0]
+    H, hd, dr, r = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim, cfg.kv_lora_rank
+    cap = cache["c"].shape[1]
+    q = linear(p["wq"], x).reshape(b, 1, H, hd + dr)
+    posv = jnp.full((b, 1), pos, jnp.int32)
+    qn, qr = q[..., :hd], apply_rope(q[..., hd:], posv, cfg.rope_theta)
+    c_new = rmsnorm(p["kv_norm"], linear(p["w_dkv"], x))        # (B,1,r)
+    kr_new = apply_rope(linear(p["w_kr"], x).reshape(b, 1, 1, dr),
+                        posv, cfg.rope_theta).reshape(b, 1, dr)
+    slot = pos % cap if windowed else pos
+    cache = {"c": jax.lax.dynamic_update_slice_in_dim(cache["c"], c_new, slot, 1),
+             "kr": jax.lax.dynamic_update_slice_in_dim(cache["kr"], kr_new, slot, 1)}
+    cc, krc = cache["c"], cache["kr"]                           # (B,C,r),(B,C,dr)
+    # absorb W_uk into q: q_lat (B,1,H,r)
+    wuk = p["w_uk"]["w"].reshape(r, H, hd)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", qn.astype(jnp.float32),
+                       wuk.astype(jnp.float32))
+    s = (jnp.einsum("bqhr,bsr->bhqs", q_lat, cc.astype(jnp.float32))
+         + jnp.einsum("bqhd,bsd->bhqs", qr.astype(jnp.float32),
+                      krc.astype(jnp.float32))) / jnp.sqrt(hd + dr)
+    idx = jnp.arange(cap)
+    if windowed:
+        abs_pos = jnp.where(idx <= slot, pos - (slot - idx),
+                            pos - (slot + cap - idx))
+        valid = (abs_pos >= 0) & (abs_pos > pos - cap)
+    else:
+        valid = idx <= pos
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhqs,bsr->bqhr", pr, cc.astype(jnp.float32))  # latent ctx
+    wuv = p["w_uv"]["w"].reshape(r, H, hd)
+    out = jnp.einsum("bqhr,rhd->bqhd", ctx, wuv.astype(jnp.float32))
+    out = out.reshape(b, 1, H * hd).astype(x.dtype)
+    return linear(p["wo"], out), cache
+
+
+def attention_decode(p, x, cache, pos, cfg, *, windowed=False):
+    if cfg.kv_lora_rank:
+        return mla_decode(p, x, cache, pos, cfg, windowed=windowed)
+    return gqa_decode(p, x, cache, pos, cfg, windowed=windowed)

@@ -1,0 +1,98 @@
+"""The paper's 4-layer FEMNIST CNN (§VII.A) + ModelAPI adapter.
+
+[Conv2D(32) → MaxPool → Conv2D(64) → MaxPool → Dense(2048) → Dense(62)]
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.baselines import ModelAPI
+
+Array = jax.Array
+PyTree = Any
+
+
+def init_cnn(key: Array, cfg) -> PyTree:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    c1, c2 = cfg.channels
+    ksz = cfg.kernel
+    # image 28x28 -> pool -> 14x14 -> pool -> 7x7
+    flat = (cfg.image_size // 4) ** 2 * c2
+    he = lambda k, shape, fan: (jax.random.normal(k, shape) / jnp.sqrt(fan)
+                                ).astype(jnp.float32)
+    return {
+        "conv1": {"w": he(k1, (ksz, ksz, 1, c1), ksz * ksz),
+                  "b": jnp.zeros((c1,))},
+        "conv2": {"w": he(k2, (ksz, ksz, c1, c2), ksz * ksz * c1),
+                  "b": jnp.zeros((c2,))},
+        "fc1": {"w": he(k3, (flat, cfg.hidden), flat),
+                "b": jnp.zeros((cfg.hidden,))},
+        "fc2": {"w": he(k4, (cfg.hidden, cfg.num_classes), cfg.hidden),
+                "b": jnp.zeros((cfg.num_classes,))},
+    }
+
+
+def _conv(p, x):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def _maxpool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def features(params: PyTree, x: Array) -> Array:
+    """x: (B, 28, 28) or (B, 28, 28, 1) -> penultimate features (B, hidden)."""
+    if x.ndim == 3:
+        x = x[..., None]
+    h = _maxpool(jax.nn.relu(_conv(params["conv1"], x)))
+    h = _maxpool(jax.nn.relu(_conv(params["conv2"], h)))
+    h = h.reshape(h.shape[0], -1)
+    return jax.nn.relu(h @ params["fc1"]["w"] + params["fc1"]["b"])
+
+
+def head(params: PyTree, f: Array) -> Array:
+    return f @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+def apply(params: PyTree, x: Array) -> Array:
+    return head(params, features(params, x))
+
+
+def loss_fn(params: PyTree, batch: tuple) -> Array:
+    x, y = batch
+    logits = apply(params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+
+
+def make_model_api(cfg) -> ModelAPI:
+    return ModelAPI(
+        init=lambda key: init_cnn(key, cfg),
+        apply=apply,
+        features=features,
+        head=head,
+        feature_dim=cfg.hidden,
+        num_classes=cfg.num_classes,
+    )
+
+
+def evaluate(params: PyTree, images: Array, labels: Array,
+             batch: int = 512) -> tuple[float, float]:
+    """(test_loss, test_accuracy) over a dataset, batched."""
+    n = images.shape[0]
+    tot_l, tot_c = 0.0, 0.0
+    apply_j = jax.jit(apply)
+    for i in range(0, n, batch):
+        xb, yb = images[i:i + batch], labels[i:i + batch]
+        logits = apply_j(params, xb)
+        logp = jax.nn.log_softmax(logits, -1)
+        tot_l += float(-jnp.sum(jnp.take_along_axis(logp, yb[..., None], -1)))
+        tot_c += float(jnp.sum(jnp.argmax(logits, -1) == yb))
+    return tot_l / n, tot_c / n

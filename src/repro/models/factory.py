@@ -1,0 +1,72 @@
+"""Model factory: ArchConfig -> (init, loss, forward, decode) fns.
+
+The single entry point the launch/ layer and smoke tests use; dispatches on
+``cfg.arch_type`` and the input shape kind.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, transformer
+
+Array = jax.Array
+PyTree = Any
+
+
+class ModelFns(NamedTuple):
+    init: Callable[[Array], PyTree]
+    loss: Callable[..., Array]                 # (params, batch, **kw)
+    forward: Callable[..., Array]              # (params, batch, **kw) -> logits
+    init_decode_cache: Callable[..., PyTree]   # (batch, seq_len, **kw)
+    decode_step: Callable[..., tuple]          # (params, cache, tokens, pos)
+
+
+def build(cfg) -> ModelFns:
+    if cfg.is_encoder_decoder:
+        return ModelFns(
+            init=lambda key: encdec.init_encdec(cfg, key),
+            loss=lambda params, batch, **kw: encdec.encdec_loss(
+                cfg, params, batch, **kw),
+            forward=lambda params, batch, **kw: encdec.forward(
+                cfg, params, batch, **kw),
+            init_decode_cache=lambda batch, seq_len, **kw:
+                encdec.init_decode_cache(cfg, batch, seq_len, **kw),
+            decode_step=lambda params, cache, tokens, pos, **kw:
+                encdec.decode_step(cfg, params, cache, tokens, pos, **kw),
+        )
+
+    def fwd(params, batch, **kw):
+        logits, _ = transformer.forward(
+            cfg, params, batch["tokens"],
+            prefix_embeds=batch.get("vision_embeds"), **kw)
+        return logits
+
+    return ModelFns(
+        init=lambda key: transformer.init_lm(cfg, key),
+        loss=lambda params, batch, **kw: transformer.lm_loss(
+            cfg, params, batch, **kw),
+        forward=fwd,
+        init_decode_cache=lambda batch, seq_len, **kw:
+            transformer.init_decode_cache(cfg, batch, seq_len, **kw),
+        decode_step=lambda params, cache, tokens, pos, **kw:
+            transformer.decode_step(cfg, params, cache, tokens, pos, **kw),
+    )
+
+
+def make_dummy_batch(cfg, shape, key: Array | None = None) -> dict:
+    """Concrete random batch matching ``configs.input_specs`` (smoke tests)."""
+    from repro.configs import input_specs
+    key = key if key is not None else jax.random.PRNGKey(0)
+    specs = input_specs(cfg, shape)
+    batch = {}
+    for name, spec in specs.items():
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(spec.dtype, jnp.integer):
+            batch[name] = jax.random.randint(sub, spec.shape, 0,
+                                             cfg.vocab_size, spec.dtype)
+        else:
+            batch[name] = jax.random.normal(sub, spec.shape, spec.dtype) * 0.02
+    return batch

@@ -1,0 +1,100 @@
+"""Shared neural building blocks (functional, params = nested dicts)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+def he_init(key: Array, shape: tuple, dtype=jnp.float32) -> Array:
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    return (jax.random.normal(key, shape) / jnp.sqrt(fan_in)).astype(dtype)
+
+
+def init_linear(key: Array, d_in: int, d_out: int, *, bias: bool = False,
+                dtype=jnp.float32) -> dict:
+    p = {"w": he_init(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: dict, x: Array) -> Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: dict, x: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * p["scale"].astype(dt)
+
+
+def init_mlp(key: Array, d_model: int, d_ff: int, *, gated: bool = True,
+             dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"up": init_linear(k1, d_model, d_ff, dtype=dtype),
+         "down": init_linear(k2, d_ff, d_model, dtype=dtype)}
+    if gated:
+        p["gate"] = init_linear(k3, d_model, d_ff, dtype=dtype)
+    return p
+
+
+def mlp(p: dict, x: Array) -> Array:
+    if "gate" in p:  # SwiGLU
+        return linear(p["down"], jax.nn.silu(linear(p["gate"], x)) * linear(p["up"], x))
+    return linear(p["down"], jax.nn.gelu(linear(p["up"], x)))
+
+
+def rope_frequencies(d: int, theta: float = 1e4) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 1e4) -> Array:
+    """Rotary embedding. x: (..., S, H, D) or (..., S, D); positions (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    if x.ndim == angles.ndim + 1:                             # head axis present
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def init_embedding(key: Array, vocab: int, d: int, dtype=jnp.float32) -> dict:
+    return {"table": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def embed(p: dict, tokens: Array, dtype=None) -> Array:
+    t = p["table"]
+    if dtype is not None:
+        t = t.astype(dtype)
+    return jnp.take(t, tokens, axis=0)
+
+
+def unembed(p: dict, x: Array) -> Array:
+    return x @ p["table"].astype(x.dtype).T
+
+
+def cross_entropy_loss(logits: Array, labels: Array,
+                       valid_vocab: int | None = None) -> Array:
+    """Mean next-token xent; padded vocab ids are masked to -inf."""
+    if valid_vocab is not None and valid_vocab < logits.shape[-1]:
+        mask = jnp.arange(logits.shape[-1]) < valid_vocab
+        logits = jnp.where(mask, logits, jnp.finfo(logits.dtype).min)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None].astype(jnp.int32), axis=-1)
+    return jnp.mean(nll)

@@ -1,0 +1,132 @@
+"""Mixture-of-Experts: top-k router + shared experts + expert-parallel FFN.
+
+Two execution paths:
+  * ``dispatch`` (train/prefill): sort-based capacity dispatch — tokens are
+    gathered into an (E, C, d) buffer, processed with a grouped matmul
+    (einsum over the expert axis, shardable expert-parallel over 'model'),
+    and combined back weighted by the gate. Overflowing tokens drop (the
+    standard TPU MoE; capacity_factor controls the drop rate).
+  * ``dense`` (decode): with only a handful of tokens, compute all experts
+    and combine with the gate mask — weight-read (memory) bound, which is
+    the true MoE-decode roofline.
+
+Aux load-balance loss follows Switch/GShard: E · Σ_e f_e · p_e.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import he_init, linear
+
+Array = jax.Array
+
+
+def init_moe(key: Array, cfg, *, dtype=None) -> dict:
+    dtype = dtype or cfg.param_dtype
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": {"w": he_init(ks[0], (d, E), jnp.float32)},  # fp32 router
+        "w_gate": he_init(ks[1], (E, d, ff), dtype),
+        "w_up": he_init(ks[2], (E, d, ff), dtype),
+        "w_down": he_init(ks[3], (E, ff, d), dtype),
+    }
+    if cfg.n_shared_experts:
+        from .layers import init_mlp
+        p["shared"] = init_mlp(ks[4], d, ff * cfg.n_shared_experts,
+                               gated=True, dtype=dtype)
+    return p
+
+
+def router_probs(p: dict, x: Array) -> Array:
+    """(N, d) -> (N, E) softmax router probabilities (fp32)."""
+    logits = x.astype(jnp.float32) @ p["router"]["w"]
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def load_balance_loss(probs: Array, expert_idx: Array, n_experts: int) -> Array:
+    """Switch aux loss: E · Σ_e (fraction of tokens to e)·(mean prob of e)."""
+    me = jnp.mean(probs, axis=0)                                 # (E,)
+    counts = jnp.sum(jax.nn.one_hot(expert_idx, n_experts), axis=(0, 1))
+    ce = counts / jnp.maximum(jnp.sum(counts), 1.0)
+    return n_experts * jnp.sum(me * ce)
+
+
+def moe_dispatch(p: dict, x: Array, cfg) -> tuple[Array, Array]:
+    """Sort-based capacity MoE. x (..., d) -> (same shape, aux_loss)."""
+    orig_shape = x.shape
+    d, E, k = cfg.d_model, cfg.n_experts, cfg.top_k
+    xf = x.reshape(-1, d)
+    n = xf.shape[0]
+    cap = max(1, int(n * k / E * cfg.capacity_factor))
+
+    probs = router_probs(p, xf)                                  # (N, E)
+    gate, expert_idx = jax.lax.top_k(probs, k)                   # (N, k)
+    gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+    aux = load_balance_loss(probs, expert_idx, E)
+
+    # flatten (token, slot) pairs and rank them within their expert
+    flat_e = expert_idx.reshape(-1)                              # (N*k,)
+    flat_g = gate.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(n), k)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)          # (N*k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot               # rank within expert
+    rank = jnp.sum(pos_in_e * onehot, axis=-1)                   # (N*k,)
+    keep = rank < cap
+    slot = flat_e * cap + jnp.where(keep, rank, 0)               # (N*k,)
+
+    # scatter tokens into the (E*cap, d) buffer (dropped -> slot unused ok: we
+    # scatter with an explicit validity weight so collisions can't corrupt)
+    buf = jnp.zeros((E * cap, d), xf.dtype)
+    src = jnp.where(keep[:, None], xf[flat_t], 0)
+    buf = buf.at[slot].add(src, mode="drop")
+    buf = buf.reshape(E, cap, d)
+
+    # grouped expert FFN (SwiGLU), expert-parallel over the E axis
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(buf.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(buf.dtype))
+    h = jax.nn.silu(g) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(buf.dtype))
+
+    # combine back: gather each kept (token, slot) pair and weight by gate
+    out_flat = out_buf.reshape(E * cap, d)[slot]                 # (N*k, d)
+    out_flat = out_flat * (flat_g * keep)[:, None]
+    out = jnp.zeros_like(xf).at[flat_t].add(out_flat)
+
+    if cfg.n_shared_experts:
+        from .layers import mlp
+        out = out + mlp(p["shared"], xf)
+    return out.reshape(orig_shape), aux
+
+
+def moe_dense(p: dict, x: Array, cfg) -> tuple[Array, Array]:
+    """Decode-path MoE: all experts computed for the (few) tokens, masked
+    combine. FLOPs = N·E·ffn but N is tiny; bytes = full expert weights."""
+    orig_shape = x.shape
+    d, E, k = cfg.d_model, cfg.n_experts, cfg.top_k
+    xf = x.reshape(-1, d)
+    probs = router_probs(p, xf)
+    gate, expert_idx = jax.lax.top_k(probs, k)
+    gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+    aux = load_balance_loss(probs, expert_idx, E)
+    combine = jnp.zeros((xf.shape[0], E), jnp.float32)
+    combine = jnp.sum(
+        jax.nn.one_hot(expert_idx, E) * gate[..., None], axis=1)  # (N, E)
+    g = jnp.einsum("nd,edf->enf", xf, p["w_gate"].astype(xf.dtype))
+    u = jnp.einsum("nd,edf->enf", xf, p["w_up"].astype(xf.dtype))
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("enf,efd->end", h, p["w_down"].astype(xf.dtype))
+    out = jnp.einsum("end,ne->nd", y.astype(jnp.float32), combine)
+    out = out.astype(xf.dtype)
+    if cfg.n_shared_experts:
+        from .layers import mlp
+        out = out + mlp(p["shared"], xf)
+    return out.reshape(orig_shape), aux
+
+
+def moe_forward(p: dict, x: Array, cfg, *, decode: bool = False):
+    n_tokens = x.size // cfg.d_model
+    if decode or n_tokens < 4 * cfg.n_experts:
+        return moe_dense(p, x, cfg)
+    return moe_dispatch(p, x, cfg)

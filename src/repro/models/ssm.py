@@ -1,0 +1,198 @@
+"""Mamba2 SSD (state-space duality) blocks — arXiv:2405.21060.
+
+Chunked dual form: within a chunk (Q=cfg.ssm_chunk, MXU-aligned) the output
+is a masked quadratic "attention-like" term; across chunks a recurrent state
+(B, H, N, P) is carried by ``lax.scan``. ``ssd_reference`` materializes the
+full S×S semiseparable matrix (the test oracle; also the Pallas kernel ref).
+
+Decode is the O(1) recurrent update: h ← h·exp(dtA) + dt·B⊗x, y = C·h.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import he_init, init_rmsnorm, rmsnorm
+
+Array = jax.Array
+
+
+def init_mamba_block(key: Array, cfg, *, dtype=None) -> dict:
+    dtype = dtype or cfg.param_dtype
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    W = cfg.ssm_conv_width
+    conv_ch = di + 2 * N
+    ks = jax.random.split(key, 6)
+    return {
+        # in_proj emits [x (di), z (di), B (N), C (N)]; dt has its own proj
+        "in_proj": {"w": he_init(ks[0], (d, 2 * di + 2 * N), dtype)},
+        "dt_proj": {"w": he_init(ks[1], (d, H), dtype),
+                    "bias": jnp.zeros((H,), jnp.float32)},
+        "conv_w": (jax.random.normal(ks[2], (W, conv_ch)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": init_rmsnorm(di, dtype),
+        "out_proj": {"w": he_init(ks[3], (di, d), dtype)},
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv1d. x (B,S,C), w (W,C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(W))
+    return out + b[None, None, :]
+
+
+def _segsum(a: Array) -> Array:
+    """Lower-triangular pairwise cumulative sums: out[i,j] = Σ_{j<t<=i} a_t."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: Array, dt: Array, A: Array, B: Array, C: Array,
+                chunk: int, init_state: Array | None = None
+                ) -> tuple[Array, Array]:
+    """Chunked SSD scan.
+
+    Args:
+      x: (Bt, S, H, P) inner activations. dt: (Bt, S, H) (post-softplus).
+      A: (H,) negative decay rates. B, C: (Bt, S, N) (ngroups=1).
+      chunk: intra-chunk length Q (MXU-aligned, default 128).
+      init_state: optional (Bt, H, N, P) initial state.
+    Returns: (y (Bt,S,H,P), final_state (Bt,H,N,P)).
+    """
+    bt, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    xr = x.reshape(bt, nc, chunk, h, p)
+    dtr = dt.reshape(bt, nc, chunk, h)
+    Br = B.reshape(bt, nc, chunk, n)
+    Cr = C.reshape(bt, nc, chunk, n)
+
+    a = dtr * A[None, None, None, :]                      # (bt,nc,Q,H) log-decay
+    a_hq = jnp.moveaxis(a, -1, -2)                        # (bt,nc,H,Q)
+    cum = jnp.cumsum(a_hq, axis=-1)                       # (bt,nc,H,Q)
+    Lmat = jnp.exp(_segsum(a_hq))                         # (bt,nc,H,Q,Q)
+
+    # intra-chunk (diagonal blocks): Y_ij = (C_i·B_j) L_ij dt_j x_j
+    G = jnp.einsum("bcin,bcjn->bcij", Cr, Br)             # (bt,nc,Q,Q)
+    xd = xr * dtr[..., None]                              # dt-weighted input
+    M = G[:, :, None] * Lmat                              # (bt,nc,H,Q,Q)
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", M, xd)
+
+    # per-chunk new-state contribution: Σ_j exp(cum_Q − cum_j) B_j ⊗ dt_j x_j
+    decay_state = jnp.exp(cum[..., -1:] - cum)            # (bt,nc,H,Q)
+    states = jnp.einsum("bchj,bcjn,bcjhp->bchnp",
+                        decay_state, Br, xd)              # (bt,nc,H,N,P)
+    chunk_decay = jnp.exp(cum[..., -1])                   # (bt,nc,H)
+
+    def scan_fn(carry, inp):
+        st = carry                                        # (bt,H,N,P)
+        new_states, cdecay = inp
+        out_prev = st
+        st = st * cdecay[..., None, None] + new_states
+        return st, out_prev
+
+    st0 = init_state if init_state is not None else \
+        jnp.zeros((bt, h, n, p), x.dtype)
+    final, prev_states = jax.lax.scan(
+        scan_fn, st0.astype(jnp.float32),
+        (jnp.moveaxis(states, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(chunk_decay, 1, 0).astype(jnp.float32)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)         # (bt,nc,H,N,P)
+
+    # inter-chunk (off-diagonal): Y_i += exp(cum_i) C_i · S_prev
+    state_decay = jnp.exp(cum)                            # (bt,nc,H,Q)
+    y_off = jnp.einsum("bcin,bchnp,bchi->bcihp",
+                       Cr.astype(jnp.float32), prev_states, state_decay)
+    y = (y_diag.astype(jnp.float32) + y_off).reshape(bt, s, h, p)
+    return y.astype(x.dtype), final.astype(x.dtype)
+
+
+def ssd_reference(x: Array, dt: Array, A: Array, B: Array, C: Array
+                  ) -> Array:
+    """Naive O(S²) semiseparable materialization (oracle)."""
+    bt, s, h, p = x.shape
+    a = jnp.moveaxis(dt * A[None, None, :], -1, -2)       # (bt,H,S)
+    Lmat = jnp.exp(_segsum(a))                            # (bt,H,S,S)
+    G = jnp.einsum("bin,bjn->bij", C, B)                  # (bt,S,S)
+    M = G[:, None] * Lmat
+    xd = x * dt[..., None]
+    return jnp.einsum("bhij,bjhp->bihp", M, xd)
+
+
+def mamba_forward(p: dict, x: Array, cfg, *, init_state=None,
+                  return_state: bool = False):
+    """Full Mamba2 block: in_proj → conv → SSD → gated norm → out_proj."""
+    bt, s, d = x.shape
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    proj = x @ p["in_proj"]["w"].astype(x.dtype)
+    xi, z, Bv, Cv = jnp.split(proj, [di, 2 * di, 2 * di + N], axis=-1)
+    xBC = jnp.concatenate([xi, Bv, Cv], axis=-1)
+    xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"].astype(x.dtype),
+                                   p["conv_b"].astype(x.dtype)))
+    xi, Bv, Cv = jnp.split(xBC, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(
+        (x @ p["dt_proj"]["w"].astype(x.dtype)).astype(jnp.float32)
+        + p["dt_proj"]["bias"])                           # (bt,S,H)
+    A = -jnp.exp(p["A_log"])                              # (H,)
+    xh = xi.reshape(bt, s, H, P)
+    chunk = min(cfg.ssm_chunk, s)          # short sequences: single chunk
+    y, state = ssd_chunked(xh, dt, A, Bv, Cv, chunk,
+                           init_state=init_state)
+    y = y + xh * p["D"].astype(y.dtype)[None, None, :, None]  # skip connection
+    y = y.reshape(bt, s, di).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = y @ p["out_proj"]["w"].astype(x.dtype)
+    if return_state:
+        return out, state
+    return out
+
+
+def init_ssm_state(cfg, batch: int, dtype=None) -> dict:
+    dtype = dtype or cfg.compute_dtype
+    H, N, P = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    conv_ch = cfg.d_inner + 2 * N
+    return {
+        "h": jnp.zeros((batch, H, N, P), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+    }
+
+
+def mamba_decode(p: dict, x: Array, state: dict, cfg) -> tuple[Array, dict]:
+    """One-token recurrent update. x (B,1,d)."""
+    bt = x.shape[0]
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x @ p["in_proj"]["w"].astype(x.dtype)
+    xi, z, Bv, Cv = jnp.split(proj, [di, 2 * di, 2 * di + N], axis=-1)
+    xBC = jnp.concatenate([xi, Bv, Cv], axis=-1)          # (B,1,C)
+    conv_buf = jnp.concatenate([state["conv"], xBC], axis=1)  # (B,W,C)
+    w = p["conv_w"].astype(x.dtype)
+    out = jnp.sum(conv_buf * w[None], axis=1, keepdims=True) \
+        + p["conv_b"].astype(x.dtype)[None, None]
+    xBC = jax.nn.silu(out)
+    new_conv = conv_buf[:, 1:]
+    xi, Bv, Cv = jnp.split(xBC, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(
+        (x @ p["dt_proj"]["w"].astype(x.dtype)).astype(jnp.float32)
+        + p["dt_proj"]["bias"])[:, 0]                     # (B,H)
+    A = -jnp.exp(p["A_log"])
+    xh = xi.reshape(bt, H, P)
+    Bv, Cv = Bv[:, 0], Cv[:, 0]                           # (B,N)
+    h = state["h"].astype(jnp.float32)
+    decay = jnp.exp(dt * A[None, :])                      # (B,H)
+    h = h * decay[..., None, None] + jnp.einsum(
+        "bn,bhp,bh->bhnp", Bv.astype(jnp.float32), xh.astype(jnp.float32), dt)
+    y = jnp.einsum("bn,bhnp->bhp", Cv.astype(jnp.float32), h)
+    y = y + xh.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(bt, 1, di).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = y @ p["out_proj"]["w"].astype(x.dtype)
+    return out, {"h": h.astype(state["h"].dtype), "conv": new_conv}

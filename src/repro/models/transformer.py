@@ -1,0 +1,305 @@
+"""Decoder-only transformer stack builder (dense / moe / ssm / hybrid / vlm).
+
+Layers are homogeneous and *stacked* (leading L axis) so the forward pass is
+a single ``lax.scan`` over layers — one-layer HLO regardless of depth (fast
+compiles at 60–81 layers) and a natural remat boundary.
+
+Hybrid (Zamba2): stacked Mamba2 layers with ONE shared attention+MLP block
+(weight sharing) applied every ``attn_every`` layers, via an outer loop over
+segments with an inner scan.
+
+VLM: ``prefix_embeds`` (precomputed ViT patch embeddings, stub frontend) are
+concatenated in front of the token embeddings; logits/labels cover the text
+part only.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from .layers import (
+    cross_entropy_loss,
+    embed,
+    init_embedding,
+    init_mlp,
+    init_rmsnorm,
+    mlp,
+    rmsnorm,
+    unembed,
+)
+
+Array = jax.Array
+PyTree = Any
+
+
+def _init_stack(key: Array, n: int, init_one):
+    return jax.vmap(init_one)(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init
+# ---------------------------------------------------------------------------
+
+def _init_attn_layer(cfg, dtype):
+    def init_one(k):
+        k1, k2 = jax.random.split(k)
+        p = {"ln1": init_rmsnorm(cfg.d_model, dtype),
+             "attn": attn.init_attention(k1, cfg, dtype=dtype),
+             "ln2": init_rmsnorm(cfg.d_model, dtype)}
+        if cfg.arch_type == "moe":
+            p["moe"] = moe_lib.init_moe(k2, cfg, dtype=dtype)
+        else:
+            p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff,
+                                gated=cfg.gated_mlp, dtype=dtype)
+        return p
+    return init_one
+
+
+def _init_mamba_layer(cfg, dtype):
+    def init_one(k):
+        return {"ln1": init_rmsnorm(cfg.d_model, dtype),
+                "mamba": ssm_lib.init_mamba_block(k, cfg, dtype=dtype)}
+    return init_one
+
+
+def init_lm(cfg, key: Array) -> PyTree:
+    dtype = cfg.param_dtype
+    k_emb, k_layers, k_shared, k_head = jax.random.split(key, 4)
+    params: dict = {
+        "embed": init_embedding(k_emb, cfg.padded_vocab, cfg.d_model, dtype),
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_embedding(k_head, cfg.padded_vocab,
+                                           cfg.d_model, dtype)
+    if cfg.arch_type in ("dense", "moe", "vlm"):
+        params["layers"] = _init_stack(k_layers, cfg.num_layers,
+                                       _init_attn_layer(cfg, dtype))
+    elif cfg.arch_type == "ssm":
+        params["layers"] = _init_stack(k_layers, cfg.num_layers,
+                                       _init_mamba_layer(cfg, dtype))
+    elif cfg.arch_type == "hybrid":
+        params["layers"] = _init_stack(k_layers, cfg.num_layers,
+                                       _init_mamba_layer(cfg, dtype))
+        # ONE shared attention+MLP block, reused every attn_every layers
+        params["shared_attn"] = _init_attn_layer(
+            cfg.with_(arch_type="dense"), dtype)(k_shared)
+    else:
+        raise ValueError(cfg.arch_type)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer application (train/prefill)
+# ---------------------------------------------------------------------------
+
+def _attn_layer_fwd(cfg, p, x, positions, *, window, impl, decode=False):
+    h = x + attn.attention_forward(
+        p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps), positions, cfg,
+        causal=True, window=window, impl=impl)
+    hn = rmsnorm(p["ln2"], h, cfg.norm_eps)
+    if "moe" in p:
+        y, aux = moe_lib.moe_forward(p["moe"], hn, cfg, decode=decode)
+    else:
+        y, aux = mlp(p["mlp"], hn), jnp.zeros((), jnp.float32)
+    return h + y, aux
+
+
+def _mamba_layer_fwd(cfg, p, x):
+    out = ssm_lib.mamba_forward(p["mamba"],
+                                rmsnorm(p["ln1"], x, cfg.norm_eps), cfg)
+    return x + out.astype(x.dtype)
+
+
+def forward(cfg, params: PyTree, tokens: Array, *,
+            prefix_embeds: Array | None = None,
+            window: int | None = None, attn_impl: str = "auto",
+            remat: bool = False, act_sharding=None) -> tuple[Array, Array]:
+    """Token ids (+optional prefix embeddings) -> (logits, aux_loss).
+
+    logits cover only the token positions (text part for VLM).
+
+    act_sharding (§Perf iteration 5): a NamedSharding pinned to the residual
+    stream (B, S, d) at every layer boundary. Without it, SPMD propagates
+    the FSDP weight sharding INTO the activations (batch replicated over
+    'data', features sharded over 'model'), duplicating data-parallel
+    compute and paying a full activation all-reduce per layer.
+    """
+    def pin(h):
+        if act_sharding is None:
+            return h
+        return jax.lax.with_sharding_constraint(h, act_sharding)
+
+    x = pin(embed(params["embed"], tokens, cfg.compute_dtype))
+    n_prefix = 0
+    if prefix_embeds is not None:
+        n_prefix = prefix_embeds.shape[1]
+        x = pin(jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1))
+    s = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s), x.shape[:2])
+
+    if cfg.arch_type in ("dense", "moe", "vlm"):
+        def body(carry, layer_p):
+            h, aux = carry
+            h, a = _attn_layer_fwd(cfg, layer_p, pin(h), positions,
+                                   window=window, impl=attn_impl)
+            return (pin(h), aux + a), None
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["layers"])
+    elif cfg.arch_type == "ssm":
+        def body(h, layer_p):
+            return pin(_mamba_layer_fwd(cfg, layer_p, pin(h))), None
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        aux = jnp.zeros((), jnp.float32)
+    elif cfg.arch_type == "hybrid":
+        def body(h, layer_p):
+            return pin(_mamba_layer_fwd(cfg, layer_p, pin(h))), None
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        aux = jnp.zeros((), jnp.float32)
+        k = cfg.attn_every
+        sp = params["shared_attn"]
+        for start in range(0, cfg.num_layers, k):
+            stop = min(start + k, cfg.num_layers)
+            seg = jax.tree.map(lambda l: l[start:stop], params["layers"])
+            x, _ = jax.lax.scan(body, x, seg)
+            x, a = _attn_layer_fwd(cfg, sp, pin(x), positions,
+                                   window=window, impl=attn_impl)
+            x = pin(x)
+            aux = aux + a
+    else:
+        raise ValueError(cfg.arch_type)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    head = params.get("lm_head", params["embed"])
+    return unembed(head, x), aux
+
+
+def lm_loss(cfg, params: PyTree, batch: dict, *, window=None,
+            attn_impl="auto", remat=False, aux_weight: float = 0.01,
+            act_sharding=None) -> Array:
+    """Mean next-token cross-entropy (+ MoE load-balance aux)."""
+    logits, aux = forward(cfg, params, batch["tokens"],
+                          prefix_embeds=batch.get("vision_embeds"),
+                          window=window, attn_impl=attn_impl, remat=remat,
+                          act_sharding=act_sharding)
+    loss = cross_entropy_loss(logits[:, :-1], batch["labels"][:, 1:],
+                              valid_vocab=cfg.vocab_size)
+    return loss + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(cfg, batch: int, seq_len: int, *, windowed=False,
+                      dtype=None) -> PyTree:
+    """Stacked per-layer cache. Attention archs: KV cache of capacity
+    min(seq_len, window) when windowed (ring buffer). SSM archs: O(1) state."""
+    dtype = dtype or cfg.compute_dtype
+    cap = min(seq_len, cfg.sliding_window) if windowed else seq_len
+
+    def stack(make_one):
+        return jax.tree.map(lambda l: jnp.stack([l] * cfg.num_layers),
+                            make_one())
+
+    if cfg.arch_type in ("dense", "moe", "vlm"):
+        return {"layers": stack(lambda: attn.init_kv_cache(cfg, batch, cap, dtype))}
+    if cfg.arch_type == "ssm":
+        return {"layers": stack(lambda: ssm_lib.init_ssm_state(cfg, batch, dtype))}
+    if cfg.arch_type == "hybrid":
+        return {
+            "layers": stack(lambda: ssm_lib.init_ssm_state(cfg, batch, dtype)),
+            # one shared-attn KV cache PER segment call site (weights are
+            # shared; the caches are not)
+            "shared_segments": jax.tree.map(
+                lambda l: jnp.stack([l] * _num_segments(cfg)),
+                attn.init_kv_cache(cfg, batch, cap, dtype)),
+        }
+    raise ValueError(cfg.arch_type)
+
+
+def _num_segments(cfg) -> int:
+    return -(-cfg.num_layers // cfg.attn_every)
+
+
+def decode_step(cfg, params: PyTree, cache: PyTree, tokens: Array,
+                pos: Array, *, windowed: bool = False
+                ) -> tuple[Array, PyTree]:
+    """One-token decode. tokens (B,1); pos scalar int32 (current position)."""
+    x = embed(params["embed"], tokens, cfg.compute_dtype)
+
+    if cfg.arch_type in ("dense", "moe", "vlm"):
+        def body(h, inp):
+            layer_p, layer_cache = inp
+            a_out, new_cache = attn.attention_decode(
+                layer_p["attn"], rmsnorm(layer_p["ln1"], h, cfg.norm_eps),
+                layer_cache, pos, cfg, windowed=windowed)
+            h = h + a_out
+            hn = rmsnorm(layer_p["ln2"], h, cfg.norm_eps)
+            if "moe" in layer_p:
+                y, _ = moe_lib.moe_forward(layer_p["moe"], hn, cfg, decode=True)
+            else:
+                y = mlp(layer_p["mlp"], hn)
+            return h + y, new_cache
+        x, new_layer_cache = jax.lax.scan(
+            body, x, (params["layers"], cache["layers"]))
+        cache = {"layers": new_layer_cache}
+    elif cfg.arch_type == "ssm":
+        def body(h, inp):
+            layer_p, layer_state = inp
+            out, new_state = ssm_lib.mamba_decode(
+                layer_p["mamba"], rmsnorm(layer_p["ln1"], h, cfg.norm_eps),
+                layer_state, cfg)
+            return h + out, new_state
+        x, new_layer_cache = jax.lax.scan(
+            body, x, (params["layers"], cache["layers"]))
+        cache = {"layers": new_layer_cache}
+    elif cfg.arch_type == "hybrid":
+        sp = params["shared_attn"]
+        k = cfg.attn_every
+        new_states, new_shared = [], []
+        for seg_i, start in enumerate(range(0, cfg.num_layers, k)):
+            stop = min(start + k, cfg.num_layers)
+            seg_p = jax.tree.map(lambda l: l[start:stop], params["layers"])
+            seg_c = jax.tree.map(lambda l: l[start:stop], cache["layers"])
+            def body(h, inp):
+                layer_p, layer_state = inp
+                out, new_state = ssm_lib.mamba_decode(
+                    layer_p["mamba"], rmsnorm(layer_p["ln1"], h, cfg.norm_eps),
+                    layer_state, cfg)
+                return h + out, new_state
+            x, seg_new = jax.lax.scan(body, x, (seg_p, seg_c))
+            new_states.append(seg_new)
+            shared_c = jax.tree.map(lambda l: l[seg_i],
+                                    cache["shared_segments"])
+            a_out, shared_new = attn.attention_decode(
+                sp["attn"], rmsnorm(sp["ln1"], x, cfg.norm_eps),
+                shared_c, pos, cfg, windowed=windowed)
+            x = x + a_out
+            x = x + mlp(sp["mlp"], rmsnorm(sp["ln2"], x, cfg.norm_eps))
+            new_shared.append(shared_new)
+        cache = {
+            "layers": jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *new_states),
+            "shared_segments": jax.tree.map(
+                lambda *xs: jnp.stack(xs, axis=0), *new_shared),
+        }
+    else:
+        raise ValueError(cfg.arch_type)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params.get("lm_head", params["embed"])
+    return unembed(head, x), cache

@@ -1,0 +1,117 @@
+"""Minimal optax-style optimizers (client-side and FedOpt server-side).
+
+Implements the optimizers the paper uses/compares: SGD (Eq. 3), server
+momentum (FedAvgM), Adagrad/Adam/Yogi (FedAdagrad/FedAdam/FedYogi, Reddi et
+al. 2021). Each optimizer is an (init, update) pair over pytrees; ``update``
+returns additive updates: ``params_new = params + updates``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        return jax.tree.map(lambda g: -lr * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, m, params=None):
+        m = jax.tree.map(lambda mm, g: beta * mm + g, m, grads)
+        if nesterov:
+            upd = jax.tree.map(lambda mm, g: -lr * (beta * mm + g), m, grads)
+        else:
+            upd = jax.tree.map(lambda mm: -lr * mm, m)
+        return upd, m
+
+    return Optimizer(init, update)
+
+
+def adagrad(lr: float, eps: float = 1e-3) -> Optimizer:
+    """FedAdagrad's server optimizer (β1=β2=0, τ=eps in Reddi et al.)."""
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, v, params=None):
+        v = jax.tree.map(lambda vv, g: vv + g * g, v, grads)
+        upd = jax.tree.map(lambda g, vv: -lr * g / (jnp.sqrt(vv) + eps), grads, v)
+        return upd, v
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.99, eps: float = 1e-3) -> Optimizer:
+    def init(params):
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        return (zeros, jax.tree.map(jnp.zeros_like, params), jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        m, v, t = state
+        t = t + 1
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, m, grads)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g * g, v, grads)
+        # bias correction
+        c1 = 1 - b1 ** t.astype(jnp.float32)
+        c2 = 1 - b2 ** t.astype(jnp.float32)
+        upd = jax.tree.map(
+            lambda mm, vv: -lr * (mm / c1) / (jnp.sqrt(vv / c2) + eps), m, v)
+        return upd, (m, v, t)
+
+    return Optimizer(init, update)
+
+
+def yogi(lr: float, b1: float = 0.9, b2: float = 0.99, eps: float = 1e-3) -> Optimizer:
+    """Yogi: additive, sign-controlled second-moment update (Zaheer et al.)."""
+    def init(params):
+        return (jax.tree.map(jnp.zeros_like, params),
+                jax.tree.map(lambda p: jnp.full_like(p, 1e-6), params),
+                jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        m, v, t = state
+        t = t + 1
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, m, grads)
+        v = jax.tree.map(
+            lambda vv, g: vv - (1 - b2) * jnp.sign(vv - g * g) * g * g, v, grads)
+        c1 = 1 - b1 ** t.astype(jnp.float32)
+        upd = jax.tree.map(
+            lambda mm, vv: -lr * (mm / c1) / (jnp.sqrt(jnp.maximum(vv, 0.0)) + eps),
+            m, v)
+        return upd, (m, v, t)
+
+    return Optimizer(init, update)
+
+
+_REGISTRY = {
+    "sgd": sgd,
+    "momentum": momentum,
+    "adagrad": adagrad,
+    "adam": adam,
+    "yogi": yogi,
+}
+
+
+def get(name: str, lr: float, **kw) -> Optimizer:
+    return _REGISTRY[name](lr, **kw)

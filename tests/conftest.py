@@ -1,0 +1,24 @@
+"""Shared fixtures. NOTE: device count stays 1 here (smoke tests and benches
+must see one device); only tests that need a mesh spawn a subprocess with
+XLA_FLAGS, per the dry-run isolation rule."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_selection_instance(rng, f=10, k=20, l_sel=6, max_count=8):
+    """A small GBP-CS instance (A, y, l_sel) with a known-feasible target."""
+    A = rng.integers(0, max_count, size=(f, k)).astype(np.float32)
+    p_real = rng.dirichlet(np.ones(f)).astype(np.float32)
+    n = float(A.sum(0).mean())
+    y = (n * l_sel * p_real).astype(np.float32)
+    return A, y, l_sel
+
+
+@pytest.fixture
+def selection_instance(rng):
+    return make_selection_instance(rng)

@@ -1,0 +1,135 @@
+"""Per-architecture smoke tests: reduced same-family configs (≤2 layers,
+d_model ≤ 512, ≤4 experts) — one forward/train step + one decode step on CPU,
+asserting shapes and no NaNs (assignment requirement f)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.configs.base import InputShape
+from repro.models import build, encdec, make_dummy_batch, transformer
+
+TRAIN_SHAPE = InputShape("smoke_train", 64, 2, "train")
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_reduced_config_is_reduced(arch):
+    cfg = configs.get_smoke_config(arch)
+    assert cfg.num_layers <= 4
+    assert cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg = configs.get_smoke_config(arch)
+    fns = build(cfg)
+    params = fns.init(jax.random.PRNGKey(0))
+    batch = make_dummy_batch(cfg, TRAIN_SHAPE)
+
+    logits = fns.forward(params, batch)
+    s_txt = batch["tokens"].shape[1]
+    assert logits.shape == (2, s_txt, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    # one SGD train step decreases nothing catastrophic & keeps finiteness
+    loss, grads = jax.value_and_grad(
+        lambda p: fns.loss(p, batch))(params)
+    assert bool(jnp.isfinite(loss))
+    new = jax.tree.map(lambda p, g: p - 1e-2 * g, params, grads)
+    loss2 = fns.loss(new, batch)
+    assert bool(jnp.isfinite(loss2))
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_decode_step(arch):
+    cfg = configs.get_smoke_config(arch)
+    fns = build(cfg)
+    params = fns.init(jax.random.PRNGKey(0))
+    b, max_len = 2, 16
+    if cfg.is_encoder_decoder:
+        cache = fns.init_decode_cache(b, max_len, enc_len=8)
+        enc_out = encdec.encode(cfg, params,
+                                jnp.zeros((b, 8, cfg.d_model)))
+        cache = encdec.prefill_cross_cache(cfg, params, cache, enc_out)
+    else:
+        cache = fns.init_decode_cache(b, max_len)
+    toks = jnp.ones((b, 1), jnp.int32)
+    logits, cache = fns.decode_step(params, cache, toks, jnp.int32(0))
+    assert logits.shape == (b, 1, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    logits2, _ = fns.decode_step(params, cache, toks, jnp.int32(1))
+    assert bool(jnp.all(jnp.isfinite(logits2)))
+
+
+@pytest.mark.parametrize("arch", ["granite-8b", "deepseek-v2-236b",
+                                  "mamba2-780m", "zamba2-7b", "dbrx-132b",
+                                  "qwen1.5-4b"])
+def test_decode_matches_prefill(arch):
+    """Incremental decode must reproduce the teacher-forced forward pass."""
+    cfg = configs.get_smoke_config(arch)
+    fns = build(cfg)
+    params = fns.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0,
+                              cfg.vocab_size)
+    full, _ = transformer.forward(cfg, params, toks)
+    cache = fns.init_decode_cache(1, 16)
+    outs = []
+    for i in range(8):
+        lg, cache = fns.decode_step(params, cache, toks[:, i:i + 1],
+                                    jnp.int32(i))
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    err = float(jnp.abs(dec - full).max())
+    assert err < 5e-4, err
+
+
+def test_windowed_ring_decode_matches_windowed_prefill():
+    """Ring-buffer sliding-window decode == windowed attention forward."""
+    cfg = configs.get_smoke_config("granite-8b").with_(sliding_window=4)
+    fns = build(cfg)
+    params = fns.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 10), 0,
+                              cfg.vocab_size)
+    full, _ = transformer.forward(cfg, params, toks, window=4)
+    cache = fns.init_decode_cache(1, 10, windowed=True)
+    outs = []
+    for i in range(10):
+        lg, cache = fns.decode_step(params, cache, toks[:, i:i + 1],
+                                    jnp.int32(i), windowed=True)
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    err = float(jnp.abs(dec - full).max())
+    assert err < 5e-4, err
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    """The full configs carry the exact assigned dimensions."""
+    cfg = configs.get_config(arch)
+    expected = {
+        "deepseek-v2-236b": (60, 5120, 128, 128, 1536, 102400),
+        "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+        "granite-8b": (36, 4096, 32, 8, 14336, 49152),
+        "minitron-8b": (32, 4096, 32, 8, 16384, 256000),
+        "granite-3-2b": (40, 2048, 32, 8, 8192, 49155),
+        "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+        "qwen1.5-4b": (40, 2560, 20, 20, 6912, 151936),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+        "mamba2-780m": (48, 1536, 0, 0, 0, 50280),
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected
+    if arch == "deepseek-v2-236b":
+        assert cfg.kv_lora_rank == 512 and cfg.n_experts == 160 \
+            and cfg.top_k == 6 and cfg.n_shared_experts == 2
+    if arch == "dbrx-132b":
+        assert cfg.n_experts == 16 and cfg.top_k == 4
+    if arch == "mamba2-780m":
+        assert cfg.ssm_state == 128
+    if arch == "zamba2-7b":
+        assert cfg.ssm_state == 64
+    if arch == "qwen1.5-4b":
+        assert cfg.qkv_bias

@@ -1,0 +1,107 @@
+"""Data pipeline: generator determinism, partition skew, streaming FIFO."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data import FactoryStreams, PartitionConfig, femnist, make_partition
+
+
+def test_generator_deterministic():
+    c = np.array([3, 10, 61])
+    w = np.array([7, 7, 7])
+    s = np.array([100, 101, 102])
+    a = femnist.generate_images(c, w, s)
+    b = femnist.generate_images(c, w, s)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (3, 28, 28)
+    assert a.dtype == np.float32
+
+
+def test_class_prototypes_distinct():
+    protos = femnist.class_prototypes()
+    flat = protos.reshape(62, -1)
+    flat = flat / (np.linalg.norm(flat, axis=1, keepdims=True) + 1e-9)
+    sim = flat @ flat.T
+    np.fill_diagonal(sim, 0)
+    assert sim.max() < 0.995, "classes must be distinguishable"
+
+
+def test_writer_styles_vary():
+    s1 = femnist.writer_style(1)
+    s2 = femnist.writer_style(2)
+    assert s1 != s2
+
+
+def test_partition_statistics():
+    cfg = PartitionConfig(num_factories=5, devices_per_factory=10, alpha=0.3)
+    part = make_partition(cfg)
+    assert part.class_probs.shape == (5, 10, 62)
+    np.testing.assert_allclose(part.class_probs.sum(-1), 1.0, atol=1e-5)
+    np.testing.assert_allclose(part.p_real.sum(), 1.0, atol=1e-5)
+    # non-iid: per-device distributions deviate from the global one
+    div = np.linalg.norm(part.class_probs - part.p_real, axis=-1)
+    assert div.mean() > 0.05
+
+
+@settings(max_examples=10, deadline=None)
+@given(alpha=st.floats(0.05, 5.0), seed=st.integers(0, 1000))
+def test_partition_property_valid_distributions(alpha, seed):
+    part = make_partition(PartitionConfig(num_factories=2,
+                                          devices_per_factory=4,
+                                          alpha=alpha, seed=seed))
+    assert np.all(part.class_probs >= 0)
+    np.testing.assert_allclose(part.class_probs.sum(-1), 1.0, atol=1e-4)
+
+
+def test_smaller_alpha_is_more_skewed():
+    d = {}
+    for alpha in (0.1, 2.0):
+        part = make_partition(PartitionConfig(alpha=alpha, seed=3))
+        d[alpha] = float(np.linalg.norm(
+            part.class_probs - part.p_real, axis=-1).mean())
+    assert d[0.1] > d[2.0]
+
+
+def test_streaming_counts_match_next_batch():
+    part = make_partition(PartitionConfig(num_factories=2,
+                                          devices_per_factory=3))
+    s = FactoryStreams(part, batch_size=8, seed=0)
+    counts = s.next_counts()
+    assert counts.shape == (2, 3, 62)
+    assert np.all(counts.sum(-1) == 8)
+    # fetch consumes and rolls the stream forward (FIFO one-shot)
+    masks = np.zeros((2, 3))
+    masks[:, 0] = 1
+    imgs, labs = s.fetch_selected(masks, 1)
+    assert imgs.shape == (2, 1, 8, 28, 28)
+    counts2 = s.next_counts()
+    assert counts2.shape == counts.shape
+    assert not np.array_equal(counts, counts2), "stream must advance"
+
+
+def test_fetch_selected_labels_match_reported_counts():
+    part = make_partition(PartitionConfig(num_factories=1,
+                                          devices_per_factory=4))
+    s = FactoryStreams(part, batch_size=16, seed=1)
+    counts = s.next_counts()
+    masks = np.zeros((1, 4)); masks[0, 2] = 1
+    imgs, labs = s.fetch_selected(masks, 1)
+    got = np.bincount(labs[0, 0], minlength=62)
+    np.testing.assert_array_equal(got, counts[0, 2])
+
+
+def test_baseline_round_sampler():
+    part = make_partition(PartitionConfig(num_factories=2,
+                                          devices_per_factory=4))
+    s = FactoryStreams(part, batch_size=4, seed=0)
+    (imgs, labs), w = s.sample_baseline_round(3, 2, seed=5)
+    assert imgs.shape == (3, 2, 4, 28, 28)
+    assert labs.shape == (3, 2, 4)
+    assert w.shape == (3,)
+
+
+def test_lm_stream():
+    from repro.data.lm_data import MarkovLMStream
+    st_ = MarkovLMStream(vocab=64, seed=0)
+    b = st_.batch(2, 32)
+    assert b["tokens"].shape == (2, 32)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < 64

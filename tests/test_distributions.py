@@ -1,0 +1,59 @@
+"""Class-distribution utilities (Eqs. 2, 6, 10-11)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import distributions as D
+
+
+def test_norm_sums_to_one():
+    v = jnp.asarray([1.0, 2.0, 3.0])
+    np.testing.assert_allclose(float(D.norm(v).sum()), 1.0, rtol=1e-6)
+
+
+def test_estimate_p_real_weighted_by_size():
+    """Eq. 2: larger devices dominate the estimate."""
+    counts = jnp.asarray([[[90, 0], [0, 10]]])  # device0: 90×c0, device1: 10×c1
+    p = D.estimate_p_real(counts)
+    np.testing.assert_allclose(np.asarray(p), [0.9, 0.1], atol=1e-6)
+
+
+def test_divergence_zero_iff_equal():
+    p = jnp.asarray([0.25, 0.75])
+    assert float(D.distribution_divergence(p, p)) == 0.0
+    q = jnp.asarray([0.75, 0.25])
+    assert float(D.distribution_divergence(p, q)) > 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), k=st.integers(1, 10), f=st.integers(2, 20))
+def test_supernode_distribution_property(seed, k, f):
+    rng = np.random.default_rng(seed)
+    counts = rng.integers(0, 10, size=(k, f)).astype(np.float32)
+    mask = (rng.random(k) > 0.5).astype(np.float32)
+    if counts[mask > 0.5].sum() == 0:
+        return
+    p = D.supernode_distribution(jnp.asarray(counts), jnp.asarray(mask))
+    np.testing.assert_allclose(float(p.sum()), 1.0, rtol=1e-5)
+    assert np.all(np.asarray(p) >= 0)
+
+
+def test_class_counts_matches_bincount():
+    labels = jnp.asarray([0, 1, 1, 5, 5, 5])
+    c = D.class_counts(labels, 8)
+    np.testing.assert_array_equal(np.asarray(c), [1, 2, 0, 0, 0, 3, 0, 0])
+
+
+def test_token_bucket_counts_balanced():
+    toks = jnp.arange(64_000) % 5000
+    c = D.token_bucket_counts(toks, 64)
+    assert int(c.sum()) == 64_000
+    assert float(c.max()) < 3.0 * float(c.min() + 1), "hash buckets balanced"
+
+
+def test_selection_objective_matches_divergence_link():
+    """Eq. 10 == 0 implies the supernode distribution hits nL·P_real."""
+    A = jnp.asarray([[4.0, 0.0], [0.0, 4.0]])
+    x = jnp.asarray([1.0, 1.0])
+    y = jnp.asarray([4.0, 4.0])
+    assert float(D.selection_objective(A, x, y)) == 0.0

@@ -1,0 +1,147 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import make_selection_instance
+
+
+# ---------------------------------------------------------------------------
+# gbp_cs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("f,k", [(10, 33), (62, 40), (7, 130), (62, 257)])
+def test_gbp_cs_fused_step_sweep(f, k):
+    from repro.kernels.gbp_cs import ops, ref
+    rng = np.random.default_rng(f * 1000 + k)
+    A, y, l_sel = make_selection_instance(rng, f=f, k=k,
+                                          l_sel=max(2, k // 5))
+    x = np.zeros(k, np.float32)
+    x[rng.choice(k, l_sel, replace=False)] = 1.0
+    xr, dr = ref.fused_step_ref(A, x, y)
+    xk, dk = ops.fused_step(A, x, y)
+    np.testing.assert_array_equal(np.asarray(xr), np.asarray(xk))
+    assert abs(float(dr) - float(dk)) < 1e-2 * max(1.0, float(dr))
+
+
+def test_gbp_cs_residual_distance():
+    from repro.kernels.gbp_cs import ops
+    rng = np.random.default_rng(0)
+    A, y, l_sel = make_selection_instance(rng, f=12, k=50, l_sel=9)
+    x = np.zeros(50, np.float32)
+    x[:9] = 1.0
+    d = float(ops.residual_distance(A, x, y))
+    want = float(np.linalg.norm(A @ x - y))
+    assert abs(d - want) < 1e-3 * max(1.0, want)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,kv,s,d", [(1, 4, 4, 256, 64), (2, 8, 2, 128, 32),
+                                        (1, 4, 1, 256, 128)])
+def test_flash_attention_sweep(b, h, kv, s, d, dtype):
+    from repro.kernels.flash_attention import ops, ref
+    ks = jax.random.split(jax.random.PRNGKey(b * 100 + h), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, d), dtype)
+    qt, kt, vt = (jnp.moveaxis(a, 2, 1) for a in (q, k, v))
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    for causal, window in [(True, None), (True, 96), (False, None)]:
+        bq = min(128, s)
+        o_ref = ref.attention_ref(qt, kt, vt, causal=causal, window=window)
+        o_k = ops.flash_attention(q, k, v, causal=causal, window=window,
+                                  block_q=bq, block_k=bq)
+        err = float(jnp.abs(jnp.moveaxis(o_k, 2, 1).astype(jnp.float32)
+                            - o_ref.astype(jnp.float32)).max())
+        assert err < tol, (causal, window, err)
+
+
+def test_flash_attention_vs_model_blockwise():
+    """The Pallas kernel, the XLA blockwise fallback, and the naive oracle
+    agree — three implementations, one semantics."""
+    from repro.models import attention as A
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (2, 256, 8, 64))
+    k = jax.random.normal(ks[1], (2, 256, 4, 64))
+    v = jax.random.normal(ks[2], (2, 256, 4, 64))
+    o_naive = A.attend(q, k, v, causal=True, impl="naive")
+    o_block = A.attend(q, k, v, causal=True, impl="blockwise")
+    o_pallas = A.attend(q, k, v, causal=True, impl="pallas")
+    assert float(jnp.abs(o_naive - o_block).max()) < 1e-5
+    assert float(jnp.abs(o_naive - o_pallas).max()) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bt,s,h,p,n,chunk", [
+    (1, 128, 2, 32, 16, 64), (2, 256, 4, 64, 32, 128), (1, 512, 8, 32, 64, 128)])
+def test_ssd_scan_sweep(bt, s, h, p, n, chunk):
+    from repro.kernels.ssd_scan import ops
+    from repro.models.ssm import ssd_reference
+    ks = jax.random.split(jax.random.PRNGKey(s + h), 5)
+    x = jax.random.normal(ks[0], (bt, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bt, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (bt, s, n)) * 0.3
+    C = jax.random.normal(ks[4], (bt, s, n)) * 0.3
+    y_ref = ssd_reference(x, dt, A, B, C)
+    y_k = ops.ssd_scan(x, dt, A, B, C, chunk=chunk)
+    scale = float(jnp.abs(y_ref).max())
+    assert float(jnp.abs(y_ref - y_k).max()) < 1e-3 * max(scale, 1.0)
+
+
+def test_ssd_scan_matches_model_chunked():
+    from repro.kernels.ssd_scan import ops
+    from repro.models.ssm import ssd_chunked
+    ks = jax.random.split(jax.random.PRNGKey(9), 5)
+    bt, s, h, p, n = 2, 256, 4, 32, 16
+    x = jax.random.normal(ks[0], (bt, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bt, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (bt, s, n)) * 0.3
+    C = jax.random.normal(ks[4], (bt, s, n)) * 0.3
+    y_model, _ = ssd_chunked(x, dt, A, B, C, chunk=64)
+    y_k = ops.ssd_scan(x, dt, A, B, C, chunk=64)
+    assert float(jnp.abs(y_model - y_k).max()) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# agg_weighted
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(k=st.integers(2, 12), p=st.integers(1, 2000), seed=st.integers(0, 99))
+def test_agg_weighted_property(k, p, seed):
+    """Hypothesis: kernel == einsum for arbitrary (K, P) and weights,
+    including the normalization invariant (weights sum to the mean)."""
+    from repro.kernels.agg_weighted import ops, ref
+    kk = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(kk)
+    stacked = jax.random.normal(k1, (k, p))
+    w = jax.random.uniform(k2, (k,), minval=0.1)
+    o_ref = ref.agg_weighted_ref(stacked, w)
+    o_k = ops.agg_flat(stacked, w)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_agg_tree_matches_sync_weighted_average():
+    from repro.core import sync
+    from repro.kernels.agg_weighted import ops
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    tree = {"a": jax.random.normal(ks[0], (6, 3, 5)),
+            "b": {"c": jax.random.normal(ks[1], (6, 17))}}
+    w = jax.random.uniform(ks[2], (6,))
+    o1 = sync.weighted_average(tree, w)
+    o2 = ops.weighted_average_tree(tree, w)
+    for l1, l2 in zip(jax.tree.leaves(o1), jax.tree.leaves(o2)):
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   rtol=1e-5, atol=1e-6)

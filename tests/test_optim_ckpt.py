@@ -1,0 +1,67 @@
+"""Optimizers + checkpointing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro import optim
+
+
+def _rosenbrock_grad(p):
+    x, y = p["x"], p["y"]
+    return {"x": 2 * (x - 1) - 400 * x * (y - x ** 2),
+            "y": 200 * (y - x ** 2)}
+
+
+@pytest.mark.parametrize("name,lr", [("sgd", 1e-2), ("momentum", 1e-3),
+                                     ("adagrad", 0.5), ("adam", 0.05),
+                                     ("yogi", 0.05)])
+def test_optimizer_descends_quadratic(name, lr):
+    opt = optim.get(name, lr)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(200):
+        grads = jax.grad(loss)(params)
+        updates, state = opt.update(grads, state, params)
+        params = optim.apply_updates(params, updates)
+    assert float(loss(params)) < l0 * 0.05, name
+
+
+def test_adam_bias_correction_first_step():
+    opt = optim.adam(0.1)
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    g = {"w": jnp.ones(3)}
+    upd, state = opt.update(g, state, params)
+    # first-step magnitude ≈ lr regardless of betas (bias-corrected)
+    np.testing.assert_allclose(np.asarray(upd["w"]), -0.1, rtol=0.05)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "b": {"c": jnp.asarray([1, 2, 3], jnp.int32)}}
+    d = ckpt.save(str(tmp_path / "ck"), tree, step=7, metadata={"k": "v"})
+    restored = ckpt.restore(d, tree)
+    for l1, l2 in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_checkpoint_latest_step(tmp_path):
+    tree = {"a": jnp.zeros(2)}
+    ckpt.save(str(tmp_path / "ck"), tree, step=1)
+    ckpt.save(str(tmp_path / "ck"), tree, step=10)
+    ckpt.save(str(tmp_path / "ck"), tree, step=5)
+    assert ckpt.latest_step(str(tmp_path / "ck")).endswith("step_10")
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    tree = {"a": jnp.zeros((2, 2))}
+    d = ckpt.save(str(tmp_path / "ck"), tree, step=0)
+    with pytest.raises(ValueError):
+        ckpt.restore(d, {"a": jnp.zeros((3, 2))})

@@ -1,0 +1,62 @@
+"""The five benchmark samplers + GBP-CS in the common interface (Fig. 4)."""
+import numpy as np
+import pytest
+
+from conftest import make_selection_instance
+from repro.core import samplers
+
+
+@pytest.fixture(scope="module")
+def inst():
+    return make_selection_instance(np.random.default_rng(1), f=8, k=18, l_sel=5)
+
+
+@pytest.mark.parametrize("name", list(samplers.SAMPLERS))
+def test_sampler_feasibility(name, inst):
+    A, y, l_sel = inst
+    kw = {"trials": 50} if name == "mc" else {}
+    if name == "ga":
+        kw = {"population": 20, "generations": 10}
+    if name == "bayesian":
+        kw = {"n_init": 3, "n_iter": 5, "pool": 32}
+    res = samplers.SAMPLERS[name](A, y, l_sel, **kw)
+    x = np.asarray(res.x)
+    assert int(x.sum()) == l_sel
+    assert set(np.unique(x)).issubset({0.0, 1.0})
+    assert res.distance >= 0
+    assert res.trace.shape[0] >= 1
+
+
+def test_divergence_ordering(inst):
+    """Fig. 4a: Brute lower-bounds everything; Random upper-bounds the
+    optimizers (on average); GBP-CS is near-brute."""
+    A, y, l_sel = inst
+    brute = samplers.brute_sampler(A, y, l_sel).distance
+    rnd = np.mean([samplers.random_sampler(A, y, l_sel, seed=s).distance
+                   for s in range(20)])
+    gbp = samplers.gbp_cs_sampler(A, y, l_sel).distance
+    mc = samplers.monte_carlo_sampler(A, y, l_sel, trials=200).distance
+    assert brute <= gbp + 1e-6 and brute <= mc + 1e-6
+    assert gbp <= rnd + 1e-6, (gbp, rnd)
+    assert gbp <= brute * 1.25 + 1e-6, "GBP-CS should be near-optimal"
+
+
+def test_gbp_cs_is_fast_relative_to_ga(inst):
+    """Fig. 4b: GBP-CS (compiled, warmed) beats the GA sampler's wall time."""
+    A, y, l_sel = inst
+    samplers.gbp_cs_sampler(A, y, l_sel)         # warm the jit cache
+    gbp = samplers.gbp_cs_sampler(A, y, l_sel, seed=1)
+    ga = samplers.genetic_sampler(A, y, l_sel)
+    assert gbp.wall_time_s < ga.wall_time_s
+
+
+def test_monte_carlo_trace_monotone(inst):
+    A, y, l_sel = inst
+    res = samplers.monte_carlo_sampler(A, y, l_sel, trials=100)
+    assert np.all(np.diff(res.trace) <= 0 + 1e-9)
+
+
+def test_brute_limit_caps_work(inst):
+    A, y, l_sel = inst
+    res = samplers.brute_sampler(A, y, l_sel, limit=100)
+    assert res.evaluations <= 100

@@ -1,0 +1,101 @@
+"""Compound-step synchronization protocol (Eqs. 3-5) invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fedgs, sync
+
+
+def _quad_loss(params, batch):
+    x, y = batch
+    pred = x @ params["w"] + params["b"]
+    return jnp.mean((pred - y) ** 2)
+
+
+def _make_problem(key, n=64, d=8):
+    k1, k2, k3 = jax.random.split(key, 3)
+    w_true = jax.random.normal(k1, (d,))
+    x = jax.random.normal(k2, (n, d))
+    y = x @ w_true + 0.01 * jax.random.normal(k3, (n,))
+    params = {"w": jnp.zeros((d,)), "b": jnp.zeros(())}
+    return params, (x, y)
+
+
+def test_internal_sync_equals_centralized_sgd():
+    """SSGD equivalence (paper §IV): one local step per device + Eq. 4
+    weighted average == one centralized SGD step on the pooled batch."""
+    key = jax.random.PRNGKey(0)
+    params, (x, y) = _make_problem(key, n=60)
+    k_dev = 5
+    xs = x.reshape(k_dev, 12, -1)
+    ys = y.reshape(k_dev, 12)
+    lr = 0.1
+    # per-device steps from the same starting point
+    dev_params, _ = jax.vmap(
+        lambda b: sync.local_step(params, b, _quad_loss, lr))((xs, ys))
+    synced = sync.internal_sync(dev_params, jnp.ones((k_dev,)))
+    central, _ = sync.local_step(params, (x, y), _quad_loss, lr)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(synced[k]),
+                                   np.asarray(central[k]), rtol=1e-5)
+
+
+def test_internal_sync_mask_and_weights():
+    trees = {"w": jnp.stack([jnp.full((3,), float(i)) for i in range(4)])}
+    mask = jnp.array([1.0, 0.0, 1.0, 0.0])
+    out = sync.internal_sync(trees, mask)
+    np.testing.assert_allclose(np.asarray(out["w"]), 1.0)  # mean of 0 and 2
+    sizes = jnp.array([1.0, 1.0, 3.0, 1.0])
+    out = sync.internal_sync(trees, mask, batch_sizes=sizes)
+    np.testing.assert_allclose(np.asarray(out["w"]), (0 * 1 + 2 * 3) / 4)
+
+
+def test_external_sync_is_uniform_mean():
+    gp = {"w": jnp.arange(6.0).reshape(3, 2)}
+    out = sync.external_sync(gp)
+    np.testing.assert_allclose(np.asarray(out["w"]), [2.0, 3.0])
+
+
+def test_external_sync_and_broadcast_restores_group_axis():
+    gp = {"w": jnp.arange(6.0).reshape(3, 2)}
+    out = fedgs.external_sync_and_broadcast(gp)
+    assert out["w"].shape == (3, 2)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.tile([[2.0, 3.0]], (3, 1)))
+
+
+def test_fedgs_iteration_equals_ssgd_when_all_selected():
+    """With L=K (everyone selected) and uniform batches, the FEDGS internal
+    iteration equals centralized SGD per group."""
+    key = jax.random.PRNGKey(1)
+    params, (x, y) = _make_problem(key, n=48)
+    m, k_dev, n_b = 2, 4, 6
+    xs = x.reshape(m, k_dev, n_b, -1)
+    ys = y.reshape(m, k_dev, n_b)
+    cfg = fedgs.FedGSConfig(num_groups=m, devices_per_group=k_dev,
+                            num_selected=k_dev, num_presampled=k_dev,
+                            lr=0.1, num_classes=4)
+    gp = fedgs.replicate_for_groups(params, m)
+    step = fedgs.make_group_train_step(_quad_loss, cfg)
+    new_gp, _ = step(gp, (jnp.asarray(xs), jnp.asarray(ys)))
+    for mi in range(m):
+        pooled = (xs[mi].reshape(-1, 8), ys[mi].reshape(-1))
+        want, _ = sync.local_step(params, pooled, _quad_loss, 0.1)
+        np.testing.assert_allclose(np.asarray(new_gp["w"][mi]),
+                                   np.asarray(want["w"]), rtol=1e-5)
+
+
+def test_collective_forms_match_reference():
+    """shard_map psum forms == simulator forms on a 1-device mesh."""
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+    mesh = jax.make_mesh((1,), ("data",))
+    params = {"w": jnp.arange(4.0)}
+    w = jnp.asarray(2.0)
+
+    f = shard_map(
+        lambda p, ww: sync.internal_sync_collective(p, ww, "data"),
+        mesh=mesh, in_specs=(P(), P()), out_specs=P())
+    out = f(params, w)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.asarray(params["w"]))
