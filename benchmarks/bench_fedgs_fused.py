@@ -1,0 +1,125 @@
+"""Engine throughput: two-phase host loop vs scan-fused device engine.
+
+Three engines drive the same synthetic non-i.i.d. stream (same per-device
+class distributions) through the same FEDGS protocol:
+
+* ``host_numpy``  — the pre-existing production path: ``run_fedgs`` over the
+  numpy ``FactoryStreams`` pipeline (counts to host, masks to host, images
+  generated on host and uploaded every iteration).
+* ``host_device`` — ablation: the same two-phase host loop, but the stream
+  already lives on-device (``DeviceBackedStreams``); isolates the host
+  round-trips from the data-generation cost.
+* ``fused``       — ``run_fedgs_fused``: one ``lax.scan`` dispatch per round,
+  data sampled inside the scan (DESIGN.md §7, §10.2).
+
+Two models: a linear softmax probe (tiny compute — measures the *engine*:
+dispatch, transfers, per-iteration syncs) and the paper's CNN (compute-bound
+on CPU; the engine delta is honest-but-small there, see DESIGN.md §9).
+Writes the recorded iterations/sec to ``BENCH_fedgs_fused.json``.
+
+  PYTHONPATH=src python -m benchmarks.run --only fedgs_fused
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import femnist_cnn
+from repro.core import fedgs
+from repro.data import (DeviceBackedStreams, DeviceStream, FactoryStreams,
+                        PartitionConfig, make_device_sampler, make_partition)
+from repro.models import cnn
+
+from .common import emit
+
+QUICK = dict(m=4, k=12, l=4, l_rnd=1, t=10, rounds=4, n=16)
+FULL = dict(m=10, k=35, l=10, l_rnd=2, t=10, rounds=3, n=32)
+
+
+def linear_init(key):
+    """784->62 softmax probe: negligible train compute, so iterations/sec
+    measures the execution engine rather than the model."""
+    return {"w": jax.random.normal(key, (784, 62)) * 0.01,
+            "b": jnp.zeros((62,))}
+
+
+def linear_loss(params, batch):
+    x, y = batch
+    logits = x.reshape(x.shape[0], -1) @ params["w"] + params["b"]
+    logp = jax.nn.log_softmax(logits, -1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[..., None], -1))
+
+
+def _iters_per_sec(run_engine, rounds: int, t: int) -> float:
+    """Wall-clock iterations/sec over rounds 1..R-1 (round 0 pays compile)."""
+    stamps: list[float] = []
+    run_engine(lambda _log: stamps.append(time.perf_counter()))
+    assert len(stamps) == rounds and rounds >= 2
+    return (rounds - 1) * t / (stamps[-1] - stamps[0])
+
+
+def measure_engines(p: dict, model: str = "linear", seed: int = 0) -> dict:
+    part = make_partition(PartitionConfig(num_factories=p["m"],
+                                          devices_per_factory=p["k"],
+                                          alpha=0.3, seed=seed))
+    sampler = make_device_sampler(
+        DeviceStream.from_partition(part, batch_size=p["n"], seed=seed))
+    if model == "linear":
+        params = linear_init(jax.random.PRNGKey(seed))
+        loss_fn = linear_loss
+    else:
+        params = cnn.init_cnn(jax.random.PRNGKey(seed),
+                              femnist_cnn.smoke_config())
+        loss_fn = cnn.loss_fn
+    cfg = fedgs.FedGSConfig(
+        num_groups=p["m"], devices_per_group=p["k"], num_selected=p["l"],
+        num_presampled=p["l_rnd"], iters_per_round=p["t"],
+        rounds=p["rounds"], lr=0.05, batch_size=p["n"], seed=seed)
+
+    def ips(run):
+        return _iters_per_sec(run, cfg.rounds, cfg.iters_per_round)
+
+    host_numpy = ips(lambda lf: fedgs.run_fedgs(
+        params, loss_fn, FactoryStreams(part, batch_size=p["n"], seed=seed),
+        part.p_real, cfg, log_fn=lf))
+    host_device = ips(lambda lf: fedgs.run_fedgs(
+        params, loss_fn, DeviceBackedStreams(sampler), part.p_real, cfg,
+        log_fn=lf))
+    fused = ips(lambda lf: fedgs.run_fedgs_fused(
+        params, loss_fn, sampler, part.p_real, cfg, log_fn=lf))
+    return {
+        "model": model,
+        "host_numpy_iters_per_sec": round(host_numpy, 2),
+        "host_device_iters_per_sec": round(host_device, 2),
+        "fused_iters_per_sec": round(fused, 2),
+        "speedup_vs_host": round(fused / host_numpy, 2),
+        "speedup_vs_host_device": round(fused / host_device, 2),
+    }
+
+
+def run(quick: bool = True, json_path: str = "BENCH_fedgs_fused.json") -> None:
+    p = QUICK if quick else FULL
+    out = {"scale": "quick" if quick else "full", "config": p,
+           "backend": jax.default_backend()}
+    for model in ("linear", "cnn"):
+        r = measure_engines(p, model=model)
+        out[model] = r
+        emit(f"fedgs_fused.{model}.host_loop",
+             1e6 / r["host_numpy_iters_per_sec"],
+             f"iters_per_sec={r['host_numpy_iters_per_sec']}")
+        emit(f"fedgs_fused.{model}.host_loop_devstream",
+             1e6 / r["host_device_iters_per_sec"],
+             f"iters_per_sec={r['host_device_iters_per_sec']}")
+        emit(f"fedgs_fused.{model}.fused_scan",
+             1e6 / r["fused_iters_per_sec"],
+             f"iters_per_sec={r['fused_iters_per_sec']}")
+        emit(f"fedgs_fused.{model}.speedup", 0.0,
+             f"x={r['speedup_vs_host']}")
+    # headline: engine speedup over the pre-existing host path
+    out["speedup"] = out["linear"]["speedup_vs_host"]
+    with open(json_path, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")

@@ -97,3 +97,11 @@ def run(quick: bool = True) -> None:
     if "fedavg" in results:
         gain = results["fedgs"][0] - results["fedavg"][0]
         emit("table2.fedgs_minus_fedavg_acc", 0.0, f"delta={gain:+.4f}")
+
+    # ---- engine throughput: host loop vs scan-fused on the device stream --
+    from . import bench_fedgs_fused
+    eng = bench_fedgs_fused.measure_engines(
+        bench_fedgs_fused.QUICK if quick else bench_fedgs_fused.FULL)
+    emit("table2.fedgs_fused_speedup", 0.0,
+         f"host_ips={eng['host_numpy_iters_per_sec']};"
+         f"fused_ips={eng['fused_iters_per_sec']};x={eng['speedup_vs_host']}")

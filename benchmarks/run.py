@@ -14,6 +14,7 @@ import time
 import traceback
 
 from . import (
+    bench_fedgs_fused,
     bench_fedgs_vs_baselines,
     bench_hyperparams,
     bench_initializers,
@@ -31,6 +32,7 @@ SUITES = {
     "prop4": bench_time_model.run,           # time-efficiency condition
     "kernels": bench_kernels.run,            # Pallas kernels
     "roofline": bench_roofline.run,          # dry-run roofline table
+    "fedgs_fused": bench_fedgs_fused.run,    # host loop vs scan-fused engine
 }
 
 

@@ -8,6 +8,16 @@ synchronization* (line 10) runs every T iterations.
 
 Workflow equivalence (paper §IV): FEDGS == FedAvg over M homogeneous super
 nodes, each running mini-batch SGD with batch nL for T local iterations.
+
+Two execution engines share the same math (DESIGN.md §10.1):
+
+* ``run_fedgs`` — the two-phase *host loop*: one Python iteration per
+  internal iteration, host-side streams (real FEMNIST / FactoryStreams).
+* ``run_fedgs_fused`` — the *device-resident* engine (DESIGN.md §7–§8): all
+  T internal iterations of a round fused into one ``lax.scan`` with donated
+  buffers, data drawn on-device by a DeviceSampler, and the group axis M
+  optionally sharded over a device mesh via ``shard_map`` (external sync
+  becomes a pmean across shards).
 """
 from __future__ import annotations
 
@@ -18,6 +28,7 @@ from typing import Any, Callable, Iterator, NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from . import gbp_cs, selection, sync
 
@@ -41,6 +52,8 @@ class FedGSConfig:
     gbp_max_iters: int = 64
     selection: str = "gbp_cs"     # 'gbp_cs' | 'random'
     seed: int = 0
+    engine: str = "host"          # 'host' (two-phase loop) | 'fused' (scan)
+    scan_unroll: int = 0          # fused scan unroll; 0 = auto (DESIGN.md §7)
 
     @property
     def l_sel(self) -> int:
@@ -119,20 +132,28 @@ def global_params(group_params: PyTree) -> PyTree:
     return sync.external_sync(group_params)
 
 
+def _per_group_train(params_m: PyTree, batches_m: PyTree, loss_fn: LossFn,
+                     cfg: FedGSConfig) -> tuple[PyTree, Array]:
+    """Lines 5–8 for one group: one local SGD step on each of the L selected
+    devices (vmapped), then internal sync (Eq. 4, uniform n — paper §V.A).
+    Shared verbatim by the host loop and the fused scan so both engines are
+    numerically interchangeable."""
+    dev_step = lambda b: sync.local_step(params_m, b, loss_fn, cfg.lr)
+    new_params, losses = jax.vmap(dev_step)(batches_m)
+    synced = sync.weighted_average(
+        new_params, jnp.ones((cfg.num_selected,), jnp.float32))
+    return synced, jnp.mean(losses)
+
+
 def make_group_train_step(loss_fn: LossFn, cfg: FedGSConfig):
     """Train-only half of the iteration (used by the two-phase host loop):
     selected batches (M, L, n, ...) -> internally-synced group params."""
 
-    def per_group(params_m: PyTree, batches_m: PyTree):
-        dev_step = lambda b: sync.local_step(params_m, b, loss_fn, cfg.lr)
-        new_params, losses = jax.vmap(dev_step)(batches_m)
-        synced = sync.weighted_average(
-            new_params, jnp.ones((cfg.num_selected,), jnp.float32))
-        return synced, jnp.mean(losses)
-
     @jax.jit
     def step(group_params: PyTree, batches: PyTree):
-        return jax.vmap(per_group)(group_params, batches)
+        return jax.vmap(
+            lambda p, b: _per_group_train(p, b, loss_fn, cfg)
+        )(group_params, batches)
 
     return step
 
@@ -163,7 +184,21 @@ def run_fedgs(
     runs GBP-CS (jitted) to pick C_t^m; (3) ONLY the selected devices
     generate/fetch data and take one local SGD step; (4) internal sync.
     External sync every T iterations.
+
+    With ``cfg.engine == 'fused'`` (or ``'sharded'``, which additionally
+    shards the group axis over every available device), dispatches to
+    :func:`run_fedgs_fused` — ``streams`` must then be a DeviceSampler
+    (DESIGN.md §10.2).
     """
+    if cfg.engine in ("fused", "sharded"):
+        mesh = make_group_mesh(cfg.num_groups) if cfg.engine == "sharded" \
+            else None
+        return run_fedgs_fused(params, loss_fn, streams, p_real, cfg,
+                               mesh=mesh, eval_fn=eval_fn,
+                               eval_every=eval_every, log_fn=log_fn)
+    if cfg.engine != "host":
+        raise ValueError(f"unknown engine: {cfg.engine!r} "
+                         "(expected 'host', 'fused', or 'sharded')")
     train_step = make_group_train_step(loss_fn, cfg)
     gp = replicate_for_groups(params, cfg.num_groups)
     key = jax.random.PRNGKey(cfg.seed)
@@ -175,15 +210,10 @@ def run_fedgs(
             key, sub = jax.random.split(key)
             counts = jnp.asarray(streams.next_counts())
             keys = jax.random.split(sub, cfg.num_groups)
-            if cfg.selection == "gbp_cs":
-                sel = selection.select_groups(
-                    keys, counts, p_real, cfg.num_selected,
-                    cfg.num_presampled, init=cfg.init,
-                    max_iters=cfg.gbp_max_iters)
-            else:
-                sel = jax.vmap(
-                    lambda k, c: selection.select_clients_random(
-                        k, c, p_real, cfg.num_selected))(keys, counts)
+            sel = selection.select_groups_any(
+                keys, counts, p_real, cfg.num_selected, cfg.num_presampled,
+                method=cfg.selection, init=cfg.init,
+                max_iters=cfg.gbp_max_iters)
             masks = np.asarray(sel.mask)
             imgs, labs = streams.fetch_selected(masks, cfg.num_selected)
             gp, loss = train_step(gp, (jnp.asarray(imgs), jnp.asarray(labs)))
@@ -192,6 +222,155 @@ def run_fedgs(
         gp = external_sync_and_broadcast(gp)
         log = RoundLog(round=r, loss=float(np.mean(losses)),
                        divergence=float(np.mean(divs)))
+        if eval_fn is not None and (r + 1) % eval_every == 0:
+            tl, ta = eval_fn(global_params(gp))
+            log.test_loss, log.test_accuracy = float(tl), float(ta)
+        logs.append(log)
+        if log_fn is not None:
+            log_fn(log)
+    return global_params(gp), logs
+
+
+# ---------------------------------------------------------------------------
+# Scan-fused, mesh-sharded engine (DESIGN.md §7–§8).
+# ---------------------------------------------------------------------------
+
+def _mesh_axis_size(mesh, axis_name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[axis_name]
+
+
+def make_group_mesh(num_groups: int | None = None):
+    """1-D mesh over the 'groups' axis for the fused engine (DESIGN.md §8):
+    each shard simulates M/n_devices super nodes.
+
+    Uses every available device when ``num_groups`` divides evenly, otherwise
+    the largest divisor of ``num_groups`` that fits — so a single device
+    (n=1) is always a valid, transparent fallback."""
+    n = len(jax.devices())
+    if num_groups is not None:
+        while num_groups % n:
+            n -= 1
+    return jax.make_mesh((n,), ("groups",))
+
+
+def make_fused_round(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
+                     mesh=None, axis_name: str = "groups"):
+    """Build the jitted one-round function of the device-resident engine.
+
+    Returns ``round_fn(group_params, key, t0, p_real) -> (group_params',
+    key', losses (T,), divergences (T,))``. The T internal iterations run as
+    a single ``lax.scan`` (selection → local step → internal sync per scan
+    step), with external sync + broadcast as the epilogue; ``group_params``
+    buffers are donated, so steady-state rounds allocate nothing new.
+
+    ``sampler`` is a DeviceSampler (see repro.data.streaming): two pure
+    functions of (iteration t, global group ids) — the scan never leaves the
+    accelerator for data.
+
+    With ``mesh``, the M-sized group axis is sharded over ``axis_name`` via
+    ``shard_map``: each shard simulates M/n_shards super nodes, selection
+    keys are sliced from the *global* key fan-out (so results are invariant
+    to the shard count), and external sync completes with a pmean across
+    shards. ``mesh=None`` is the transparent single-device path.
+    """
+    m, t_per_round, l = cfg.num_groups, cfg.iters_per_round, cfg.num_selected
+    n_shards = 1 if mesh is None else _mesh_axis_size(mesh, axis_name)
+    if m % n_shards != 0:
+        raise ValueError(
+            f"num_groups={m} must divide over {n_shards} '{axis_name}' shards")
+    m_local = m // n_shards
+    # XLA:CPU runs ops inside a rolled loop body single-threaded, which costs
+    # ~3x on the conv train step; fully unrolling the scan restores intra-op
+    # parallelism. On accelerators the rolled loop is fine (and compiles T
+    # times faster), so auto picks per backend. cfg.scan_unroll overrides.
+    unroll = cfg.scan_unroll or (
+        t_per_round if jax.default_backend() == "cpu" else 1)
+
+    def round_body(group_params: PyTree, key: Array, t0: Array,
+                   p_real: Array):
+        if mesh is None:
+            gids = jnp.arange(m, dtype=jnp.int32)
+        else:
+            shard = jax.lax.axis_index(axis_name)
+            gids = (shard * m_local
+                    + jnp.arange(m_local, dtype=jnp.int32)).astype(jnp.int32)
+
+        def iteration(carry, t):
+            gp, key = carry
+            # PRNG discipline identical to the host loop: split the round
+            # key, fan out to all M groups, take this shard's slice.
+            key, sub = jax.random.split(key)
+            keys = jnp.take(jax.random.split(sub, m), gids, axis=0)
+            counts = sampler.counts(t, gids)
+            sel = selection.select_for_groups(
+                keys, counts, p_real, l, cfg.num_presampled,
+                method=cfg.selection, init=cfg.init,
+                max_iters=cfg.gbp_max_iters)
+            imgs, labs = sampler.selected_batch(t, gids, sel.mask, l)
+            gp, losses = jax.vmap(
+                lambda p, b: _per_group_train(p, b, loss_fn, cfg)
+            )(gp, (imgs, labs))
+            loss, div = jnp.mean(losses), jnp.mean(sel.divergence)
+            if mesh is not None:
+                loss = jax.lax.pmean(loss, axis_name)
+                div = jax.lax.pmean(div, axis_name)
+            return (gp, key), (loss, div)
+
+        (gp, key), (losses, divs) = jax.lax.scan(
+            iteration, (group_params, key),
+            t0 + jnp.arange(t_per_round, dtype=jnp.int32), unroll=unroll)
+        # epilogue: external sync (Eq. 5) + broadcast back to the group axis
+        g = sync.external_sync_grouped(
+            gp, axis_name if mesh is not None else None)
+        gp = jax.tree.map(
+            lambda leaf: jnp.broadcast_to(leaf[None],
+                                          (m_local,) + leaf.shape), g)
+        return gp, key, losses, divs
+
+    fn = round_body
+    if mesh is not None:
+        from jax.experimental.shard_map import shard_map
+        fn = shard_map(
+            fn, mesh=mesh,
+            in_specs=(P(axis_name), P(), P(), P()),
+            out_specs=(P(axis_name), P(), P(), P()),
+            check_rep=False)
+    return jax.jit(fn, donate_argnums=(0,))
+
+
+def run_fedgs_fused(
+    params: PyTree,
+    loss_fn: LossFn,
+    sampler,                     # DeviceSampler: counts / selected_batch
+    p_real: Array,
+    cfg: FedGSConfig,
+    *,
+    mesh=None,
+    axis_name: str = "groups",
+    eval_fn: Callable[[PyTree], tuple[float, float]] | None = None,
+    eval_every: int = 10,
+    log_fn: Callable[[RoundLog], None] | None = None,
+) -> tuple[PyTree, list[RoundLog]]:
+    """Alg. 1 end to end on the device-resident engine (DESIGN.md §7).
+
+    Numerically equivalent to :func:`run_fedgs` over a DeviceBackedStreams
+    adapter of the same sampler (same PRNG stream discipline, same selection
+    and train code paths); one host↔device round-trip per *round* instead of
+    several per *iteration*.
+    """
+    round_fn = make_fused_round(loss_fn, cfg, sampler, mesh=mesh,
+                                axis_name=axis_name)
+    gp = replicate_for_groups(params, cfg.num_groups)
+    if mesh is not None:
+        gp = jax.device_put(gp, NamedSharding(mesh, P(axis_name)))
+    key = jax.random.PRNGKey(cfg.seed)
+    p_real = jnp.asarray(p_real, jnp.float32)
+    logs: list[RoundLog] = []
+    for r in range(cfg.rounds):
+        gp, key, losses, divs = round_fn(
+            gp, key, jnp.int32(r * cfg.iters_per_round), p_real)
+        log = RoundLog(round=r, loss=float(jnp.mean(losses)),
+                       divergence=float(jnp.mean(divs)))
         if eval_fn is not None and (r + 1) % eval_every == 0:
             tl, ta = eval_fn(global_params(gp))
             log.test_loss, log.test_accuracy = float(tl), float(ta)

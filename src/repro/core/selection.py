@@ -80,11 +80,27 @@ def select_clients_random(key: Array, counts: Array, p_real: Array,
                            distance=divergence, iterations=jnp.int32(0))
 
 
-@functools.partial(jax.jit, static_argnames=("l", "l_rnd", "init", "max_iters"))
-def select_groups(keys: Array, counts: Array, p_real: Array, l: int,
-                  l_rnd: int, *, init: str = gbp_cs.MPINV,
-                  max_iters: int = 64) -> SelectionResult:
-    """vmap over M groups: keys (M,2), counts (M, K, F)."""
-    fn = lambda k, c: select_clients_via_gbp_cs(
-        k, c, p_real, l, l_rnd, init=init, max_iters=max_iters)
+def select_for_groups(keys: Array, counts: Array, p_real: Array, l: int,
+                      l_rnd: int, *, method: str = "gbp_cs",
+                      init: str = gbp_cs.MPINV,
+                      max_iters: int = 64) -> SelectionResult:
+    """vmap over M groups: keys (M,2), counts (M, K, F).
+
+    Un-jitted on purpose: this is the selection body shared by the two-phase
+    host loop (which jits it via :func:`select_groups_any`) and the fused
+    scan loop (which traces it inside ``lax.scan``, DESIGN.md §10.1) — one
+    code path, so both engines compute bit-for-bit the same masks.
+    """
+    if method == "gbp_cs":
+        fn = lambda k, c: select_clients_via_gbp_cs(
+            k, c, p_real, l, l_rnd, init=init, max_iters=max_iters)
+    elif method == "random":
+        fn = lambda k, c: select_clients_random(k, c, p_real, l)
+    else:
+        raise ValueError(f"unknown selection method: {method!r}")
     return jax.vmap(fn)(keys, counts)
+
+
+select_groups_any = functools.partial(
+    jax.jit, static_argnames=("l", "l_rnd", "method", "init", "max_iters")
+)(select_for_groups)

@@ -102,6 +102,21 @@ def external_sync_collective(params: PyTree, axis_name: str = "pod") -> PyTree:
         params)
 
 
+def external_sync_grouped(group_params: PyTree,
+                          axis_name: str | None = None) -> PyTree:
+    """Eq. (5) for the scan-fused engine (DESIGN.md §8): mean over the local
+    leading group axis, then — when the group axis is sharded over a device
+    mesh — a pmean over ``axis_name`` to complete the global average.
+
+    With equal groups per shard, mean-of-local-means == global mean, so the
+    sharded and unsharded paths agree. ``axis_name=None`` is the transparent
+    single-device fallback (pure local mean)."""
+    g = external_sync(group_params)
+    if axis_name is not None:
+        g = external_sync_collective(g, axis_name)
+    return g
+
+
 def grad_internal_sync_collective(grads: PyTree, weight: Array,
                                   axis_name: str = "data") -> PyTree:
     """Gradient-space form of Eq. (4) (equivalent for one SGD step from a

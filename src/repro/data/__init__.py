@@ -1,3 +1,9 @@
 from . import femnist, lm_data, partition, streaming  # noqa: F401
 from .partition import Partition, PartitionConfig, make_partition  # noqa: F401
-from .streaming import FactoryStreams  # noqa: F401
+from .streaming import (  # noqa: F401
+    DeviceBackedStreams,
+    DeviceSampler,
+    DeviceStream,
+    FactoryStreams,
+    make_device_sampler,
+)

@@ -117,6 +117,80 @@ def generate_images(classes: np.ndarray, writer_ids: np.ndarray,
     return np.clip(imgs, 0.0, 1.5)
 
 
+# ---------------------------------------------------------------------------
+# Device-side generator (DESIGN.md §7): a jax port of the sampler above so the
+# scan-fused engine can synthesize batches without leaving the accelerator.
+# Styles stay host-precomputed (they are per-writer constants, see
+# writer_style_table); only the per-sample jitter moves to jax.random.
+# ---------------------------------------------------------------------------
+
+def writer_style_table(writer_ids: np.ndarray) -> np.ndarray:
+    """(...,) writer-id array -> (..., 6) persistent style array (host, once)."""
+    flat = np.asarray(writer_ids).reshape(-1)
+    return _writer_styles(flat).reshape(np.shape(writer_ids) + (6,))
+
+
+def _affine_sample_jax(protos, classes, rots, scales, shifts):
+    """jax port of :func:`_affine_sample`: bilinear sampling under per-sample
+    inverse affine transforms. classes (N,), rots/scales (N,), shifts (N, 2)."""
+    import jax.numpy as jnp
+
+    n = classes.shape[0]
+    size = protos.shape[-1]
+    c0 = (size - 1) / 2.0
+    yy, xx = jnp.meshgrid(jnp.arange(size, dtype=jnp.float32),
+                          jnp.arange(size, dtype=jnp.float32), indexing="ij")
+    xy = jnp.stack([xx - c0, yy - c0], axis=0).reshape(2, -1)     # (2, P)
+    cos, sin = jnp.cos(rots), jnp.sin(rots)
+    inv_scale = 1.0 / scales
+    rot_m = jnp.stack([jnp.stack([cos, sin], -1),
+                       jnp.stack([-sin, cos], -1)], -2)           # (n,2,2)
+    src = jnp.einsum("nij,jp->nip", rot_m, xy) * inv_scale[:, None, None]
+    src = src + c0 - shifts[:, :, None]                           # (n,2,P)
+    sx, sy = src[:, 0], src[:, 1]
+    x0 = jnp.clip(jnp.floor(sx).astype(jnp.int32), 0, size - 2)
+    y0 = jnp.clip(jnp.floor(sy).astype(jnp.int32), 0, size - 2)
+    fx = jnp.clip(sx - x0, 0, 1).astype(jnp.float32)
+    fy = jnp.clip(sy - y0, 0, 1).astype(jnp.float32)
+    flat = protos[classes].reshape(n, -1)                         # (n, P)
+    idx = lambda yv, xv: yv * size + xv
+    g00 = jnp.take_along_axis(flat, idx(y0, x0), axis=1)
+    g01 = jnp.take_along_axis(flat, idx(y0, x0 + 1), axis=1)
+    g10 = jnp.take_along_axis(flat, idx(y0 + 1, x0), axis=1)
+    g11 = jnp.take_along_axis(flat, idx(y0 + 1, x0 + 1), axis=1)
+    out = (g00 * (1 - fx) * (1 - fy) + g01 * fx * (1 - fy)
+           + g10 * (1 - fx) * fy + g11 * fx * fy)
+    oob = (sx < 0) | (sx > size - 1) | (sy < 0) | (sy > size - 1)
+    out = jnp.where(oob, 0.0, out)
+    return out.reshape(n, size, size).astype(jnp.float32)
+
+
+def generate_images_jax(protos, classes, styles, key):
+    """Device-side batch generation: classes (N,) int32, styles (N, 6) from
+    :func:`writer_style_table`, key a jax PRNG key. Returns (N, 28, 28).
+
+    Same pipeline as :func:`generate_images` (style + jitter + noise) but
+    jitter is drawn from ``jax.random`` so the whole call is jittable and
+    vmappable; it is NOT bit-identical to the numpy path (different RNG), it
+    is *statistically* identical — equivalence tests compare device-vs-device
+    (host loop over the device sampler vs fused scan), never numpy-vs-jax.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    n = classes.shape[0]
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    rots = styles[:, 0] + 0.08 * jax.random.normal(k1, (n,))
+    scales = styles[:, 1] * jax.random.uniform(k2, (n,), minval=0.95,
+                                               maxval=1.05)
+    shifts = styles[:, 2:4] + 0.6 * jax.random.normal(k3, (n, 2))
+    imgs = _affine_sample_jax(protos, classes, rots, scales, shifts)
+    imgs = imgs * styles[:, 4][:, None, None]
+    imgs = imgs + jax.random.normal(k4, imgs.shape) \
+        * styles[:, 5][:, None, None]
+    return jnp.clip(imgs, 0.0, 1.5)
+
+
 def make_test_set(n_per_class: int = 40, seed: int = 99
                   ) -> tuple[np.ndarray, np.ndarray]:
     """Balanced i.i.d. test set drawn from held-out writer ids."""

@@ -9,6 +9,12 @@ old data is overwritten, one-shot semantics §IV).
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from . import femnist
@@ -100,3 +106,129 @@ class FactoryStreams:
         self._t += 1
         weights = np.full(clients, float(steps * self.n), np.float32)
         return (imgs, labs), weights
+
+
+# ---------------------------------------------------------------------------
+# Device-resident streams (DESIGN.md §7).
+#
+# The scan-fused engine must never leave the accelerator mid-round, so the
+# stream is a *pure function of time*: iteration t and global group id gid
+# deterministically derive every device's next-batch labels (and, for the
+# selected devices only, images) from jax.random keys. The same function
+# evaluated twice for the same (t, gid) returns the same batch — which is how
+# the host two-phase loop (counts first, data after selection) and the fused
+# scan (everything inline) see identical data.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceStream:
+    """Static device-side description of all M×K streams.
+
+    Everything data-dependent lives in two device arrays; per-writer styles
+    are host-precomputed once (they are constants of the partition).
+    """
+    class_probs: jax.Array   # (M, K, F) per-device class distributions
+    styles: jax.Array        # (M, K, 6) persistent writer styles
+    batch_size: int          # n
+    seed: int
+
+    @classmethod
+    def from_partition(cls, part: Partition, batch_size: int = 32,
+                       seed: int = 0) -> "DeviceStream":
+        return cls(
+            class_probs=jnp.asarray(part.class_probs, jnp.float32),
+            styles=jnp.asarray(femnist.writer_style_table(part.writer_ids),
+                               jnp.float32),
+            batch_size=batch_size,
+            seed=seed,
+        )
+
+
+class DeviceSampler(NamedTuple):
+    """Pure, jittable sampling interface consumed by the fused engine.
+
+    Both callables take global group ids so a ``shard_map`` shard can ask for
+    exactly its local groups while key derivation stays globally consistent
+    (shard-count invariant): the closed-over stream arrays are replicated and
+    indexed by gid.
+
+    counts(t, gids) -> (G, K, F) int32 next-batch class counts.
+    selected_batch(t, gids, masks, l) -> (images (G, l, n, 28, 28),
+        labels (G, l, n)); device order within a group is
+        ``argsort(-mask)[:l]`` — the same gather order as the host loop.
+    """
+    counts: Callable[..., jax.Array]
+    selected_batch: Callable[..., tuple[jax.Array, jax.Array]]
+    num_groups: int
+    devices_per_group: int
+    num_classes: int
+    batch_size: int
+
+
+def make_device_sampler(stream: DeviceStream) -> DeviceSampler:
+    probs = stream.class_probs
+    styles = stream.styles
+    m, k, f = probs.shape
+    n = stream.batch_size
+    protos = jnp.asarray(femnist.class_prototypes())
+    base = jax.random.PRNGKey(stream.seed)
+    label_key = jax.random.fold_in(base, 101)
+    img_key = jax.random.fold_in(base, 202)
+
+    def _group_labels(t, gid):
+        """Next-batch labels of one group: (K, n) int32, pure in (t, gid)."""
+        kg = jax.random.fold_in(jax.random.fold_in(label_key, t), gid)
+        u = jax.random.uniform(kg, (k, n, 1))
+        cdf = jnp.cumsum(probs[gid], axis=-1)[:, None, :]   # (K, 1, F)
+        labels = (u > cdf).sum(axis=-1)
+        return jnp.minimum(labels, f - 1).astype(jnp.int32)
+
+    def counts(t, gids):
+        labels = jax.vmap(lambda g: _group_labels(t, g))(gids)   # (G, K, n)
+        onehot = labels[..., None] == jnp.arange(f, dtype=jnp.int32)
+        return onehot.sum(axis=2).astype(jnp.int32)              # (G, K, F)
+
+    def selected_batch(t, gids, masks, l):
+        def per_group(gid, mask):
+            labels = _group_labels(t, gid)                 # (K, n)
+            idx = jnp.argsort(-mask)[:l]                   # stable, like host
+            lab_sel = labels[idx]                          # (l, n)
+            sty_sel = jnp.repeat(styles[gid][idx], n, axis=0)   # (l*n, 6)
+            kg = jax.random.fold_in(jax.random.fold_in(img_key, t), gid)
+            imgs = femnist.generate_images_jax(
+                protos, lab_sel.reshape(-1), sty_sel, kg)
+            return imgs.reshape(l, n, femnist.IMAGE_SIZE,
+                                femnist.IMAGE_SIZE), lab_sel
+        return jax.vmap(per_group)(gids, masks)
+
+    return DeviceSampler(counts=counts, selected_batch=selected_batch,
+                         num_groups=m, devices_per_group=k, num_classes=f,
+                         batch_size=n)
+
+
+class DeviceBackedStreams:
+    """Host-facing ``FactoryStreams`` adapter over a :class:`DeviceSampler`.
+
+    Lets the two-phase host loop (``run_fedgs``) consume the *exact* batches
+    the fused scan sees — the equivalence tests run both paths over this
+    shared stream. ``next_counts`` is repeatable (pure in t); ``fetch_selected``
+    advances time, mirroring the FIFO roll-over of :class:`FactoryStreams`.
+    """
+
+    def __init__(self, sampler: DeviceSampler):
+        self.sampler = sampler
+        self._t = 0
+        self._gids = jnp.arange(sampler.num_groups, dtype=jnp.int32)
+        self._counts = jax.jit(sampler.counts)
+        self._batch = jax.jit(sampler.selected_batch, static_argnums=(3,))
+
+    def next_counts(self) -> np.ndarray:
+        return np.asarray(self._counts(jnp.int32(self._t), self._gids))
+
+    def fetch_selected(self, masks: np.ndarray, l: int
+                       ) -> tuple[np.ndarray, np.ndarray]:
+        imgs, labs = self._batch(jnp.int32(self._t), self._gids,
+                                 jnp.asarray(masks, jnp.float32), l)
+        self._t += 1
+        return np.asarray(imgs), np.asarray(labs)

@@ -26,6 +26,16 @@ def make_host_mesh(*, data: int = 1, model: int = 1, pod: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_group_mesh(num_groups: int | None = None):
+    """1-D 'groups' mesh for the scan-fused FEDGS engine (DESIGN.md §8).
+
+    The canonical implementation lives with the engine
+    (``repro.core.fedgs.make_group_mesh``) so ``FedGSConfig.engine =
+    'sharded'`` and this launch-layer entry point can never drift apart."""
+    from repro.core.fedgs import make_group_mesh as _impl
+    return _impl(num_groups)
+
+
 def dp_axes(mesh) -> tuple[str, ...]:
     """The data-parallel axes of a mesh: ('pod','data') or ('data',)."""
     names = mesh.axis_names

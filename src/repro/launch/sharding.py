@@ -166,6 +166,19 @@ def shardings(pspecs: PyTree, mesh) -> PyTree:
                         is_leaf=lambda x: isinstance(x, P))
 
 
+# --- FEDGS group-axis specs (DESIGN.md §8) ----------------------------------
+
+def group_pspecs(tree: PyTree) -> PyTree:
+    """P('groups') on every leaf's leading (M) axis — the stacked-per-group
+    layout of the scan-fused engine; trailing dims replicated."""
+    return jax.tree.map(lambda _: P("groups"), tree)
+
+
+def group_shardings(mesh, tree: PyTree) -> PyTree:
+    """NamedShardings for a group-stacked pytree on a make_group_mesh."""
+    return jax.tree.map(lambda _: NamedSharding(mesh, P("groups")), tree)
+
+
 # --- batch / cache specs ----------------------------------------------------
 
 def batch_pspecs(cfg, shape, mesh, *, pod_stacked: bool = True) -> PyTree:

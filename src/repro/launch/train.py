@@ -5,8 +5,14 @@ hyperparameters as defaults (M=10, K=35, L=10, L_rnd=2, T=50, R=500, η=0.01,
 n=32). On this CPU container use reduced --rounds/--iters; on a real cluster
 the same core library drives the production mesh via launch/steps.py.
 
+Engines (DESIGN.md §10.2): ``host`` is the two-phase host loop over the
+numpy FactoryStreams; ``fused`` runs the whole round on-device via lax.scan
+over the jax.random DeviceStream; ``sharded`` additionally shard_maps the
+group axis across every available device.
+
   PYTHONPATH=src python -m repro.launch.train --rounds 20 --iters 10
   PYTHONPATH=src python -m repro.launch.train --selection random   # FedAvg-ish
+  PYTHONPATH=src python -m repro.launch.train --engine fused --rounds 20
 """
 from __future__ import annotations
 
@@ -20,7 +26,9 @@ import jax.numpy as jnp
 from repro import checkpoint as ckpt_lib
 from repro.configs import femnist_cnn
 from repro.core import fedgs
-from repro.data import FactoryStreams, PartitionConfig, femnist, make_partition
+from repro.data import (DeviceStream, FactoryStreams, PartitionConfig,
+                        femnist, make_device_sampler, make_partition)
+from repro.launch.mesh import make_group_mesh
 from repro.models import cnn
 
 
@@ -36,6 +44,9 @@ def main() -> None:
     ap.add_argument("--batch-size", type=int, default=32)
     ap.add_argument("--selection", choices=("gbp_cs", "random"),
                     default="gbp_cs")
+    ap.add_argument("--engine", choices=("host", "fused", "sharded"),
+                    default="host",
+                    help="host loop / fused lax.scan / scan + shard_map")
     ap.add_argument("--init", choices=("mpinv", "zero", "random"),
                     default="mpinv")
     ap.add_argument("--alpha", type=float, default=0.3, help="Dirichlet skew")
@@ -77,10 +88,19 @@ def main() -> None:
         if args.ckpt_dir and (log.round + 1) % 50 == 0:
             pass  # saved below via closure-less final save
 
-    final, _ = fedgs.run_fedgs(
-        params, cnn.loss_fn, streams, part.p_real, fcfg,
-        eval_fn=lambda p: cnn.evaluate(p, test_x, test_y),
-        eval_every=args.eval_every, log_fn=log_fn)
+    eval_fn = lambda p: cnn.evaluate(p, test_x, test_y)
+    if args.engine == "host":
+        final, _ = fedgs.run_fedgs(
+            params, cnn.loss_fn, streams, part.p_real, fcfg,
+            eval_fn=eval_fn, eval_every=args.eval_every, log_fn=log_fn)
+    else:
+        sampler = make_device_sampler(DeviceStream.from_partition(
+            part, batch_size=args.batch_size, seed=args.seed))
+        mesh = make_group_mesh(args.groups) if args.engine == "sharded" \
+            else None
+        final, _ = fedgs.run_fedgs_fused(
+            params, cnn.loss_fn, sampler, part.p_real, fcfg, mesh=mesh,
+            eval_fn=eval_fn, eval_every=args.eval_every, log_fn=log_fn)
 
     if args.ckpt_dir:
         path = ckpt_lib.save(args.ckpt_dir, final, step=args.rounds,

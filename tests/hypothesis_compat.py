@@ -1,0 +1,56 @@
+"""Optional-hypothesis shim for the property-based tests.
+
+``hypothesis`` is a test extra (``pip install ".[test]"``), not a hard
+dependency. When it is installed, this module re-exports the real
+``given``/``settings``/``st``. When it is missing, ``@given`` degrades into
+a deterministic ``pytest.mark.parametrize`` sweep over each strategy's
+endpoints and midpoint — less coverage than real property testing, but the
+invariants still run everywhere.
+"""
+import functools
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    import pytest
+
+    class _Strategy:
+        def __init__(self, samples):
+            self.samples = samples
+
+    class _FallbackStrategies:
+        @staticmethod
+        def integers(lo, hi):
+            return _Strategy([lo, hi, (lo + hi) // 2])
+
+        @staticmethod
+        def floats(lo, hi):
+            return _Strategy([lo, hi, (lo + hi) / 2])
+
+    st = _FallbackStrategies()
+
+    def settings(**_kw):
+        return lambda fn: fn
+
+    def given(**kwargs):
+        names = list(kwargs)
+        k = max(len(kwargs[n].samples) for n in names)
+        cases = []
+        for i in range(k):        # aligned: all-lo, all-hi, all-mid
+            cases.append(tuple(
+                kwargs[n].samples[i % len(kwargs[n].samples)] for n in names))
+        for i in range(1, k):     # staggered: every strategy sees every sample
+            c = tuple(kwargs[n].samples[(i + j) % len(kwargs[n].samples)]
+                      for j, n in enumerate(names))
+            if c not in cases:
+                cases.append(c)
+
+        def deco(fn):
+            @pytest.mark.parametrize(",".join(names), cases)
+            @functools.wraps(fn)
+            def wrapper(*args, **kw):
+                return fn(*args, **kw)
+            return wrapper
+        return deco

@@ -1,6 +1,7 @@
 """Data pipeline: generator determinism, partition skew, streaming FIFO."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.data import FactoryStreams, PartitionConfig, femnist, make_partition
 

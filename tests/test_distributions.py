@@ -1,7 +1,7 @@
 """Class-distribution utilities (Eqs. 2, 6, 10-11)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import distributions as D
 

@@ -1,0 +1,165 @@
+"""Scan-fused engine: device stream semantics, fused == host-loop params,
+and shard_map group sharding (single-device fallback + 4-device subprocess,
+per the dry-run isolation rule in conftest)."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import femnist_cnn
+from repro.core import fedgs
+from repro.data import (DeviceBackedStreams, DeviceStream, PartitionConfig,
+                        make_device_sampler, make_partition)
+from repro.models import cnn
+
+# the small acceptance config: M=4, K=8, L=4, T=5, R=3
+CFG = dict(num_groups=4, devices_per_group=8, num_selected=4,
+           num_presampled=1, iters_per_round=5, rounds=3, lr=0.05,
+           batch_size=8, gbp_max_iters=16)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    part = make_partition(PartitionConfig(num_factories=4,
+                                          devices_per_factory=8, seed=0))
+    sampler = make_device_sampler(
+        DeviceStream.from_partition(part, batch_size=8, seed=0))
+    params = cnn.init_cnn(jax.random.PRNGKey(0), femnist_cnn.smoke_config())
+    return part, sampler, params
+
+
+def _max_diff(a, b):
+    return max(jax.tree.leaves(
+        jax.tree.map(lambda x, y: float(jnp.abs(x - y).max()), a, b)))
+
+
+def test_device_stream_counts_and_batches(setup):
+    """counts(t) is pure/repeatable and consistent with the labels that
+    selected_batch later materializes for the same t."""
+    _, sampler, _ = setup
+    gids = jnp.arange(sampler.num_groups, dtype=jnp.int32)
+    c1 = sampler.counts(jnp.int32(3), gids)
+    c2 = sampler.counts(jnp.int32(3), gids)
+    assert bool(jnp.all(c1 == c2)), "counts must be pure in t"
+    assert c1.shape == (4, 8, 62)
+    assert bool(jnp.all(c1.sum(-1) == sampler.batch_size))
+    # counts change over time (the stream advances)
+    c3 = sampler.counts(jnp.int32(4), gids)
+    assert not bool(jnp.all(c1 == c3))
+
+    mask = jnp.zeros((4, 8)).at[:, :4].set(1.0)
+    imgs, labs = sampler.selected_batch(jnp.int32(3), gids, mask, 4)
+    assert imgs.shape == (4, 4, 8, 28, 28)
+    onehot = (labs[..., None] == jnp.arange(62)).sum(2)
+    np.testing.assert_array_equal(np.asarray(onehot), np.asarray(c1[:, :4]))
+
+
+def test_fused_scan_equals_host_loop(setup):
+    """Acceptance: run_fedgs_fused == run_fedgs over the same device stream
+    (same PRNG discipline, same selection/train code paths)."""
+    part, sampler, params = setup
+    cfg = fedgs.FedGSConfig(**CFG)
+    host, host_logs = fedgs.run_fedgs(
+        params, cnn.loss_fn, DeviceBackedStreams(sampler), part.p_real, cfg)
+    fused, fused_logs = fedgs.run_fedgs_fused(
+        params, cnn.loss_fn, sampler, part.p_real, cfg)
+    assert _max_diff(host, fused) < 1e-5
+    np.testing.assert_allclose([l.loss for l in host_logs],
+                               [l.loss for l in fused_logs], atol=1e-5)
+    np.testing.assert_allclose([l.divergence for l in host_logs],
+                               [l.divergence for l in fused_logs], atol=1e-5)
+
+
+def test_engine_config_dispatch(setup):
+    """cfg.engine='fused' routes run_fedgs to the scan engine."""
+    part, sampler, params = setup
+    cfg = fedgs.FedGSConfig(**{**CFG, "rounds": 1, "engine": "fused"})
+    via_dispatch, _ = fedgs.run_fedgs(params, cnn.loss_fn, sampler,
+                                      part.p_real, cfg)
+    direct, _ = fedgs.run_fedgs_fused(params, cnn.loss_fn, sampler,
+                                      part.p_real, cfg)
+    assert _max_diff(via_dispatch, direct) == 0.0
+
+
+def test_fused_random_selection(setup):
+    """The fused engine also supports the random-selection ablation."""
+    part, sampler, params = setup
+    cfg = fedgs.FedGSConfig(**{**CFG, "rounds": 1, "selection": "random"})
+    host, _ = fedgs.run_fedgs(params, cnn.loss_fn,
+                              DeviceBackedStreams(sampler), part.p_real, cfg)
+    fused, _ = fedgs.run_fedgs_fused(params, cnn.loss_fn, sampler,
+                                     part.p_real, cfg)
+    assert _max_diff(host, fused) < 1e-5
+
+
+def test_sharded_single_device_fallback(setup):
+    """shard_map over a 1-device 'groups' mesh must be a transparent
+    fallback: identical results to the unsharded fused path."""
+    part, sampler, params = setup
+    cfg = fedgs.FedGSConfig(**{**CFG, "rounds": 2})
+    ref, _ = fedgs.run_fedgs_fused(params, cnn.loss_fn, sampler,
+                                   part.p_real, cfg)
+    mesh = jax.make_mesh((1,), ("groups",))
+    sharded, _ = fedgs.run_fedgs_fused(params, cnn.loss_fn, sampler,
+                                       part.p_real, cfg, mesh=mesh)
+    assert _max_diff(ref, sharded) < 1e-6
+
+
+def test_sharded_rejects_indivisible_groups(setup):
+    """M must divide the shard count; checked before any compilation."""
+    _, sampler, _ = setup
+
+    class FakeMesh:  # 3 'groups' shards without needing 3 real devices
+        axis_names = ("groups",)
+        devices = np.zeros((3,))
+
+    cfg = fedgs.FedGSConfig(**CFG)  # num_groups=4, 4 % 3 != 0
+    with pytest.raises(ValueError, match="must divide"):
+        fedgs.make_fused_round(cnn.loss_fn, cfg, sampler, mesh=FakeMesh())
+
+
+MULTI_DEVICE_CODE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp
+from repro.configs import femnist_cnn
+from repro.core import fedgs
+from repro.data import (PartitionConfig, make_partition, DeviceStream,
+                        make_device_sampler)
+from repro.launch.mesh import make_group_mesh
+from repro.models import cnn
+
+part = make_partition(PartitionConfig(num_factories=4,
+                                      devices_per_factory=8, seed=0))
+sampler = make_device_sampler(
+    DeviceStream.from_partition(part, batch_size=8, seed=0))
+params = cnn.init_cnn(jax.random.PRNGKey(0), femnist_cnn.smoke_config())
+cfg = fedgs.FedGSConfig(num_groups=4, devices_per_group=8, num_selected=4,
+                        num_presampled=1, iters_per_round=5, rounds=2,
+                        lr=0.05, batch_size=8, gbp_max_iters=16)
+ref, _ = fedgs.run_fedgs_fused(params, cnn.loss_fn, sampler, part.p_real, cfg)
+mesh = make_group_mesh(cfg.num_groups)
+assert mesh.devices.size == 4, mesh
+sh, _ = fedgs.run_fedgs_fused(params, cnn.loss_fn, sampler, part.p_real, cfg,
+                              mesh=mesh)
+d = max(jax.tree.leaves(jax.tree.map(
+    lambda a, b: float(jnp.abs(a - b).max()), ref, sh)))
+assert d < 1e-4, f"sharded-vs-unsharded diff {d}"
+print("MULTI_DEVICE_OK", d)
+"""
+
+
+@pytest.mark.slow
+def test_sharded_multi_device_equivalence():
+    """4-way group sharding == unsharded (subprocess: the host-device-count
+    flag must not leak into this process)."""
+    res = subprocess.run(
+        [sys.executable, "-c", MULTI_DEVICE_CODE],
+        env={**os.environ, "PYTHONPATH": "src"},
+        capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "MULTI_DEVICE_OK" in res.stdout

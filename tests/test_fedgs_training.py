@@ -26,7 +26,7 @@ def test_gbp_selection_beats_random_divergence(setup):
     for it in range(5):
         counts = jnp.asarray(streams.next_counts())
         keys = jax.random.split(jax.random.PRNGKey(it), counts.shape[0])
-        sel_g = selection.select_groups(keys, counts, p_real, 4, 1)
+        sel_g = selection.select_groups_any(keys, counts, p_real, 4, 1)
         sel_r = jax.vmap(lambda k, c: selection.select_clients_random(
             k, c, p_real, 4))(keys, counts)
         divs["gbp_cs"].append(float(jnp.mean(sel_g.divergence)))
@@ -39,7 +39,8 @@ def test_selection_mask_cardinality(setup):
     part, streams = setup
     counts = jnp.asarray(streams.next_counts())
     keys = jax.random.split(jax.random.PRNGKey(0), counts.shape[0])
-    sel = selection.select_groups(keys, counts, jnp.asarray(part.p_real), 4, 1)
+    sel = selection.select_groups_any(keys, counts, jnp.asarray(part.p_real),
+                                      4, 1)
     sums = np.asarray(sel.mask).sum(-1)
     np.testing.assert_allclose(sums, 4)
 

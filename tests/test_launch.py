@@ -1,5 +1,6 @@
 """Launch layer: sharding rules, steps semantics, small-mesh dry-run
 (subprocess — the 512-device flag must not leak into this process)."""
+import os
 import subprocess
 import sys
 
@@ -149,8 +150,9 @@ text = compiled.as_text()
 assert "all-reduce" in text or "all-gather" in text
 print("SMALL_DRYRUN_OK")
 """
+    # inherit the full environment: a stripped env degrades XLA:CPU
+    # compilation from seconds to minutes on this container
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, timeout=300,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                       env={**os.environ, "PYTHONPATH": "src"})
     assert "SMALL_DRYRUN_OK" in r.stdout, r.stderr[-2000:]

@@ -6,6 +6,7 @@ process), and asserts the results match single-device execution. This is
 the correctness guarantee behind every §Roofline/§Perf sharding variant:
 layouts may change collectives, never values.
 """
+import os
 import subprocess
 import sys
 
@@ -43,7 +44,9 @@ for embed_mode, act in [("fsdp", None), ("vocab_model", "batch")]:
     step_sh = steps.make_train_step(cfg, lr=0.05, grad_accum=2, remat=True,
                                     act_sharding=act_sh, spmd_pod=True)
     sspecs = shlib.stack_pspecs_for_pods(pspecs, mesh)
-    bspecs = {k: P("pod", "data") + (None,) * (v.ndim - 2)
+    # note: P + tuple yields a plain tuple, which NamedSharding rejects —
+    # splat the trailing Nones into the PartitionSpec constructor instead
+    bspecs = {k: P("pod", "data", *((None,) * (v.ndim - 2)))
               for k, v in sbatch.items()}
     # two pods with the SAME data must produce identical per-pod params
     stacked2 = jax.tree.map(lambda l: jnp.concatenate([l, l]), stacked)
@@ -97,9 +100,10 @@ print("SERVE_EQUIV_OK")
 
 @pytest.mark.slow
 def test_sharded_steps_match_unsharded():
+    # inherit the full environment: a stripped env degrades XLA:CPU
+    # compilation from seconds to minutes on this container
     r = subprocess.run([sys.executable, "-c", CODE], capture_output=True,
                        text=True, timeout=900,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                       env={**os.environ, "PYTHONPATH": "src"})
     assert "TRAIN_EQUIV_OK" in r.stdout, r.stderr[-3000:]
     assert "SERVE_EQUIV_OK" in r.stdout, r.stderr[-3000:]
