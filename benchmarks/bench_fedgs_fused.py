@@ -12,15 +12,29 @@ class distributions) through the same FEDGS protocol:
 * ``fused``       — ``run_fedgs_fused``: one ``lax.scan`` dispatch per round,
   data sampled inside the scan (DESIGN.md §7, §10.2).
 
+On top of the engine comparison (run with the default config:
+``train_step='grad_avg'``, ``kernel_backend='jnp'``), the suite records
+
+* the ``train_step`` × ``kernel_backend`` **matrix** of the fused engine
+  (DESIGN.md §11) — gradient-space vs model-averaging internal sync, jnp vs
+  Pallas kernels (interpret mode on CPU, so the 'pallas' column measures
+  kernel-dispatch overhead there, not TPU speed);
+* the **buffer check**: HLO shape scan of the compiled fused round
+  (``launch.hlo_analysis.param_replica_bytes``) proving the gradient-space
+  step's live parameter tensors scale with M while model averaging
+  materializes M·L replicas.
+
 Two models: a linear softmax probe (tiny compute — measures the *engine*:
 dispatch, transfers, per-iteration syncs) and the paper's CNN (compute-bound
 on CPU; the engine delta is honest-but-small there, see DESIGN.md §9).
 Writes the recorded iterations/sec to ``BENCH_fedgs_fused.json``.
 
   PYTHONPATH=src python -m benchmarks.run --only fedgs_fused
+  PYTHONPATH=src python -m benchmarks.bench_fedgs_fused --scale quick
 """
 from __future__ import annotations
 
+import argparse
 import json
 import time
 
@@ -31,12 +45,18 @@ from repro.configs import femnist_cnn
 from repro.core import fedgs
 from repro.data import (DeviceBackedStreams, DeviceStream, FactoryStreams,
                         PartitionConfig, make_device_sampler, make_partition)
+from repro.launch import hlo_analysis
 from repro.models import cnn
 
 from .common import emit
 
-QUICK = dict(m=4, k=12, l=4, l_rnd=1, t=10, rounds=4, n=16)
-FULL = dict(m=10, k=35, l=10, l_rnd=2, t=10, rounds=3, n=32)
+QUICK = dict(m=4, k=12, l=4, l_rnd=1, t=10, rounds=4, n=16,
+             rounds_linear=12)
+FULL = dict(m=10, k=35, l=10, l_rnd=2, t=10, rounds=3, n=32,
+            rounds_linear=9)
+
+TRAIN_STEPS = ("model_avg", "grad_avg")
+BACKENDS = ("jnp", "pallas")
 
 
 def linear_init(key):
@@ -54,30 +74,55 @@ def linear_loss(params, batch):
 
 
 def _iters_per_sec(run_engine, rounds: int, t: int) -> float:
-    """Wall-clock iterations/sec over rounds 1..R-1 (round 0 pays compile)."""
+    """Iterations/sec from the *fastest* round after round 0 (which pays
+    compile). Min-over-rounds rejects transient contention on shared CPU
+    boxes, where a mean over a sub-second window can swing 2x run-to-run."""
     stamps: list[float] = []
     run_engine(lambda _log: stamps.append(time.perf_counter()))
     assert len(stamps) == rounds and rounds >= 2
-    return (rounds - 1) * t / (stamps[-1] - stamps[0])
+    deltas = [b - a for a, b in zip(stamps, stamps[1:])]
+    return t / min(deltas)
 
 
-def measure_engines(p: dict, model: str = "linear", seed: int = 0) -> dict:
+def _model(model: str, seed: int):
+    if model == "linear":
+        return linear_init(jax.random.PRNGKey(seed)), linear_loss
+    return (cnn.init_cnn(jax.random.PRNGKey(seed), femnist_cnn.smoke_config()),
+            cnn.loss_fn)
+
+
+def _setup(p: dict, seed: int):
+    """The shared partition + device sampler every bench leg measures on."""
     part = make_partition(PartitionConfig(num_factories=p["m"],
                                           devices_per_factory=p["k"],
                                           alpha=0.3, seed=seed))
     sampler = make_device_sampler(
         DeviceStream.from_partition(part, batch_size=p["n"], seed=seed))
-    if model == "linear":
-        params = linear_init(jax.random.PRNGKey(seed))
-        loss_fn = linear_loss
-    else:
-        params = cnn.init_cnn(jax.random.PRNGKey(seed),
-                              femnist_cnn.smoke_config())
-        loss_fn = cnn.loss_fn
-    cfg = fedgs.FedGSConfig(
+    return part, sampler
+
+
+def _rounds(p: dict, model: str) -> int:
+    """The linear probe finishes a round in tens of ms — give it more rounds
+    so the timing window is long enough to be stable."""
+    return p.get("rounds_linear", p["rounds"]) if model == "linear" \
+        else p["rounds"]
+
+
+def _make_cfg(p: dict, seed: int, rounds: int | None = None,
+              **overrides) -> fedgs.FedGSConfig:
+    return fedgs.FedGSConfig(
         num_groups=p["m"], devices_per_group=p["k"], num_selected=p["l"],
         num_presampled=p["l_rnd"], iters_per_round=p["t"],
-        rounds=p["rounds"], lr=0.05, batch_size=p["n"], seed=seed)
+        rounds=rounds or p["rounds"], lr=0.05, batch_size=p["n"], seed=seed,
+        **overrides)
+
+
+def measure_engines(p: dict, model: str = "linear", seed: int = 0) -> dict:
+    """host_numpy / host_device / fused with the default config
+    (train_step='grad_avg', kernel_backend='jnp')."""
+    part, sampler = _setup(p, seed)
+    params, loss_fn = _model(model, seed)
+    cfg = _make_cfg(p, seed, rounds=_rounds(p, model))
 
     def ips(run):
         return _iters_per_sec(run, cfg.rounds, cfg.iters_per_round)
@@ -100,10 +145,58 @@ def measure_engines(p: dict, model: str = "linear", seed: int = 0) -> dict:
     }
 
 
+def measure_matrix(p: dict, model: str, seed: int = 0, *,
+                   grad_avg_jnp: float | None = None) -> dict:
+    """Fused-engine train_step × kernel_backend matrix (DESIGN.md §11).
+
+    ``grad_avg_jnp`` fills that cell from a prior measurement —
+    measure_engines already times the identical default config, so
+    re-benchmarking it would just record the same number with fresh noise.
+    """
+    part, sampler = _setup(p, seed)
+    params, loss_fn = _model(model, seed)
+    out = {}
+    for ts in TRAIN_STEPS:
+        for kb in BACKENDS:
+            if (ts, kb) == ("grad_avg", "jnp") and grad_avg_jnp is not None:
+                out[f"{ts}/{kb}"] = grad_avg_jnp
+                continue
+            cfg = _make_cfg(p, seed, rounds=_rounds(p, model),
+                            train_step=ts, kernel_backend=kb)
+            ips = _iters_per_sec(
+                lambda lf: fedgs.run_fedgs_fused(
+                    params, loss_fn, sampler, part.p_real, cfg, log_fn=lf),
+                cfg.rounds, cfg.iters_per_round)
+            out[f"{ts}/{kb}"] = round(ips, 2)
+    return out
+
+
+def buffer_check(p: dict, seed: int = 0) -> dict:
+    """Compile the fused CNN round under both train steps (rolled scan) and
+    scan the HLO for replicated-parameter tensor shapes: grad_avg must hold
+    M copies of θ where model_avg materializes M·L (ISSUE 2 acceptance)."""
+    part, sampler = _setup(p, seed)
+    params, loss_fn = _model("cnn", seed)
+    weight_shapes = [leaf.shape for leaf in jax.tree.leaves(params)
+                     if leaf.ndim >= 2]
+    gp = fedgs.replicate_for_groups(params, p["m"])
+    key = jax.random.PRNGKey(seed)
+    out = {"m": p["m"], "l": p["l"]}
+    for ts in TRAIN_STEPS:
+        cfg = _make_cfg(p, seed, train_step=ts, scan_unroll=1)
+        round_fn = fedgs.make_fused_round(loss_fn, cfg, sampler)
+        text = round_fn.lower(
+            gp, key, jnp.int32(0),
+            jnp.asarray(part.p_real, jnp.float32)).compile().as_text()
+        out[ts] = hlo_analysis.param_replica_bytes(
+            text, weight_shapes, p["m"], p["l"])
+    return out
+
+
 def run(quick: bool = True, json_path: str = "BENCH_fedgs_fused.json") -> None:
     p = QUICK if quick else FULL
     out = {"scale": "quick" if quick else "full", "config": p,
-           "backend": jax.default_backend()}
+           "backend": jax.default_backend(), "matrix": {}}
     for model in ("linear", "cnn"):
         r = measure_engines(p, model=model)
         out[model] = r
@@ -118,8 +211,29 @@ def run(quick: bool = True, json_path: str = "BENCH_fedgs_fused.json") -> None:
              f"iters_per_sec={r['fused_iters_per_sec']}")
         emit(f"fedgs_fused.{model}.speedup", 0.0,
              f"x={r['speedup_vs_host']}")
+        mat = measure_matrix(p, model,
+                             grad_avg_jnp=r["fused_iters_per_sec"])
+        out["matrix"][model] = mat
+        for combo, ips in mat.items():
+            emit(f"fedgs_fused.{model}.matrix.{combo}", 1e6 / ips,
+                 f"iters_per_sec={ips}")
+        out[model]["grad_avg_speedup_vs_model_avg"] = round(
+            mat["grad_avg/jnp"] / mat["model_avg/jnp"], 2)
+    out["buffer_check"] = buffer_check(p)
+    for ts in TRAIN_STEPS:
+        bc = out["buffer_check"][ts]
+        emit(f"fedgs_fused.buffer_check.{ts}", 0.0,
+             f"m_bytes={bc['m_bytes']};ml_bytes={bc['ml_bytes']}")
     # headline: engine speedup over the pre-existing host path
     out["speedup"] = out["linear"]["speedup_vs_host"]
     with open(json_path, "w") as f:
         json.dump(out, f, indent=1)
         f.write("\n")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", choices=("quick", "full"), default="quick")
+    ap.add_argument("--json", default="BENCH_fedgs_fused.json")
+    args = ap.parse_args()
+    run(quick=args.scale == "quick", json_path=args.json)

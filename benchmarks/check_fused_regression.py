@@ -1,0 +1,54 @@
+"""CI gate: fail if the fused engine regressed >20% vs the committed bench.
+
+  python benchmarks/check_fused_regression.py BASELINE.json NEW.json
+
+Compares ``fused_iters_per_sec`` (the default engine config:
+``train_step='grad_avg'``, ``kernel_backend='jnp'``). Only the CNN number
+*gates*: it is compute-bound and stable, while the linear probe's
+engine-bound number swings with CPU contention even with min-over-rounds
+timing, so it is reported but not enforced. Host-loop numbers and the
+Pallas matrix entries (interpret-mode dispatch, not a hot path) never gate.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+TOLERANCE = 0.8  # new >= 0.8 * baseline, i.e. at most 20% regression
+GATED_MODELS = ("cnn",)
+
+
+def main(baseline_path: str, new_path: str) -> int:
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    with open(new_path) as f:
+        new = json.load(f)
+    if (baseline["scale"], baseline["config"]) != (new["scale"],
+                                                   new["config"]):
+        print(f"FAIL: baseline scale/config {baseline['scale']} "
+              f"{baseline['config']} != new {new['scale']} {new['config']} "
+              "— throughput ratios would be meaningless", file=sys.stderr)
+        return 2
+    failures = []
+    for model in ("linear", "cnn"):
+        old_ips = baseline[model]["fused_iters_per_sec"]
+        new_ips = new[model]["fused_iters_per_sec"]
+        gated = model in GATED_MODELS
+        ok = new_ips >= TOLERANCE * old_ips
+        status = "OK" if ok else ("REGRESSED" if gated else "slow (ungated)")
+        print(f"{model}: fused {old_ips} -> {new_ips} it/s "
+              f"({new_ips / old_ips:.2f}x) {status}")
+        if gated and not ok:
+            failures.append(model)
+    if failures:
+        print(f"FAIL: fused_iters_per_sec regressed >20% for {failures}",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 3:
+        print(__doc__, file=sys.stderr)
+        raise SystemExit(2)
+    raise SystemExit(main(sys.argv[1], sys.argv[2]))

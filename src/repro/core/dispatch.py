@@ -1,0 +1,68 @@
+"""Kernel-backend dispatch (``FedGSConfig.kernel_backend``, DESIGN.md §11.3).
+
+Routes the three aggregation/selection primitives of the FEDGS hot path to
+either plain jnp reductions or the repo's Pallas kernels:
+
+| primitive | ``'jnp'`` | ``'pallas'`` |
+|---|---|---|
+| internal average (Eq. 4) | `sync.weighted_average` | `kernels.agg_weighted.weighted_average_tree` |
+| external average (Eq. 5) | `sync.external_sync` | `kernels.agg_weighted.weighted_average_tree` (uniform) |
+| GBP-CS permutation step | `gbp_cs._default_step` (None) | `kernels.gbp_cs.ops.fused_step` |
+
+The Pallas ops fall back to interpret mode on CPU automatically
+(`kernels.common.use_interpret`), so `'pallas'` is runnable — if slow —
+everywhere; compiled kernels need a real TPU. Kernel imports are lazy so the
+default `'jnp'` path never touches `jax.experimental.pallas`.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import sync
+
+PyTree = Any
+
+BACKENDS = ("jnp", "pallas")
+
+
+def check_backend(backend: str) -> str:
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown kernel_backend: {backend!r} "
+                         f"(expected one of {BACKENDS})")
+    return backend
+
+
+def internal_avg_fn(backend: str) -> Callable[[PyTree, jax.Array], PyTree]:
+    """Weighted average over a leading client axis (Eq. 4) — applies to
+    stacked models (`train_step='model_avg'`) and stacked gradients
+    (`train_step='grad_avg'`) alike."""
+    if check_backend(backend) == "pallas":
+        from repro.kernels.agg_weighted import ops as agg_ops
+        return agg_ops.weighted_average_tree
+    return sync.weighted_average
+
+
+def external_avg_fn(backend: str) -> Callable[[PyTree], PyTree]:
+    """Uniform mean over a leading group/pod axis (Eq. 5)."""
+    if check_backend(backend) == "pallas":
+        from repro.kernels.agg_weighted import ops as agg_ops
+
+        def mean_tree(group_params: PyTree) -> PyTree:
+            m = jax.tree.leaves(group_params)[0].shape[0]
+            return agg_ops.weighted_average_tree(
+                group_params, jnp.ones((m,), jnp.float32))
+
+        return mean_tree
+    return sync.external_sync
+
+
+def gbp_step_fn(backend: str):
+    """`step_fn` for `gbp_cs.gbp_cs_minimize` / `selection.select_for_groups`
+    (None selects the jnp default step)."""
+    if check_backend(backend) == "pallas":
+        from repro.kernels.gbp_cs import ops as kops
+        return kops.fused_step
+    return None

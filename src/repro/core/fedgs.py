@@ -8,6 +8,13 @@ synchronization* (line 10) runs every T iterations.
 
 Workflow equivalence (paper §IV): FEDGS == FedAvg over M homogeneous super
 nodes, each running mini-batch SGD with batch nL for T local iterations.
+The default train step exploits this directly: ``train_step='grad_avg'``
+computes ONE weighted-mean gradient over the (L, n) superbatch and applies
+ONE SGD update per group — peak live parameter state is M·|θ|, not M·L·|θ|
+(DESIGN.md §11). ``train_step='model_avg'`` keeps the paper's literal
+L-one-step-models workflow as the oracle path. ``kernel_backend='pallas'``
+routes aggregation and the GBP-CS permutation step through the Pallas
+kernels (``core.dispatch``).
 
 Two execution engines share the same math (DESIGN.md §10.1):
 
@@ -30,7 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from . import gbp_cs, selection, sync
+from . import dispatch, gbp_cs, selection, sync
 
 PyTree = Any
 Array = jax.Array
@@ -54,6 +61,15 @@ class FedGSConfig:
     seed: int = 0
     engine: str = "host"          # 'host' (two-phase loop) | 'fused' (scan)
     scan_unroll: int = 0          # fused scan unroll; 0 = auto (DESIGN.md §7)
+    train_step: str = "grad_avg"  # 'grad_avg' (Eq. 4 in gradient space) |
+    #                               'model_avg' (oracle: L one-step models)
+    kernel_backend: str = "jnp"   # 'jnp' | 'pallas' (core.dispatch)
+
+    def __post_init__(self):
+        if self.train_step not in ("grad_avg", "model_avg"):
+            raise ValueError(f"unknown train_step: {self.train_step!r} "
+                             "(expected 'grad_avg' or 'model_avg')")
+        dispatch.check_backend(self.kernel_backend)
 
     @property
     def l_sel(self) -> int:
@@ -68,8 +84,10 @@ class IterationStats(NamedTuple):
 
 def _gather_selected(tree: PyTree, mask: Array, l: int) -> PyTree:
     """Gather the L selected devices' leading-axis entries (mask has exactly
-    L ones) so local training only computes on selected devices."""
-    idx = jnp.argsort(-mask)[:l]
+    L ones) so local training only computes on selected devices. top_k on a
+    0/1 mask yields the selected indices in ascending device order (ties
+    break toward lower indices), matching the stable argsort it replaces."""
+    _, idx = jax.lax.top_k(mask, l)
     return jax.tree.map(lambda leaf: leaf[idx], tree)
 
 
@@ -87,18 +105,15 @@ def make_fedgs_iteration(loss_fn: LossFn, cfg: FedGSConfig):
         if cfg.selection == "gbp_cs":
             sel = selection.select_clients_via_gbp_cs(
                 key, counts_m, p_real, cfg.num_selected, cfg.num_presampled,
-                init=cfg.init, max_iters=cfg.gbp_max_iters)
+                init=cfg.init, max_iters=cfg.gbp_max_iters,
+                step_fn=dispatch.gbp_step_fn(cfg.kernel_backend))
         else:
             sel = selection.select_clients_random(
                 key, counts_m, p_real, cfg.num_selected)
-        # -- Local Training (lines 5–7): one mini-batch SGD step per device
+        # -- Local Training + Internal Synchronization (lines 5–8, Eq. 4)
         sel_batches = _gather_selected(batch_m, sel.mask, cfg.num_selected)
-        dev_step = lambda b: sync.local_step(params_m, b, loss_fn, cfg.lr)
-        new_params, losses = jax.vmap(dev_step)(sel_batches)
-        # -- Internal Synchronization (line 8, Eq. 4); uniform n (paper §V.A)
-        synced = sync.weighted_average(
-            new_params, jnp.ones((cfg.num_selected,), jnp.float32))
-        return synced, (jnp.mean(losses), sel.divergence, sel.iterations)
+        synced, loss = _per_group_train(params_m, sel_batches, loss_fn, cfg)
+        return synced, (loss, sel.divergence, sel.iterations)
 
     @jax.jit
     def iteration(group_params: PyTree, key: Array, batches: PyTree,
@@ -112,10 +127,11 @@ def make_fedgs_iteration(loss_fn: LossFn, cfg: FedGSConfig):
     return iteration
 
 
-@jax.jit
-def external_sync_and_broadcast(group_params: PyTree) -> PyTree:
+@functools.partial(jax.jit, static_argnames=("backend",))
+def external_sync_and_broadcast(group_params: PyTree,
+                                backend: str = "jnp") -> PyTree:
     """Alg. 1 line 10 (Eq. 5): ω_t = mean_m ω_t^m, then ω_t^m ← ω_t."""
-    global_params = sync.external_sync(group_params)
+    global_params = dispatch.external_avg_fn(backend)(group_params)
     m = jax.tree.leaves(group_params)[0].shape[0]
     broadcast = jax.tree.map(
         lambda leaf: jnp.broadcast_to(leaf[None], (m,) + leaf.shape),
@@ -133,16 +149,50 @@ def global_params(group_params: PyTree) -> PyTree:
 
 
 def _per_group_train(params_m: PyTree, batches_m: PyTree, loss_fn: LossFn,
-                     cfg: FedGSConfig) -> tuple[PyTree, Array]:
-    """Lines 5–8 for one group: one local SGD step on each of the L selected
-    devices (vmapped), then internal sync (Eq. 4, uniform n — paper §V.A).
-    Shared verbatim by the host loop and the fused scan so both engines are
-    numerically interchangeable."""
-    dev_step = lambda b: sync.local_step(params_m, b, loss_fn, cfg.lr)
-    new_params, losses = jax.vmap(dev_step)(batches_m)
-    synced = sync.weighted_average(
-        new_params, jnp.ones((cfg.num_selected,), jnp.float32))
-    return synced, jnp.mean(losses)
+                     cfg: FedGSConfig,
+                     weights: Array | None = None) -> tuple[PyTree, Array]:
+    """Lines 5–8 for one group — shared verbatim by the host loop and the
+    fused scan so both engines are numerically interchangeable.
+
+    ``cfg.train_step`` picks the form of Eq. (4) (DESIGN.md §11):
+
+    * ``'model_avg'`` — the paper's literal workflow: one local SGD step on
+      each of the L selected devices (vmapped over batches; params are
+      closed over, but the L one-step models materialize), then the weighted
+      model average.
+    * ``'grad_avg'`` — the workflow-equivalent gradient-space form (§IV):
+      the weighted mean of per-device gradients is the gradient of the
+      weighted mean of per-device losses, so one backward pass over the
+      (L, n) superbatch produces the already-averaged gradient and ONE SGD
+      update follows — no per-device model (or gradient) stack is ever
+      live. With ``kernel_backend='pallas'`` the per-device gradients are
+      materialized instead and reduced by the ``agg_weighted`` kernel
+      (the TPU-resident weighted segment mean).
+
+    ``weights`` are the n^{m,k} internal-sync weights; uniform (paper §V.A)
+    if None.
+    """
+    if weights is None:
+        weights = jnp.ones((cfg.num_selected,), jnp.float32)
+    if cfg.train_step == "model_avg":
+        dev_step = lambda b: sync.local_step(params_m, b, loss_fn, cfg.lr)
+        new_params, losses = jax.vmap(dev_step)(batches_m)
+        synced = dispatch.internal_avg_fn(cfg.kernel_backend)(
+            new_params, weights)
+        return synced, jnp.mean(losses)
+    if cfg.kernel_backend == "pallas":
+        losses, grads = jax.vmap(
+            lambda b: sync.local_grads(params_m, b, loss_fn))(batches_m)
+        g = dispatch.internal_avg_fn("pallas")(grads, weights)
+        return sync.apply_sgd(params_m, g, cfg.lr), jnp.mean(losses)
+    wn = weights / jnp.maximum(jnp.sum(weights), 1e-12)
+
+    def weighted_loss(p):
+        losses = jax.vmap(lambda b: loss_fn(p, b))(batches_m)
+        return jnp.sum(losses * wn), losses
+
+    (_, losses), g = jax.value_and_grad(weighted_loss, has_aux=True)(params_m)
+    return sync.apply_sgd(params_m, g, cfg.lr), jnp.mean(losses)
 
 
 def make_group_train_step(loss_fn: LossFn, cfg: FedGSConfig):
@@ -213,13 +263,14 @@ def run_fedgs(
             sel = selection.select_groups_any(
                 keys, counts, p_real, cfg.num_selected, cfg.num_presampled,
                 method=cfg.selection, init=cfg.init,
-                max_iters=cfg.gbp_max_iters)
+                max_iters=cfg.gbp_max_iters,
+                step_fn=dispatch.gbp_step_fn(cfg.kernel_backend))
             masks = np.asarray(sel.mask)
             imgs, labs = streams.fetch_selected(masks, cfg.num_selected)
             gp, loss = train_step(gp, (jnp.asarray(imgs), jnp.asarray(labs)))
             losses.append(float(jnp.mean(loss)))
             divs.append(float(jnp.mean(sel.divergence)))
-        gp = external_sync_and_broadcast(gp)
+        gp = external_sync_and_broadcast(gp, backend=cfg.kernel_backend)
         log = RoundLog(round=r, loss=float(np.mean(losses)),
                        divergence=float(np.mean(divs)))
         if eval_fn is not None and (r + 1) % eval_every == 0:
@@ -305,7 +356,8 @@ def make_fused_round(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
             sel = selection.select_for_groups(
                 keys, counts, p_real, l, cfg.num_presampled,
                 method=cfg.selection, init=cfg.init,
-                max_iters=cfg.gbp_max_iters)
+                max_iters=cfg.gbp_max_iters,
+                step_fn=dispatch.gbp_step_fn(cfg.kernel_backend))
             imgs, labs = sampler.selected_batch(t, gids, sel.mask, l)
             gp, losses = jax.vmap(
                 lambda p, b: _per_group_train(p, b, loss_fn, cfg)
@@ -321,7 +373,8 @@ def make_fused_round(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
             t0 + jnp.arange(t_per_round, dtype=jnp.int32), unroll=unroll)
         # epilogue: external sync (Eq. 5) + broadcast back to the group axis
         g = sync.external_sync_grouped(
-            gp, axis_name if mesh is not None else None)
+            gp, axis_name if mesh is not None else None,
+            mean_fn=dispatch.external_avg_fn(cfg.kernel_backend))
         gp = jax.tree.map(
             lambda leaf: jnp.broadcast_to(leaf[None],
                                           (m_local,) + leaf.shape), g)

@@ -83,17 +83,22 @@ def select_clients_random(key: Array, counts: Array, p_real: Array,
 def select_for_groups(keys: Array, counts: Array, p_real: Array, l: int,
                       l_rnd: int, *, method: str = "gbp_cs",
                       init: str = gbp_cs.MPINV,
-                      max_iters: int = 64) -> SelectionResult:
+                      max_iters: int = 64, step_fn=None) -> SelectionResult:
     """vmap over M groups: keys (M,2), counts (M, K, F).
 
     Un-jitted on purpose: this is the selection body shared by the two-phase
     host loop (which jits it via :func:`select_groups_any`) and the fused
     scan loop (which traces it inside ``lax.scan``, DESIGN.md §10.1) — one
     code path, so both engines compute bit-for-bit the same masks.
+
+    ``step_fn`` swaps the GBP-CS permutation step (e.g. the Pallas
+    ``kernels.gbp_cs.ops.fused_step`` via ``core.dispatch.gbp_step_fn``);
+    it is forwarded untouched to :func:`gbp_cs.gbp_cs_minimize`.
     """
     if method == "gbp_cs":
         fn = lambda k, c: select_clients_via_gbp_cs(
-            k, c, p_real, l, l_rnd, init=init, max_iters=max_iters)
+            k, c, p_real, l, l_rnd, init=init, max_iters=max_iters,
+            step_fn=step_fn)
     elif method == "random":
         fn = lambda k, c: select_clients_random(k, c, p_real, l)
     else:
@@ -102,5 +107,6 @@ def select_for_groups(keys: Array, counts: Array, p_real: Array, l: int,
 
 
 select_groups_any = functools.partial(
-    jax.jit, static_argnames=("l", "l_rnd", "method", "init", "max_iters")
+    jax.jit,
+    static_argnames=("l", "l_rnd", "method", "init", "max_iters", "step_fn")
 )(select_for_groups)

@@ -28,9 +28,21 @@ def local_step(params: PyTree, batch: Any, loss_fn: Callable[..., Array],
     """Eq. (3): w ← w − (η / n) Σ ∇L(w, D_t). ``loss_fn(params, batch)`` must
     return the *mean* loss over the mini-batch (so the η/n scaling of the
     summed gradient is already applied)."""
-    loss, grads = jax.value_and_grad(loss_fn)(params, batch)
-    new = jax.tree.map(lambda p, g: (p - lr * g).astype(p.dtype), params, grads)
-    return new, loss
+    loss, grads = local_grads(params, batch, loss_fn)
+    return apply_sgd(params, grads, lr), loss
+
+
+def local_grads(params: PyTree, batch: Any, loss_fn: Callable[..., Array]
+                ) -> tuple[Array, PyTree]:
+    """Eq. (3) split at the gradient: (mean loss, ∇L(w, D_t))."""
+    return jax.value_and_grad(loss_fn)(params, batch)
+
+
+def apply_sgd(params: PyTree, grads: PyTree, lr: float) -> PyTree:
+    """The SGD update of Eq. (3), separated so it can be applied once to an
+    already-averaged gradient (gradient-space Eq. 4)."""
+    return jax.tree.map(lambda p, g: (p - lr * g).astype(p.dtype),
+                        params, grads)
 
 
 def weighted_average(trees: PyTree, weights: Array) -> PyTree:
@@ -65,6 +77,28 @@ def internal_sync(client_params: PyTree, mask: Array,
     if batch_sizes is not None:
         w = w * jnp.asarray(batch_sizes, jnp.float32)
     return weighted_average(client_params, w)
+
+
+def grad_internal_sync(grads: PyTree, mask: Array,
+                       batch_sizes: Array | None = None) -> PyTree:
+    """Gradient-space simulator form of Eq. (4), the counterpart of
+    :func:`grad_internal_sync_collective`.
+
+    For one SGD step from a common ω_{t−1}^m, averaging the L one-step
+    models equals averaging the L per-device gradients and stepping once
+    (paper §IV workflow equivalence):
+
+        Σ_k (n_k/n) (ω − η g_k) = ω − η Σ_k (n_k/n) g_k .
+
+    Args:
+      grads: leaves (K, ...) — stacked per-device gradients.
+      mask: (K,) 0/1 selection C_t^m (or arbitrary nonnegative weights).
+      batch_sizes: (K,) mini-batch sizes n^{m,k}; uniform if None.
+    """
+    w = jnp.asarray(mask, jnp.float32)
+    if batch_sizes is not None:
+        w = w * jnp.asarray(batch_sizes, jnp.float32)
+    return weighted_average(grads, w)
 
 
 def external_sync(group_params: PyTree) -> PyTree:
@@ -103,15 +137,18 @@ def external_sync_collective(params: PyTree, axis_name: str = "pod") -> PyTree:
 
 
 def external_sync_grouped(group_params: PyTree,
-                          axis_name: str | None = None) -> PyTree:
+                          axis_name: str | None = None, *,
+                          mean_fn: Callable[[PyTree], PyTree] | None = None
+                          ) -> PyTree:
     """Eq. (5) for the scan-fused engine (DESIGN.md §8): mean over the local
     leading group axis, then — when the group axis is sharded over a device
     mesh — a pmean over ``axis_name`` to complete the global average.
 
     With equal groups per shard, mean-of-local-means == global mean, so the
     sharded and unsharded paths agree. ``axis_name=None`` is the transparent
-    single-device fallback (pure local mean)."""
-    g = external_sync(group_params)
+    single-device fallback (pure local mean). ``mean_fn`` overrides the local
+    group mean (e.g. the Pallas aggregation kernel via ``core.dispatch``)."""
+    g = (mean_fn or external_sync)(group_params)
     if axis_name is not None:
         g = external_sync_collective(g, axis_name)
     return g

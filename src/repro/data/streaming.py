@@ -192,7 +192,7 @@ def make_device_sampler(stream: DeviceStream) -> DeviceSampler:
     def selected_batch(t, gids, masks, l):
         def per_group(gid, mask):
             labels = _group_labels(t, gid)                 # (K, n)
-            idx = jnp.argsort(-mask)[:l]                   # stable, like host
+            _, idx = jax.lax.top_k(mask, l)                # stable, like host
             lab_sel = labels[idx]                          # (l, n)
             sty_sel = jnp.repeat(styles[gid][idx], n, axis=0)   # (l*n, 6)
             kg = jax.random.fold_in(jax.random.fold_in(img_key, t), gid)

@@ -89,6 +89,38 @@ def collective_bytes(hlo_text: str, *, loop_trips: tuple[float, ...] = ()
     return out
 
 
+def param_replica_bytes(hlo_text: str, param_shapes, m: int, l: int) -> dict:
+    """Footprint of group- vs device-replicated parameter tensors in an HLO
+    module (the fused-round live-buffer check, ISSUE 2 / DESIGN.md §11).
+
+    Scans every tensor shape in ``hlo_text`` and buckets the ones that look
+    like replicated parameters: ``(m,) + s`` (one copy per group — the
+    gradient-space engine's steady state) vs ``(m, l) + s`` (one copy per
+    selected device per group — the model-averaging workflow). Callers
+    should pass only distinctive ``param_shapes`` (ndim ≥ 2 weight leaves);
+    1-D biases collide with activation shapes.
+
+    Returns ``{"m_bytes": ..., "ml_bytes": ..., "m_count": ...,
+    "ml_count": ...}`` — text-level totals (an instruction inside a fusion
+    counts once), good for asserting *scaling*, not for exact live-set
+    accounting."""
+    m_shapes = {(m,) + tuple(int(d) for d in s) for s in param_shapes}
+    ml_shapes = {(m, l) + tuple(int(d) for d in s) for s in param_shapes}
+    out = {"m_bytes": 0, "ml_bytes": 0, "m_count": 0, "ml_count": 0}
+    for dt, dims in _SHAPE_RE.findall(hlo_text):
+        shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+        nbytes = _DTYPE_BYTES[dt]
+        for d in shape:
+            nbytes *= d
+        if shape in ml_shapes:
+            out["ml_bytes"] += nbytes
+            out["ml_count"] += 1
+        elif shape in m_shapes:
+            out["m_bytes"] += nbytes
+            out["m_count"] += 1
+    return out
+
+
 @dataclasses.dataclass
 class Roofline:
     flops: float                 # analytic, global per step (XLA-fallback)

@@ -89,7 +89,10 @@ def make_train_step(cfg, *, lr: float = 1e-3, grad_accum: int = 1,
 
     def pod_grads(params, batch):
         """One pod's internal iteration: grads averaged over its devices
-        (SPMD inserts the all-reduce over 'data' — Eq. 4)."""
+        (SPMD inserts the all-reduce over 'data' — Eq. 4). This is the
+        production form of the simulator's ``train_step='grad_avg'``
+        (`core.fedgs._per_group_train`, DESIGN.md §11): gradient-space
+        internal sync, one optimizer update per pod."""
         if grad_accum == 1:
             loss, grads = jax.value_and_grad(
                 lambda p: loss_fn(cast_params(p), batch))(params)
@@ -135,8 +138,20 @@ def make_train_step(cfg, *, lr: float = 1e-3, grad_accum: int = 1,
     return train_step
 
 
-def external_sync_step(stacked_params: PyTree) -> PyTree:
-    """Eq. 5: ω ← (1/M) Σ_m ω^m across pods, broadcast back to every pod."""
+def external_sync_step(stacked_params: PyTree, *,
+                       kernel_backend: str = "jnp") -> PyTree:
+    """Eq. 5: ω ← (1/M) Σ_m ω^m across pods, broadcast back to every pod.
+
+    ``kernel_backend='pallas'`` routes the pod average through the
+    `kernels.agg_weighted` flat-buffer kernel (`core.dispatch`,
+    DESIGN.md §11.3) — the same dispatch the simulator engines use."""
+    if kernel_backend != "jnp":
+        from repro.core import dispatch
+        mean = dispatch.external_avg_fn(kernel_backend)(stacked_params)
+        return jax.tree.map(
+            lambda g, p: jnp.broadcast_to(g[None], p.shape).astype(p.dtype),
+            mean, stacked_params)
+
     def sync(leaf):
         mean = jnp.mean(leaf.astype(jnp.float32), axis=0, keepdims=True)
         return jnp.broadcast_to(mean, leaf.shape).astype(leaf.dtype)

@@ -47,6 +47,14 @@ def main() -> None:
     ap.add_argument("--engine", choices=("host", "fused", "sharded"),
                     default="host",
                     help="host loop / fused lax.scan / scan + shard_map")
+    ap.add_argument("--train-step", choices=("grad_avg", "model_avg"),
+                    default="grad_avg",
+                    help="Eq. 4 in gradient space (one update per group) / "
+                         "the paper's literal L one-step models (oracle)")
+    ap.add_argument("--kernel-backend", choices=("jnp", "pallas"),
+                    default="jnp",
+                    help="route aggregation + GBP-CS steps through jnp or "
+                         "the Pallas kernels (interpret-mode on CPU)")
     ap.add_argument("--init", choices=("mpinv", "zero", "random"),
                     default="mpinv")
     ap.add_argument("--alpha", type=float, default=0.3, help="Dirichlet skew")
@@ -73,7 +81,8 @@ def main() -> None:
         num_selected=args.selected, num_presampled=args.presampled,
         iters_per_round=args.iters, rounds=args.rounds, lr=args.lr,
         batch_size=args.batch_size, selection=args.selection,
-        init=args.init, seed=args.seed)
+        init=args.init, seed=args.seed, train_step=args.train_step,
+        kernel_backend=args.kernel_backend)
 
     logs_out = []
 

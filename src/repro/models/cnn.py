@@ -43,8 +43,18 @@ def _conv(p, x):
 
 
 def _maxpool(x):
-    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
-                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    # Non-overlapping 2x2 max as a reshape + max: same forward values as
+    # reduce_window, but the backward is an elementwise mask instead of
+    # XLA:CPU's select-and-scatter, which costs ~10x the whole conv stack
+    # there (ties — e.g. post-relu zeros — split the subgradient evenly
+    # rather than picking the first window element; both are valid max
+    # subgradients).
+    b, h, w, c = x.shape
+    assert h % 2 == 0 and w % 2 == 0, (
+        f"_maxpool needs even spatial dims, got {(h, w)}: the reshape-max "
+        "form has no VALID-padding edge drop; pad image_size to a multiple "
+        "of 4")
+    return jnp.max(x.reshape(b, h // 2, 2, w // 2, 2, c), axis=(2, 4))
 
 
 def features(params: PyTree, x: Array) -> Array:

@@ -105,3 +105,27 @@ def test_pallas_step_equals_default_step(selection_instance):
                                 step_fn=kops.fused_step)
     assert np.allclose(np.asarray(r1.x), np.asarray(r2.x))
     assert abs(float(r1.distance) - float(r2.distance)) < 1e-3
+
+
+def test_select_for_groups_pallas_step_parity():
+    """Satellite (ISSUE 2): the Pallas GBP-CS step is reachable through
+    `selection.select_for_groups` via `step_fn` and yields the same masks
+    as the jnp step for a batch of groups."""
+    from repro.core import selection
+    from repro.core.dispatch import gbp_step_fn
+    rng = np.random.default_rng(11)
+    m, k, f, l, l_rnd = 3, 16, 10, 6, 2
+    counts = jnp.asarray(
+        rng.integers(0, 8, size=(m, k, f)).astype(np.float32))
+    p_real = jnp.asarray(rng.dirichlet(np.ones(f)).astype(np.float32))
+    keys = jax.random.split(jax.random.PRNGKey(5), m)
+    r_jnp = selection.select_for_groups(keys, counts, p_real, l, l_rnd,
+                                        max_iters=16)
+    assert gbp_step_fn("jnp") is None
+    r_pal = selection.select_for_groups(keys, counts, p_real, l, l_rnd,
+                                        max_iters=16,
+                                        step_fn=gbp_step_fn("pallas"))
+    np.testing.assert_array_equal(np.asarray(r_jnp.mask),
+                                  np.asarray(r_pal.mask))
+    np.testing.assert_allclose(np.asarray(r_jnp.divergence),
+                               np.asarray(r_pal.divergence), atol=1e-5)

@@ -53,6 +53,10 @@ def test_train_step_semantics_single_device():
     for l in jax.tree.leaves(synced):
         np.testing.assert_allclose(np.asarray(l[0]), np.asarray(l[1]),
                                    rtol=1e-6)
+    # the Pallas dispatch route computes the same pod mean
+    synced_pal = steps.external_sync_step(new, kernel_backend="pallas")
+    for a, b in zip(jax.tree.leaves(synced), jax.tree.leaves(synced_pal)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
 
 
 def test_grad_accum_matches_full_batch():

@@ -99,3 +99,48 @@ def test_collective_forms_match_reference():
     out = f(params, w)
     np.testing.assert_allclose(np.asarray(out["w"]),
                                np.asarray(params["w"]))
+
+
+def test_grad_internal_sync_equals_model_average():
+    """Gradient-space Eq. (4): weighted-averaging per-device gradients and
+    stepping once == weighted-averaging the per-device one-step models."""
+    key = jax.random.PRNGKey(2)
+    params, (x, y) = _make_problem(key, n=60)
+    k_dev, lr = 5, 0.1
+    batches = (x.reshape(k_dev, 12, -1), y.reshape(k_dev, 12))
+    weights = jnp.array([1.0, 3.0, 0.5, 2.0, 1.5])   # non-uniform n^{m,k}
+    models, _ = jax.vmap(
+        lambda b: sync.local_step(params, b, _quad_loss, lr))(batches)
+    want = sync.weighted_average(models, weights)
+    _, grads = jax.vmap(
+        lambda b: sync.local_grads(params, b, _quad_loss))(batches)
+    g = sync.grad_internal_sync(grads, weights)
+    got = sync.apply_sgd(params, g, lr)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   rtol=1e-5, atol=1e-7)
+
+
+def test_per_group_train_nonuniform_weights_grad_equals_model():
+    """The weighted segment mean: _per_group_train with non-uniform weights
+    gives identical params under grad_avg (single weighted backward),
+    grad_avg+pallas (materialized grads through the agg kernel), and
+    model_avg (weighted model average)."""
+    key = jax.random.PRNGKey(3)
+    params, (x, y) = _make_problem(key, n=48)
+    l = 4
+    batches = (x.reshape(l, 12, -1), y.reshape(l, 12))
+    weights = jnp.array([1.0, 2.0, 0.25, 4.0])
+    outs = {}
+    for ts, kb in (("model_avg", "jnp"), ("grad_avg", "jnp"),
+                   ("grad_avg", "pallas")):
+        cfg = fedgs.FedGSConfig(num_selected=l, lr=0.1, train_step=ts,
+                                kernel_backend=kb)
+        outs[(ts, kb)], _ = fedgs._per_group_train(
+            params, batches, _quad_loss, cfg, weights=weights)
+    ref = outs[("model_avg", "jnp")]
+    for combo, got in outs.items():
+        for k in params:
+            np.testing.assert_allclose(
+                np.asarray(got[k]), np.asarray(ref[k]), rtol=1e-5,
+                atol=1e-6, err_msg=str(combo))
