@@ -42,7 +42,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import femnist_cnn
-from repro.core import fedgs
+from repro.core import baselines, fedgs
 from repro.data import (DeviceBackedStreams, DeviceStream, FactoryStreams,
                         PartitionConfig, make_device_sampler, make_partition)
 from repro.launch import hlo_analysis
@@ -59,18 +59,19 @@ TRAIN_STEPS = ("model_avg", "grad_avg")
 BACKENDS = ("jnp", "pallas")
 
 
+# 784->62 softmax probe (negligible train compute, so iterations/sec
+# measures the execution engine rather than the model) — THE shared probe,
+# same one bench_fedgs_vs_baselines' harness matrix runs
+_PROBE = baselines.linear_probe_model()
+
+
 def linear_init(key):
-    """784->62 softmax probe: negligible train compute, so iterations/sec
-    measures the execution engine rather than the model."""
-    return {"w": jax.random.normal(key, (784, 62)) * 0.01,
-            "b": jnp.zeros((62,))}
+    return _PROBE.init(key)
 
 
 def linear_loss(params, batch):
     x, y = batch
-    logits = x.reshape(x.shape[0], -1) @ params["w"] + params["b"]
-    logp = jax.nn.log_softmax(logits, -1)
-    return -jnp.mean(jnp.take_along_axis(logp, y[..., None], -1))
+    return baselines.softmax_xent(_PROBE.apply(params, x), y)
 
 
 def _iters_per_sec(run_engine, rounds: int, t: int) -> float:

@@ -1,107 +1,286 @@
-"""Table II / Fig. 6 reproduction (reduced scale): FEDGS vs the ten
-comparison approaches on the synthetic non-i.i.d. FEMNIST stream.
+"""Table II / Fig. 6 reproduction on the UNIFIED fused engine (DESIGN.md §12).
+
+FEDGS and every comparison strategy now run through the same device-resident
+experiment engine (``core.engine``): chunked multi-round ``lax.scan``
+(⌈R/chunk⌉ host dispatches per experiment instead of R), clients sampled
+on-device (``DeviceSampler`` for FEDGS, ``ClientPool`` for the baselines)
+and the test set evaluated on-device *inside* the scan every round — so the
+strategy comparison measures the strategies, not two different harnesses.
 
 Paper scale is M=10, K=35, L=10, T=50, R=500 on real FEMNIST; on this CPU
 container we run a reduced-but-faithful version (same protocol, fewer
-rounds/devices) — the *relative* ordering is the reproduction target
-(DESIGN.md §2). ``quick`` runs a 5-method subset; ``--full`` runs all 15.
+rounds/devices, the smoke CNN) — the *relative* ordering is the
+reproduction target (DESIGN.md §2). ``quick`` runs a 4-method subset;
+``--full`` runs all fifteen methods.
+
+Writes ``BENCH_table2.json``:
+
+* per-strategy final accuracy/loss, **rounds-to-target-accuracy** (the
+  statistic behind the paper's "59% fewer rounds" claim; target = FedAvg's
+  final accuracy) and fused rounds/sec (CNN — compute-bound, gated by
+  ``check_fused_regression.py --table2``);
+* the **harness matrix**: per-strategy host-loop vs fused-engine
+  rounds/sec on the linear probe (tiny model compute, so the number
+  isolates the *harness*: sampling + dispatch + aggregation — same regime
+  split as BENCH_fedgs_fused.json, see DESIGN.md §9); the fused engine
+  must hold ≥2x the host-loop harness throughput;
+* the dispatch count per experiment (⌈R/chunk⌉ vs the host loop's R).
+
+  PYTHONPATH=src python -m benchmarks.run --only table2
+  PYTHONPATH=src python -m benchmarks.bench_fedgs_vs_baselines --full
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import femnist_cnn
-from repro.core import baselines, fedgs
-from repro.data import FactoryStreams, PartitionConfig, femnist, make_partition
+from repro.core import baselines, engine, fedgs
+from repro.data import (DeviceStream, FactoryStreams, PartitionConfig,
+                        femnist, make_client_pool, make_device_sampler,
+                        make_partition)
 from repro.models import cnn
 
 from .common import emit
 
-# reduced-scale protocol (quick / full)
-QUICK = dict(m=4, k=12, l=4, l_rnd=1, t=10, rounds=5, b_rounds=10,
-             clients=12, steps=4, n=16)
-FULL = dict(m=10, k=35, l=10, l_rnd=2, t=25, rounds=12, b_rounds=40,
-            clients=100, steps=10, n=32)
+# reduced-scale protocol (quick / full); chunk = rounds per host dispatch.
+# rounds/b_rounds divide by chunk so every dispatch covers `chunk` rounds
+# and inter-dispatch deltas time a constant amount of work.
+QUICK = dict(m=4, k=12, l=4, l_rnd=1, t=10, rounds=8, b_rounds=12,
+             clients=12, steps=4, n=16, chunk=4, test_n=10, lr=0.05)
+FULL = dict(m=10, k=35, l=10, l_rnd=2, t=25, rounds=10, b_rounds=20,
+            clients=50, steps=5, n=32, chunk=5, test_n=40, lr=0.05)
+
+QUICK_SUBSET = ["fedavg", "fedprox", "fedavgm", "fedadam"]
+# the harness matrix always runs the quick protocol + these strategies
+HARNESS_SUBSET = QUICK_SUBSET
+HARNESS_ROUNDS = 40
 
 
-def run(quick: bool = True) -> None:
+def _min_delta_rate(stamps: list[float], per_delta: int) -> float:
+    """rounds/sec from the FASTEST inter-stamp delta (stamp 0 pays compile;
+    min rejects transient contention on shared CPU boxes, DESIGN.md §9)."""
+    deltas = [b - a for a, b in zip(stamps, stamps[1:])]
+    return per_delta / min(deltas)
+
+
+def rounds_to_target(logs: list[engine.RoundRecord],
+                     target: float) -> int | None:
+    """First round whose test accuracy reaches ``target`` (1-based round
+    count — the paper's #rounds-to-accuracy statistic), None if never."""
+    for rec in logs:
+        if rec.test_accuracy is not None and rec.test_accuracy >= target:
+            return rec.round + 1
+    return None
+
+
+def _fedgs_cfg(p: dict, sel: str) -> fedgs.FedGSConfig:
+    return fedgs.FedGSConfig(
+        num_groups=p["m"], devices_per_group=p["k"], num_selected=p["l"],
+        num_presampled=p["l_rnd"], iters_per_round=p["t"],
+        rounds=p["rounds"], lr=p["lr"], batch_size=p["n"], selection=sel)
+
+
+def run_fedgs_leg(p: dict, part, eval_fn,
+                  sel: str) -> tuple[list, float, dict]:
+    """One FEDGS run (smoke CNN) on the chunked fused engine; returns
+    (logs, rounds/sec, dispatch info)."""
+    sampler = make_device_sampler(
+        DeviceStream.from_partition(part, batch_size=p["n"], seed=1))
+    params = cnn.init_cnn(jax.random.PRNGKey(0), femnist_cnn.smoke_config())
+    loss_fn = cnn.loss_fn
+    cfg = _fedgs_cfg(p, sel)
+    # unroll=1: the chunked rounds scan stays rolled — measured on this box
+    # it matches the per-round dispatch throughput while compiling ~chunk×
+    # faster, and the T-iteration scan inside the round still auto-unrolls
+    exp = fedgs.make_fedgs_experiment(params, loss_fn, sampler, part.p_real,
+                                      cfg, eval_fn=eval_fn, unroll=1)
+    stamps: list[float] = []
+    _, logs = engine.run_experiment(
+        exp, cfg.rounds, eval_every=1, chunk=p["chunk"],
+        on_chunk=lambda r0, n: stamps.append(time.perf_counter()))
+    rps = _min_delta_rate(stamps, p["chunk"]) if len(stamps) >= 2 else 0.0
+    disp = dict(rounds=cfg.rounds, chunk=p["chunk"],
+                dispatches=engine.num_dispatches(cfg.rounds, p["chunk"]))
+    return logs, rps, disp
+
+
+def run_baseline_leg(p: dict, pool, model, strategy, eval_fn, *,
+                     chunk: int, unroll: int = 1, eval_every: int = 1,
+                     rounds: int | None = None) -> tuple[list, float]:
+    """One baseline strategy on the fused engine; returns (logs, rounds/s)."""
+    cfg = baselines.BaselineConfig(
+        clients_per_round=p["clients"], local_steps=p["steps"], lr=p["lr"],
+        rounds=rounds or p["b_rounds"], seed=0)
+    exp = baselines.make_baseline_experiment(
+        model, strategy, pool, cfg, eval_fn=eval_fn, unroll=unroll)
+    stamps: list[float] = []
+    _, logs = engine.run_experiment(
+        exp, cfg.rounds, eval_every=eval_every, chunk=chunk,
+        on_chunk=lambda r0, n: stamps.append(time.perf_counter()))
+    rps = _min_delta_rate(stamps, chunk) if len(stamps) >= 2 else 0.0
+    return logs, rps
+
+
+def measure_harness_matrix(p: dict) -> dict:
+    """Host-loop vs fused-engine rounds/sec per strategy on the linear
+    probe (the engine-bound regime — the ≥2x harness-throughput claim)."""
+    model = baselines.linear_probe_model()
+    part = make_partition(PartitionConfig(
+        num_factories=p["m"], devices_per_factory=p["k"], alpha=0.3, seed=0))
+    stream = DeviceStream.from_partition(part, batch_size=p["n"], seed=1)
+    pool = make_client_pool(stream, clients=p["clients"], steps=p["steps"])
+    cfg = baselines.BaselineConfig(
+        clients_per_round=p["clients"], local_steps=p["steps"], lr=p["lr"],
+        rounds=HARNESS_ROUNDS, seed=0)
+    out = {}
+    strategies = baselines.all_strategies(model)
+    for name in HARNESS_SUBSET:
+        strat = strategies[name]
+        # fused: chunked scan, on-device client sampling; full rounds-scan
+        # unroll (tiny body — compile is cheap, keeps image synth parallel)
+        exp = baselines.make_baseline_experiment(model, strat, pool, cfg,
+                                                 unroll=0)
+        stamps: list[float] = []
+        engine.run_experiment(
+            exp, cfg.rounds, chunk=p["chunk"],
+            on_chunk=lambda r0, n: stamps.append(time.perf_counter()))
+        fused_rps = _min_delta_rate(stamps, p["chunk"])
+        # host loop: numpy FactoryStreams sampling + one dispatch per round
+        streams = FactoryStreams(part, batch_size=p["n"], seed=1)
+        stamps = []
+        baselines.run_baseline(
+            model, strat,
+            lambda r: streams.sample_baseline_round(p["clients"], p["steps"],
+                                                    seed=1000 + r),
+            cfg, log_fn=lambda rec: stamps.append(time.perf_counter()))
+        host_rps = _min_delta_rate(stamps, 1)
+        out[name] = {"host_rounds_per_sec": round(host_rps, 2),
+                     "fused_rounds_per_sec": round(fused_rps, 2),
+                     "speedup": round(fused_rps / host_rps, 2)}
+    # FEDGS on the same probe: two-phase host loop vs chunked fused engine
+    sampler = make_device_sampler(stream)
+    params = model.init(jax.random.PRNGKey(0))
+    lcfg = _fedgs_cfg({**p, "rounds": 12}, "gbp_cs")
+    loss = lambda prm, b: baselines.softmax_xent(model.apply(prm, b[0]), b[1])
+    exp = fedgs.make_fedgs_experiment(params, loss, sampler, part.p_real,
+                                      lcfg)
+    stamps = []
+    engine.run_experiment(exp, lcfg.rounds, chunk=p["chunk"],
+                          on_chunk=lambda r0, n: stamps.append(
+                              time.perf_counter()))
+    fused_rps = _min_delta_rate(stamps, p["chunk"])
+    streams = FactoryStreams(part, batch_size=p["n"], seed=1)
+    stamps = []
+    fedgs.run_fedgs(params, loss, streams, part.p_real, lcfg,
+                    log_fn=lambda rec: stamps.append(time.perf_counter()))
+    host_rps = _min_delta_rate(stamps, 1)
+    out["fedgs"] = {"host_rounds_per_sec": round(host_rps, 2),
+                    "fused_rounds_per_sec": round(fused_rps, 2),
+                    "speedup": round(fused_rps / host_rps, 2)}
+    return out
+
+
+def run(quick: bool = True, json_path: str = "BENCH_table2.json") -> None:
     p = QUICK if quick else FULL
     part = make_partition(PartitionConfig(num_factories=p["m"],
                                           devices_per_factory=p["k"],
                                           alpha=0.3, seed=0))
-    mcfg = femnist_cnn.smoke_config() if quick else femnist_cnn.CONFIG
+    mcfg = femnist_cnn.smoke_config()
     model = cnn.make_model_api(mcfg)
-    tx, ty = femnist.make_test_set(n_per_class=10 if quick else 40)
-    tx, ty = jnp.asarray(tx), jnp.asarray(ty)
+    tx, ty = femnist.make_test_set(n_per_class=p["test_n"])
+    eval_fn = cnn.make_eval_fn(tx, ty)            # device-resident, jittable
+    pe_eval = lambda pe: eval_fn(pe[0])           # baselines: (params, extras)
 
-    def eval_params(params):
-        return cnn.evaluate(params, tx, ty)
+    out = {"scale": "quick" if quick else "full", "config": p,
+           "backend": jax.default_backend(), "strategies": {}}
 
-    results = {}
-
-    # ---- FEDGS (ours) + random-selection ablation --------------------------
+    # ---- FEDGS (ours) + random-selection ablation, chunked fused engine ---
     for sel in ("gbp_cs", "random"):
-        streams = FactoryStreams(part, batch_size=p["n"], seed=1)
-        params = cnn.init_cnn(jax.random.PRNGKey(0), mcfg)
-        cfg = fedgs.FedGSConfig(
-            num_groups=p["m"], devices_per_group=p["k"],
-            num_selected=p["l"], num_presampled=p["l_rnd"],
-            iters_per_round=p["t"], rounds=p["rounds"], lr=0.05,
-            batch_size=p["n"], selection=sel)
-        t0 = time.time()
-        final, logs = fedgs.run_fedgs(params, cnn.loss_fn, streams,
-                                      part.p_real, cfg,
-                                      eval_fn=eval_params,
-                                      eval_every=cfg.rounds)
-        tl, ta = logs[-1].test_loss, logs[-1].test_accuracy
-        div = float(np.mean([l.divergence for l in logs]))
         name = "fedgs" if sel == "gbp_cs" else "fedgs_random_sel"
-        results[name] = (ta, tl)
-        emit(f"table2.{name}", (time.time() - t0) * 1e6,
-             f"test_acc={ta:.4f};test_loss={tl:.4f};divergence={div:.4f}")
-
-    # ---- baselines ---------------------------------------------------------
-    strategies = baselines.all_strategies(model)
-    subset = (["fedavg", "fedprox", "fedavgm", "fedadam"] if quick
-              else list(strategies))
-    bcfg = baselines.BaselineConfig(clients_per_round=p["clients"],
-                                    local_steps=p["steps"], lr=0.05,
-                                    rounds=p["b_rounds"], seed=0)
-
-    def eval_fn(pe):
-        params, extras = pe
-        return cnn.evaluate(params, tx, ty)
-
-    for name in subset:
-        streams = FactoryStreams(part, batch_size=p["n"], seed=1)
-        strat = strategies[name]
         t0 = time.time()
-        # CGAU/FedFusion evaluate through their extras-aware head; for the
-        # Table II metric we evaluate the shared backbone+head like the paper
-        (params, extras), logs = baselines.run_baseline(
-            model, strat,
-            lambda r: streams.sample_baseline_round(p["clients"], p["steps"],
-                                                    seed=1000 + r),
-            bcfg, eval_fn=eval_fn, eval_every=bcfg.rounds)
-        ta = logs[-1].get("test_accuracy", float("nan"))
-        tl = logs[-1].get("test_loss", float("nan"))
-        results[name] = (ta, tl)
+        logs, rps, disp = run_fedgs_leg(p, part, eval_fn, sel)
+        ta, tl = logs[-1].test_accuracy, logs[-1].test_loss
+        div = sum(l.divergence for l in logs) / len(logs)
+        out["strategies"][name] = {
+            "final_test_accuracy": round(ta, 4),
+            "final_test_loss": round(tl, 4),
+            "divergence": round(div, 4),
+            "fused_rounds_per_sec": round(rps, 3), **disp,
+            "logs": [dict(round=l.round, test_accuracy=l.test_accuracy)
+                     for l in logs]}
         emit(f"table2.{name}", (time.time() - t0) * 1e6,
-             f"test_acc={ta:.4f};test_loss={tl:.4f}")
+             f"test_acc={ta:.4f};test_loss={tl:.4f};divergence={div:.4f};"
+             f"rounds_per_sec={rps:.2f};dispatches={disp['dispatches']}")
 
-    # headline claim: FEDGS ≥ FedAvg accuracy
-    if "fedavg" in results:
-        gain = results["fedgs"][0] - results["fedavg"][0]
-        emit("table2.fedgs_minus_fedavg_acc", 0.0, f"delta={gain:+.4f}")
+    # ---- baselines, fused engine (on-device ClientPool sampling) ----------
+    strategies = baselines.all_strategies(model)
+    subset = QUICK_SUBSET if quick else list(strategies)
+    stream = DeviceStream.from_partition(part, batch_size=p["n"], seed=1)
+    pool = make_client_pool(stream, clients=p["clients"], steps=p["steps"])
+    for name in subset:
+        t0 = time.time()
+        logs, rps = run_baseline_leg(p, pool, model, strategies[name],
+                                     pe_eval, chunk=p["chunk"])
+        ta, tl = logs[-1].test_accuracy, logs[-1].test_loss
+        out["strategies"][name] = {
+            "final_test_accuracy": round(ta, 4),
+            "final_test_loss": round(tl, 4),
+            "fused_rounds_per_sec": round(rps, 3),
+            "rounds": p["b_rounds"], "chunk": p["chunk"],
+            "dispatches": engine.num_dispatches(p["b_rounds"], p["chunk"]),
+            "logs": [dict(round=l.round, test_accuracy=l.test_accuracy)
+                     for l in logs]}
+        emit(f"table2.{name}", (time.time() - t0) * 1e6,
+             f"test_acc={ta:.4f};test_loss={tl:.4f};rounds_per_sec={rps:.2f}")
 
-    # ---- engine throughput: host loop vs scan-fused on the device stream --
-    from . import bench_fedgs_fused
-    eng = bench_fedgs_fused.measure_engines(
-        bench_fedgs_fused.QUICK if quick else bench_fedgs_fused.FULL)
-    emit("table2.fedgs_fused_speedup", 0.0,
-         f"host_ips={eng['host_numpy_iters_per_sec']};"
-         f"fused_ips={eng['fused_iters_per_sec']};x={eng['speedup_vs_host']}")
+    # ---- rounds-to-target-accuracy (the paper's 59%-fewer-rounds claim) ---
+    # target = FedAvg's final accuracy, UNROUNDED (so FedAvg itself reaches
+    # it at its final eval and every comparison is on the raw log values)
+    target = [e["test_accuracy"] for e in out["strategies"]["fedavg"]["logs"]
+              if e["test_accuracy"] is not None][-1]
+    out["target_accuracy"] = round(target, 4)
+    for name, rec in out["strategies"].items():
+        logs = [engine.RoundRecord(round=e["round"], loss=0.0,
+                                   test_accuracy=e["test_accuracy"])
+                for e in rec["logs"]]
+        rec["rounds_to_target"] = rounds_to_target(logs, target)
+        del rec["logs"]
+    r_fedgs = out["strategies"]["fedgs"]["rounds_to_target"]
+    r_fedavg = out["strategies"]["fedavg"]["rounds_to_target"]
+    if r_fedgs and r_fedavg:
+        out["fedgs_round_savings_vs_fedavg"] = round(
+            1.0 - r_fedgs / r_fedavg, 4)
+        emit("table2.fedgs_round_savings", 0.0,
+             f"fedgs={r_fedgs};fedavg={r_fedavg};"
+             f"saved={out['fedgs_round_savings_vs_fedavg']:+.2%}")
+    gain = (out["strategies"]["fedgs"]["final_test_accuracy"]
+            - out["strategies"]["fedavg"]["final_test_accuracy"])
+    out["fedgs_minus_fedavg_acc"] = round(gain, 4)
+    emit("table2.fedgs_minus_fedavg_acc", 0.0, f"delta={gain:+.4f}")
+
+    # ---- harness matrix: host loop vs fused engine, linear probe ----------
+    out["harness_config"] = {**QUICK, "rounds_linear": HARNESS_ROUNDS}
+    out["harness_matrix"] = measure_harness_matrix(QUICK)
+    for name, row in out["harness_matrix"].items():
+        emit(f"table2.harness.{name}", 1e6 / row["fused_rounds_per_sec"],
+             f"host_rps={row['host_rounds_per_sec']};"
+             f"fused_rps={row['fused_rounds_per_sec']};x={row['speedup']}")
+    out["harness_speedup_min"] = min(
+        row["speedup"] for row in out["harness_matrix"].values())
+
+    with open(json_path, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="all fifteen methods at the larger reduced scale")
+    ap.add_argument("--json", default="BENCH_table2.json")
+    args = ap.parse_args()
+    run(quick=not args.full, json_path=args.json)

@@ -1,13 +1,22 @@
-"""CI gate: fail if the fused engine regressed >20% vs the committed bench.
+"""CI gate: fail if a fused-engine benchmark regressed >20% vs the
+committed numbers.
 
   python benchmarks/check_fused_regression.py BASELINE.json NEW.json
+  python benchmarks/check_fused_regression.py --table2 BASELINE.json NEW.json
 
-Compares ``fused_iters_per_sec`` (the default engine config:
-``train_step='grad_avg'``, ``kernel_backend='jnp'``). Only the CNN number
-*gates*: it is compute-bound and stable, while the linear probe's
-engine-bound number swings with CPU contention even with min-over-rounds
-timing, so it is reported but not enforced. Host-loop numbers and the
-Pallas matrix entries (interpret-mode dispatch, not a hot path) never gate.
+Default mode compares ``BENCH_fedgs_fused.json``'s ``fused_iters_per_sec``
+(the default engine config: ``train_step='grad_avg'``,
+``kernel_backend='jnp'``). Only the CNN number *gates*: it is compute-bound
+and stable, while the linear probe's engine-bound number swings with CPU
+contention even with min-over-rounds timing, so it is reported but not
+enforced. Host-loop numbers and the Pallas matrix entries (interpret-mode
+dispatch, not a hot path) never gate.
+
+``--table2`` compares ``BENCH_table2.json``: every strategy's CNN
+``fused_rounds_per_sec`` must hold ≥80% of the committed floor (compute-
+bound, stable — the per-strategy throughput floor). The linear-probe
+``harness_matrix`` speedups are reported but not enforced, same policy as
+the linear probe above.
 """
 from __future__ import annotations
 
@@ -18,11 +27,7 @@ TOLERANCE = 0.8  # new >= 0.8 * baseline, i.e. at most 20% regression
 GATED_MODELS = ("cnn",)
 
 
-def main(baseline_path: str, new_path: str) -> int:
-    with open(baseline_path) as f:
-        baseline = json.load(f)
-    with open(new_path) as f:
-        new = json.load(f)
+def check_fused(baseline: dict, new: dict) -> int:
     if (baseline["scale"], baseline["config"]) != (new["scale"],
                                                    new["config"]):
         print(f"FAIL: baseline scale/config {baseline['scale']} "
@@ -47,8 +52,53 @@ def main(baseline_path: str, new_path: str) -> int:
     return 0
 
 
-if __name__ == "__main__":
-    if len(sys.argv) != 3:
+def check_table2(baseline: dict, new: dict) -> int:
+    if (baseline["scale"], baseline["config"]) != (new["scale"],
+                                                   new["config"]):
+        print(f"FAIL: baseline scale/config {baseline['scale']} "
+              f"{baseline['config']} != new {new['scale']} {new['config']} "
+              "— throughput ratios would be meaningless", file=sys.stderr)
+        return 2
+    failures = []
+    for name, old in baseline["strategies"].items():
+        if name not in new["strategies"]:
+            print(f"FAIL: strategy {name} missing from new bench",
+                  file=sys.stderr)
+            failures.append(name)
+            continue
+        old_rps = old["fused_rounds_per_sec"]
+        new_rps = new["strategies"][name]["fused_rounds_per_sec"]
+        if old_rps <= 0:   # a leg with <2 dispatches records 0.0 — no floor
+            print(f"{name}: no committed floor (baseline {old_rps}), skipped")
+            continue
+        ok = new_rps >= TOLERANCE * old_rps
+        print(f"{name}: fused {old_rps} -> {new_rps} rounds/s "
+              f"({new_rps / old_rps:.2f}x) {'OK' if ok else 'REGRESSED'}")
+        if not ok:
+            failures.append(name)
+    for name, row in new.get("harness_matrix", {}).items():
+        print(f"harness {name}: host {row['host_rounds_per_sec']} vs fused "
+              f"{row['fused_rounds_per_sec']} rounds/s "
+              f"({row['speedup']}x, ungated)")
+    if failures:
+        print("FAIL: per-strategy fused_rounds_per_sec fell below the "
+              f"80% floor for {failures}", file=sys.stderr)
+        return 1
+    return 0
+
+
+def main(argv: list[str]) -> int:
+    table2 = "--table2" in argv
+    paths = [a for a in argv if a != "--table2"]
+    if len(paths) != 2:
         print(__doc__, file=sys.stderr)
-        raise SystemExit(2)
-    raise SystemExit(main(sys.argv[1], sys.argv[2]))
+        return 2
+    with open(paths[0]) as f:
+        baseline = json.load(f)
+    with open(paths[1]) as f:
+        new = json.load(f)
+    return (check_table2 if table2 else check_fused)(baseline, new)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -56,7 +56,7 @@ def main():
         if l.test_accuracy is not None:
             line += f" | acc {l.test_accuracy:.4f}"
         print(line, flush=True)
-        logs_out.append(vars(l))
+        logs_out.append(l.to_dict())
 
     final, _ = fedgs.run_fedgs(
         params, cnn.loss_fn, streams, part.p_real, cfg,

@@ -8,6 +8,7 @@
 from . import (  # noqa: F401
     baselines,
     distributions,
+    engine,
     fedgs,
     gbp_cs,
     samplers,

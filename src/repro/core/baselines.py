@@ -25,6 +25,8 @@ import numpy as np
 
 from repro import optim
 
+from . import engine
+
 PyTree = Any
 Array = jax.Array
 
@@ -37,6 +39,27 @@ class ModelAPI(NamedTuple):
     head: Callable[[PyTree, Array], Array]         # features -> logits
     feature_dim: int
     num_classes: int
+
+
+def linear_probe_model(image_pixels: int = 784,
+                       num_classes: int = 62) -> ModelAPI:
+    """flatten->softmax probe: negligible train compute, so benchmarks and
+    tests that run it measure the *harness* (sampling, dispatch,
+    aggregation) rather than the model (DESIGN.md §9)."""
+    def init(key):
+        return {"w": jax.random.normal(key, (image_pixels, num_classes))
+                * 0.01,
+                "b": jnp.zeros((num_classes,))}
+
+    def features(params, x):
+        return x.reshape(x.shape[0], -1)
+
+    def head(params, f):
+        return f @ params["w"] + params["b"]
+
+    return ModelAPI(init=init, apply=lambda p, x: head(p, features(p, x)),
+                    features=features, head=head, feature_dim=image_pixels,
+                    num_classes=num_classes)
 
 
 def softmax_xent(logits: Array, labels: Array) -> Array:
@@ -297,9 +320,15 @@ class BaselineConfig:
     seed: int = 0
 
 
-def make_round_fn(model: ModelAPI, strategy: Strategy, cfg: BaselineConfig):
-    """One federated round, jitted: client updates (scan over local steps,
-    vmapped over clients) + server aggregation."""
+def make_round_step(model: ModelAPI, strategy: Strategy, cfg: BaselineConfig):
+    """One federated round, PURE: client updates (scan over local steps,
+    vmapped over clients) + server aggregation. Shared verbatim by the
+    per-round host harness (:func:`run_baseline` over a host batch callback)
+    and the fused engine (:func:`make_baseline_experiment`), so the Table II
+    comparison never runs two different round implementations.
+
+    round_step(gparams, gextras, server_state, batches, weights) ->
+    (new_params, new_extras, new_server_state, mean client train loss)."""
 
     def client_update(gparams, gextras, batches):
         # batches: leaves (S, n, ...) — S local steps
@@ -307,58 +336,136 @@ def make_round_fn(model: ModelAPI, strategy: Strategy, cfg: BaselineConfig):
             params, extras = carry
             def loss(pe):
                 return strategy.client_loss(pe[0], pe[1], gparams, gextras, batch)
+            step_loss, grads = jax.value_and_grad(loss)((params, extras))
             (params, extras) = jax.tree.map(
-                lambda p, g: (p - cfg.lr * g).astype(p.dtype), (params, extras),
-                jax.grad(loss)((params, extras)))
-            return (params, extras), ()
-        (params, extras), _ = jax.lax.scan(step, (gparams, gextras), batches)
+                lambda p, g: (p - cfg.lr * g).astype(p.dtype),
+                (params, extras), grads)
+            return (params, extras), step_loss
+        (params, extras), losses = jax.lax.scan(
+            step, (gparams, gextras), batches)
         # client train accuracy on the last batch (for IDA+INTRAC)
         x, y = jax.tree.map(lambda l: l[-1], batches)
         acc = accuracy(model.apply(params, x), y)
-        return params, extras, acc
+        return params, extras, acc, jnp.mean(losses)
 
-    @jax.jit
-    def round_fn(gparams, gextras, server_state, batches, weights):
-        stack_p, stack_e, accs = jax.vmap(
+    def round_step(gparams, gextras, server_state, batches, weights):
+        stack_p, stack_e, accs, losses = jax.vmap(
             client_update, in_axes=(None, None, 0))(gparams, gextras, batches)
         new_p, new_e, server_state = strategy.aggregate(
             stack_p, stack_e, weights, accs, server_state, gparams, gextras)
         # cast back to the original dtypes
         new_p = jax.tree.map(lambda n, o: n.astype(o.dtype), new_p, gparams)
-        return new_p, new_e, server_state
+        return new_p, new_e, server_state, jnp.mean(losses)
 
-    return round_fn
+    return round_step
+
+
+def make_round_fn(model: ModelAPI, strategy: Strategy, cfg: BaselineConfig):
+    """Jitted :func:`make_round_step` (the host harness' per-round dispatch)."""
+    return jax.jit(make_round_step(model, strategy, cfg))
+
+
+def init_strategy_state(model: ModelAPI, strategy: Strategy, seed: int,
+                        params: PyTree | None = None) -> tuple:
+    """The (params, extras, server_state) triple every harness starts from —
+    one PRNG discipline, so host and fused runs are parameter-identical."""
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        params = model.init(key)
+    extras = strategy.init_extras(jax.random.fold_in(key, 1), model)
+    return params, extras, strategy.init_server_state(params)
+
+
+def make_baseline_experiment(
+    model: ModelAPI,
+    strategy: Strategy,
+    pool,                        # data.streaming.ClientPool
+    cfg: BaselineConfig,
+    *,
+    eval_fn: Callable[[PyTree], tuple[Array, Array]] | None = None,
+    params: PyTree | None = None,
+    unroll: int = 1,
+) -> engine.Experiment:
+    """A Table II strategy as an ``engine.Experiment`` (DESIGN.md §12).
+
+    State is (params, extras, server_state); each round samples its
+    ``cfg.clients_per_round`` clients *on-device* from ``pool`` (a
+    ``ClientPool`` — pure in the round index) and applies
+    :func:`make_round_step`, all inside the engine's chunked round scan.
+    ``eval_fn`` (jittable) sees the (params, extras) pair. ``unroll=0``
+    restores the engine's auto rounds-scan unroll (full on CPU) — worth it
+    only for tiny round bodies (e.g. the linear harness probe).
+    """
+    round_step = make_round_step(model, strategy, cfg)
+    state = init_strategy_state(model, strategy, cfg.seed, params)
+
+    def round_fn(state, r):
+        params, extras, server_state = state
+        batches, weights = pool.round_batches(r)
+        params, extras, server_state, loss = round_step(
+            params, extras, server_state, batches, weights)
+        return (params, extras, server_state), {"loss": loss}
+
+    # unroll=1: the round body's local-steps scan is rolled, so its ops run
+    # single-threaded on XLA:CPU either way (DESIGN.md §7) — unrolling the
+    # rounds scan would multiply compile time without buying throughput.
+    return engine.Experiment(
+        name=strategy.name, init_state=state, round_fn=round_fn,
+        params_fn=lambda state: (state[0], state[1]), eval_fn=eval_fn,
+        unroll=unroll)
 
 
 def run_baseline(
     model: ModelAPI,
     strategy: Strategy,
-    sample_round_batches: Callable[[int], tuple[PyTree, np.ndarray]],
+    data,                        # ClientPool | callable r -> (batches, weights)
     cfg: BaselineConfig,
     *,
     eval_fn: Callable[[PyTree], tuple[float, float]] | None = None,
     eval_every: int = 5,
     params: PyTree | None = None,
-) -> tuple[PyTree, list[dict]]:
+    chunk: int = 0,
+    log_fn: Callable[[engine.RoundRecord], None] | None = None,
+) -> tuple[PyTree, list[engine.RoundRecord]]:
     """Run ``cfg.rounds`` federated rounds of ``strategy``.
 
-    ``sample_round_batches(r)`` returns (batches, weights): batches leaves
-    (C, S, n, ...) for the C=clients_per_round sampled clients and their
-    aggregation weights (data sizes)."""
-    key = jax.random.PRNGKey(cfg.seed)
-    if params is None:
-        params = model.init(key)
-    extras = strategy.init_extras(jax.random.fold_in(key, 1), model)
-    server_state = strategy.init_server_state(params)
+    ``data`` selects the harness:
+
+    * a ``ClientPool`` (``data.streaming.make_client_pool``) — the fused
+      engine path: clients are sampled on-device inside the engine's chunked
+      round scan, ``chunk`` rounds per host dispatch (0 = auto), eval (if
+      any) on-device; ``eval_fn`` must then be jittable.
+    * a host callable ``data(r) -> (batches, weights)`` with batch leaves
+      (C, S, n, ...) — the per-round harness for host-sourced data (numpy
+      ``FactoryStreams.sample_baseline_round``); one dispatch per round over
+      the same :func:`make_round_step`.
+
+    Both return (final (params, extras), one RoundRecord per round).
+    """
+    if hasattr(data, "round_batches"):          # fused engine path
+        exp = make_baseline_experiment(model, strategy, data, cfg,
+                                       eval_fn=eval_fn, params=params)
+        state, logs = engine.run_experiment(
+            exp, cfg.rounds,
+            eval_every=eval_every if eval_fn is not None else 0,
+            chunk=chunk, log_fn=log_fn)
+        return (state[0], state[1]), logs
+    params, extras, server_state = init_strategy_state(
+        model, strategy, cfg.seed, params)
     round_fn = make_round_fn(model, strategy, cfg)
     logs = []
     for r in range(cfg.rounds):
-        batches, weights = sample_round_batches(r)
-        params, extras, server_state = round_fn(
-            params, extras, server_state, batches, jnp.asarray(weights, jnp.float32))
-        entry = {"round": r, "strategy": strategy.name}
+        batches, weights = data(r)
+        params, extras, server_state, loss = round_fn(
+            params, extras, server_state, batches,
+            jnp.asarray(weights, jnp.float32))
+        tl = ta = None
         if eval_fn is not None and (r + 1) % eval_every == 0:
             tl, ta = eval_fn((params, extras))
-            entry |= {"test_loss": float(tl), "test_accuracy": float(ta)}
-        logs.append(entry)
+            tl, ta = float(tl), float(ta)
+        rec = engine.RoundRecord(round=r, loss=float(loss), test_loss=tl,
+                                 test_accuracy=ta, strategy=strategy.name)
+        logs.append(rec)
+        if log_fn is not None:
+            log_fn(rec)
     return (params, extras), logs

@@ -1,0 +1,236 @@
+"""Unified device-resident experiment engine (DESIGN.md §12).
+
+Every Table II experiment — FEDGS and all fifteen comparison strategies —
+is "a state pytree plus a pure one-round function". This module abstracts
+that behind the :class:`Experiment` protocol and drives it with ONE
+execution engine:
+
+* **Chunked multi-round scan** — instead of one jitted dispatch per
+  federated round, the engine ``lax.scan``s over *chunks of rounds*
+  (``chunk`` rounds per host dispatch), so an R-round experiment costs
+  ⌈R/chunk⌉ host round-trips. Per-round metrics come back stacked
+  ``(chunk, ...)`` once per dispatch.
+* **On-device eval** — the test set lives on the accelerator and periodic
+  evaluation runs *inside* the scan body behind a ``lax.cond`` (a no-op
+  branch on non-eval rounds), so evaluating every ``eval_every`` rounds
+  costs no extra dispatches and no host↔device test-set transfers.
+* **Typed logs** — one :class:`RoundRecord` per round, shared by the
+  engine, the host loops, ``benchmarks/`` and ``launch/train.py`` (no more
+  mutable RoundLog here, list-of-dicts there).
+
+``core.fedgs.make_fedgs_experiment`` and ``core.baselines
+.make_baseline_experiment`` are the two producers; both feed
+:func:`run_experiment`, so the FEDGS-vs-baselines comparison benchmarks the
+*strategies*, never two different harnesses.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+PyTree = Any
+Array = jax.Array
+
+_NAN = float("nan")
+
+
+class RoundRecord(NamedTuple):
+    """One federated round's log entry — THE log record of the repo.
+
+    ``test_loss``/``test_accuracy`` are None on rounds without eval.
+    Field names match the old ``fedgs.RoundLog`` so attribute access is
+    unchanged; ``to_dict`` replaces ``vars(log)`` / the baselines' ad-hoc
+    dicts for JSON output.
+    """
+    round: int
+    loss: float
+    divergence: float = _NAN
+    test_loss: float | None = None
+    test_accuracy: float | None = None
+    strategy: str = ""
+
+    def to_dict(self) -> dict:
+        d = dict(self._asdict())
+        if math.isnan(d["divergence"]):   # strategies without a divergence
+            d["divergence"] = None        # (strict-JSON safe, unlike NaN)
+        return d
+
+
+def records_from_metrics(r0: int, metrics: dict, *, strategy: str = ""
+                         ) -> list[RoundRecord]:
+    """Stacked per-chunk device metrics -> per-round typed records.
+
+    ``metrics`` maps name -> (chunk,) array; recognized names: ``loss``,
+    ``divergence``, ``test_loss``, ``test_accuracy`` (NaN = no eval that
+    round).
+    """
+    host = {k: np.asarray(v, np.float64) for k, v in metrics.items()}
+    n = len(next(iter(host.values())))
+    recs = []
+    for i in range(n):
+        tl = host.get("test_loss", [_NAN] * n)[i]
+        ta = host.get("test_accuracy", [_NAN] * n)[i]
+        recs.append(RoundRecord(
+            round=r0 + i,
+            loss=float(host["loss"][i]) if "loss" in host else _NAN,
+            divergence=float(host.get("divergence", [_NAN] * n)[i]),
+            test_loss=None if math.isnan(tl) else float(tl),
+            test_accuracy=None if math.isnan(ta) else float(ta),
+            strategy=strategy,
+        ))
+    return recs
+
+
+@dataclasses.dataclass(frozen=True)
+class Experiment:
+    """One federated-learning experiment, engine-agnostic.
+
+    ``round_fn(state, r) -> (state', metrics)`` is the pure body of round
+    ``r`` (a traced int32 scalar): client sampling, local training and
+    server aggregation all happen on-device; ``metrics`` is a dict of f32
+    scalars with a structure that is constant across rounds.
+
+    ``params_fn(state)`` extracts the evaluable global parameters;
+    ``eval_fn(params) -> (test_loss, test_accuracy)`` must be jittable
+    (device-resident test set — see ``models.cnn.make_eval_fn``) because the
+    engine calls it *inside* the round scan.
+
+    ``mesh``/``state_spec`` opt the state into ``shard_map`` execution
+    (FEDGS group sharding): ``state_spec`` is a PartitionSpec pytree
+    (prefix) for ``state``; metrics and round indices are replicated.
+    """
+    name: str
+    init_state: PyTree
+    round_fn: Callable[[PyTree, Array], tuple[PyTree, dict]]
+    params_fn: Callable[[PyTree], PyTree]
+    eval_fn: Callable[[PyTree], tuple[Array, Array]] | None = None
+    mesh: Any = None
+    axis_name: str = "groups"
+    state_spec: Any = None
+    unroll: int = 0   # rounds-scan unroll; 0 = auto (full on CPU, rolled else)
+
+
+def default_chunk(rounds: int, eval_every: int = 0) -> int:
+    """Rounds per host dispatch when the caller doesn't say: align chunks to
+    the eval period when there is one, otherwise a modest fixed chunk —
+    large enough to amortize dispatch, small enough that the (unrolled on
+    CPU, DESIGN.md §7) chunk body compiles quickly."""
+    chunk = eval_every if eval_every > 0 else 8
+    return max(1, min(chunk, rounds))
+
+
+def _make_chunk_fn(exp: Experiment, eval_every: int, unroll: int):
+    """Build the jitted chunk dispatch: scan of round_fn (+ cond'd eval)
+    over a (chunk,) vector of round indices, state donated across
+    dispatches. jit re-specializes automatically for a partial last chunk."""
+
+    def body(state, r):
+        state, metrics = exp.round_fn(state, r)
+        metrics = dict(metrics)
+        if exp.eval_fn is not None and eval_every > 0:
+            nan2 = (jnp.float32(_NAN), jnp.float32(_NAN))
+            tl, ta = jax.lax.cond(
+                (r + 1) % eval_every == 0,
+                lambda p: exp.eval_fn(p),
+                lambda p: nan2,
+                exp.params_fn(state))
+            metrics["test_loss"] = jnp.asarray(tl, jnp.float32)
+            metrics["test_accuracy"] = jnp.asarray(ta, jnp.float32)
+        return state, metrics
+
+    def run_chunk(state, rs):
+        length = rs.shape[0]
+        if unroll >= length:
+            # Fully unrolled chunk: emit the rounds inline with NO scan op.
+            # XLA:CPU executes ops inside a rolled loop body single-threaded
+            # — even a length-1 scan (DESIGN.md §7) — so the inline form is
+            # what keeps per-dispatch compute intra-op parallel on CPU.
+            ms = []
+            for i in range(length):
+                state, m = body(state, rs[i])
+                ms.append(m)
+            return state, jax.tree.map(lambda *xs: jnp.stack(xs), *ms)
+        return jax.lax.scan(body, state, rs, unroll=max(1, unroll))
+
+    if exp.mesh is not None:
+        from jax.experimental.shard_map import shard_map
+        run_chunk = shard_map(
+            run_chunk, mesh=exp.mesh,
+            in_specs=(exp.state_spec, P()),
+            out_specs=(exp.state_spec, P()),
+            check_rep=False)
+    return jax.jit(run_chunk, donate_argnums=(0,))
+
+
+def run_experiment(
+    exp: Experiment,
+    rounds: int,
+    *,
+    eval_every: int = 0,
+    chunk: int = 0,
+    log_fn: Callable[[RoundRecord], None] | None = None,
+    on_chunk: Callable[[int, int], None] | None = None,
+) -> tuple[PyTree, list[RoundRecord]]:
+    """Run ``rounds`` federated rounds of ``exp`` in ⌈rounds/chunk⌉ host
+    dispatches.
+
+    ``eval_every`` > 0 (with ``exp.eval_fn`` set) evaluates on-device every
+    that many rounds inside the scan. ``chunk`` = rounds per dispatch
+    (0 = :func:`default_chunk`). ``on_chunk(r0, n)`` fires after each
+    dispatch (benchmarks time dispatch boundaries with it).
+
+    Returns (final state, one :class:`RoundRecord` per round).
+    """
+    eval_on = eval_every if exp.eval_fn is not None else 0
+    chunk = chunk or default_chunk(rounds, eval_on)
+    chunk = max(1, min(chunk, rounds))
+    # XLA:CPU runs rolled scan bodies single-threaded (DESIGN.md §7) — fully
+    # unroll the rounds scan there, keep it rolled on accelerators.
+    unroll = exp.unroll or (chunk if jax.default_backend() == "cpu" else 1)
+
+    # copy the initial state: the chunk dispatch donates its input buffers,
+    # and donating exp.init_state directly would delete caller-owned arrays
+    # (warm-start params, a re-run of the same Experiment)
+    state = jax.tree.map(lambda leaf: jnp.array(leaf, copy=True),
+                         exp.init_state)
+    if exp.mesh is not None and exp.state_spec is not None:
+        state = jax.device_put(
+            state, jax.tree.map(
+                lambda spec: NamedSharding(exp.mesh, spec), exp.state_spec,
+                is_leaf=lambda x: isinstance(x, P)))
+    if exp.eval_fn is not None and eval_every > 0:
+        try:   # clear error now instead of a ConcretizationTypeError later:
+            jax.eval_shape(exp.eval_fn, exp.params_fn(state))
+        except jax.errors.JAXTypeError as e:
+            raise TypeError(
+                f"Experiment {exp.name!r}: eval_fn is not jittable — the "
+                "engine evaluates on-device inside the round scan. Build it "
+                "with models.cnn.make_eval_fn (device-resident test set) "
+                "instead of a host-loop eval like cnn.evaluate.") from e
+    chunk_fn = _make_chunk_fn(exp, eval_on, unroll)
+    logs: list[RoundRecord] = []
+    r0 = 0
+    while r0 < rounds:
+        n = min(chunk, rounds - r0)
+        rs = r0 + jnp.arange(n, dtype=jnp.int32)
+        state, metrics = chunk_fn(state, rs)
+        recs = records_from_metrics(r0, metrics, strategy=exp.name)
+        logs.extend(recs)
+        if log_fn is not None:
+            for rec in recs:
+                log_fn(rec)
+        if on_chunk is not None:
+            on_chunk(r0, n)
+        r0 += n
+    return state, logs
+
+
+def num_dispatches(rounds: int, chunk: int) -> int:
+    """⌈R/chunk⌉ — the host round-trips an experiment costs on this engine."""
+    return math.ceil(rounds / max(1, chunk))

@@ -35,9 +35,9 @@ from typing import Any, Callable, Iterator, NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from . import dispatch, gbp_cs, selection, sync
+from . import dispatch, engine, gbp_cs, selection, sync
 
 PyTree = Any
 Array = jax.Array
@@ -208,13 +208,10 @@ def make_group_train_step(loss_fn: LossFn, cfg: FedGSConfig):
     return step
 
 
-@dataclasses.dataclass
-class RoundLog:
-    round: int
-    loss: float
-    divergence: float
-    test_accuracy: float | None = None
-    test_loss: float | None = None
+# The typed per-round log record lives in core.engine and is shared by the
+# engine, both host loops, benchmarks and launch/train.py (DESIGN.md §12).
+RoundRecord = engine.RoundRecord
+RoundLog = engine.RoundRecord  # back-compat alias
 
 
 def run_fedgs(
@@ -271,11 +268,13 @@ def run_fedgs(
             losses.append(float(jnp.mean(loss)))
             divs.append(float(jnp.mean(sel.divergence)))
         gp = external_sync_and_broadcast(gp, backend=cfg.kernel_backend)
-        log = RoundLog(round=r, loss=float(np.mean(losses)),
-                       divergence=float(np.mean(divs)))
+        tl = ta = None
         if eval_fn is not None and (r + 1) % eval_every == 0:
             tl, ta = eval_fn(global_params(gp))
-            log.test_loss, log.test_accuracy = float(tl), float(ta)
+            tl, ta = float(tl), float(ta)
+        log = RoundRecord(round=r, loss=float(np.mean(losses)),
+                          divergence=float(np.mean(divs)),
+                          test_loss=tl, test_accuracy=ta, strategy="fedgs")
         logs.append(log)
         if log_fn is not None:
             log_fn(log)
@@ -304,25 +303,27 @@ def make_group_mesh(num_groups: int | None = None):
     return jax.make_mesh((n,), ("groups",))
 
 
-def make_fused_round(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
-                     mesh=None, axis_name: str = "groups"):
-    """Build the jitted one-round function of the device-resident engine.
+def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
+                    mesh=None, axis_name: str = "groups"):
+    """Build the PURE one-round body of the device-resident engine.
 
-    Returns ``round_fn(group_params, key, t0, p_real) -> (group_params',
+    Returns ``round_body(group_params, key, t0, p_real) -> (group_params',
     key', losses (T,), divergences (T,))``. The T internal iterations run as
     a single ``lax.scan`` (selection → local step → internal sync per scan
-    step), with external sync + broadcast as the epilogue; ``group_params``
-    buffers are donated, so steady-state rounds allocate nothing new.
+    step), with external sync + broadcast as the epilogue.
 
     ``sampler`` is a DeviceSampler (see repro.data.streaming): two pure
     functions of (iteration t, global group ids) — the scan never leaves the
     accelerator for data.
 
-    With ``mesh``, the M-sized group axis is sharded over ``axis_name`` via
-    ``shard_map``: each shard simulates M/n_shards super nodes, selection
-    keys are sliced from the *global* key fan-out (so results are invariant
-    to the shard count), and external sync completes with a pmean across
-    shards. ``mesh=None`` is the transparent single-device path.
+    With ``mesh``, the body is written for execution *inside* ``shard_map``
+    over ``axis_name``: each shard simulates M/n_shards super nodes,
+    selection keys are sliced from the *global* key fan-out (so results are
+    invariant to the shard count), and external sync completes with a pmean
+    across shards. The caller applies ``shard_map`` —
+    :func:`make_fused_round` for one jitted round, ``engine.run_experiment``
+    for the chunked multi-round scan. ``mesh=None`` is the transparent
+    single-device path.
     """
     m, t_per_round, l = cfg.num_groups, cfg.iters_per_round, cfg.num_selected
     n_shards = 1 if mesh is None else _mesh_axis_size(mesh, axis_name)
@@ -380,7 +381,17 @@ def make_fused_round(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
                                           (m_local,) + leaf.shape), g)
         return gp, key, losses, divs
 
-    fn = round_body
+    return round_body
+
+
+def make_fused_round(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
+                     mesh=None, axis_name: str = "groups"):
+    """Jitted one-round dispatch over :func:`make_round_body` —
+    ``group_params`` buffers are donated, so steady-state rounds allocate
+    nothing new. (The chunked multi-round engine wraps the same body via
+    ``make_fedgs_experiment`` instead.)"""
+    fn = make_round_body(loss_fn, cfg, sampler, mesh=mesh,
+                         axis_name=axis_name)
     if mesh is not None:
         from jax.experimental.shard_map import shard_map
         fn = shard_map(
@@ -389,6 +400,50 @@ def make_fused_round(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
             out_specs=(P(axis_name), P(), P(), P()),
             check_rep=False)
     return jax.jit(fn, donate_argnums=(0,))
+
+
+def make_fedgs_experiment(
+    params: PyTree,
+    loss_fn: LossFn,
+    sampler,                     # DeviceSampler: counts / selected_batch
+    p_real: Array,
+    cfg: FedGSConfig,
+    *,
+    mesh=None,
+    axis_name: str = "groups",
+    eval_fn: Callable[[PyTree], tuple[Array, Array]] | None = None,
+    unroll: int = 0,
+) -> engine.Experiment:
+    """FEDGS as an ``engine.Experiment`` (DESIGN.md §12): state is
+    (group_params (M, ...), PRNG key); one round = :func:`make_round_body`
+    at ``t0 = r·T``. ``eval_fn`` must be jittable (the engine evaluates
+    inside the round scan — ``models.cnn.make_eval_fn``). ``unroll``
+    controls the engine's rounds-scan unroll (0 = auto: full on CPU;
+    1 = rolled — far cheaper to compile for large chunks)."""
+    body = make_round_body(loss_fn, cfg, sampler, mesh=mesh,
+                           axis_name=axis_name)
+    p_real = jnp.asarray(p_real, jnp.float32)
+    gp = replicate_for_groups(params, cfg.num_groups)
+    state = (gp, jax.random.PRNGKey(cfg.seed))
+
+    def round_fn(state, r):
+        gp, key = state
+        gp, key, losses, divs = body(
+            gp, key, (r * cfg.iters_per_round).astype(jnp.int32), p_real)
+        return (gp, key), {"loss": jnp.mean(losses),
+                           "divergence": jnp.mean(divs)}
+
+    def params_fn(state):
+        # every row of the group axis holds the post-broadcast global model,
+        # so row 0 IS ω_t (bit-exact, no re-averaging of identical rows)
+        return jax.tree.map(lambda leaf: leaf[0], state[0])
+
+    state_spec = (jax.tree.map(lambda _: P(axis_name), gp), P())
+    return engine.Experiment(
+        name="fedgs" if cfg.selection == "gbp_cs" else "fedgs_random_sel",
+        init_state=state, round_fn=round_fn, params_fn=params_fn,
+        eval_fn=eval_fn, mesh=mesh, axis_name=axis_name,
+        state_spec=state_spec if mesh is not None else None, unroll=unroll)
 
 
 def run_fedgs_fused(
@@ -400,34 +455,29 @@ def run_fedgs_fused(
     *,
     mesh=None,
     axis_name: str = "groups",
-    eval_fn: Callable[[PyTree], tuple[float, float]] | None = None,
+    eval_fn: Callable[[PyTree], tuple[Array, Array]] | None = None,
     eval_every: int = 10,
-    log_fn: Callable[[RoundLog], None] | None = None,
-) -> tuple[PyTree, list[RoundLog]]:
-    """Alg. 1 end to end on the device-resident engine (DESIGN.md §7).
+    log_fn: Callable[[RoundRecord], None] | None = None,
+    chunk: int = 1,
+    unroll: int = 0,
+) -> tuple[PyTree, list[RoundRecord]]:
+    """Alg. 1 end to end on the device-resident engine (DESIGN.md §7, §12).
 
     Numerically equivalent to :func:`run_fedgs` over a DeviceBackedStreams
     adapter of the same sampler (same PRNG stream discipline, same selection
-    and train code paths); one host↔device round-trip per *round* instead of
-    several per *iteration*.
+    and train code paths). ``chunk`` rounds run per host dispatch
+    (⌈R/chunk⌉ round-trips; chunk=1 keeps the historical one-dispatch-per-
+    round behavior, chunk=0 picks ``engine.default_chunk``). ``eval_fn``
+    must be jittable — eval runs on-device inside the round scan at every
+    chunk size (see ``models.cnn.make_eval_fn``). ``unroll`` is the
+    rounds-scan unroll (0 = auto: full on CPU — right for chunk=1; pass
+    unroll=1 for large CPU chunks, where inlining chunk·T round bodies
+    would blow up compile time, DESIGN.md §12.2).
     """
-    round_fn = make_fused_round(loss_fn, cfg, sampler, mesh=mesh,
-                                axis_name=axis_name)
-    gp = replicate_for_groups(params, cfg.num_groups)
-    if mesh is not None:
-        gp = jax.device_put(gp, NamedSharding(mesh, P(axis_name)))
-    key = jax.random.PRNGKey(cfg.seed)
-    p_real = jnp.asarray(p_real, jnp.float32)
-    logs: list[RoundLog] = []
-    for r in range(cfg.rounds):
-        gp, key, losses, divs = round_fn(
-            gp, key, jnp.int32(r * cfg.iters_per_round), p_real)
-        log = RoundLog(round=r, loss=float(jnp.mean(losses)),
-                       divergence=float(jnp.mean(divs)))
-        if eval_fn is not None and (r + 1) % eval_every == 0:
-            tl, ta = eval_fn(global_params(gp))
-            log.test_loss, log.test_accuracy = float(tl), float(ta)
-        logs.append(log)
-        if log_fn is not None:
-            log_fn(log)
-    return global_params(gp), logs
+    exp = make_fedgs_experiment(params, loss_fn, sampler, p_real, cfg,
+                                mesh=mesh, axis_name=axis_name,
+                                eval_fn=eval_fn, unroll=unroll)
+    state, logs = engine.run_experiment(
+        exp, cfg.rounds, eval_every=eval_every if eval_fn is not None else 0,
+        chunk=chunk, log_fn=log_fn)
+    return exp.params_fn(state), logs

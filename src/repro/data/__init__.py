@@ -1,9 +1,12 @@
 from . import femnist, lm_data, partition, streaming  # noqa: F401
 from .partition import Partition, PartitionConfig, make_partition  # noqa: F401
 from .streaming import (  # noqa: F401
+    ClientPool,
     DeviceBackedStreams,
     DeviceSampler,
     DeviceStream,
     FactoryStreams,
+    HostClientPool,
+    make_client_pool,
     make_device_sampler,
 )

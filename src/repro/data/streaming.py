@@ -207,6 +207,73 @@ def make_device_sampler(stream: DeviceStream) -> DeviceSampler:
                          batch_size=n)
 
 
+class ClientPool(NamedTuple):
+    """Device-resident FedAvg-style client pool over a :class:`DeviceStream`.
+
+    The baseline strategies (core.baselines) sample C clients uniformly
+    across ALL M×K devices per round and give each S consecutive local
+    mini-batches. ``round_batches`` is a *pure function of the round index*
+    (same key-derivation discipline as :class:`DeviceSampler`), so the fused
+    engine can call it inside ``lax.scan`` and the host harness can replay
+    the exact same batches through :class:`HostClientPool`.
+
+    round_batches(r) -> ((images (C, S, n, 28, 28), labels (C, S, n)),
+                         weights (C,)) — weights are the client data sizes
+    S·n (uniform pool, matching ``FactoryStreams.sample_baseline_round``).
+    """
+    round_batches: Callable[..., tuple[tuple[jax.Array, jax.Array], jax.Array]]
+    num_clients: int
+    local_steps: int
+    batch_size: int
+    num_classes: int
+
+
+def make_client_pool(stream: DeviceStream, clients: int,
+                     steps: int) -> ClientPool:
+    probs = stream.class_probs.reshape(-1, stream.class_probs.shape[-1])
+    styles = stream.styles.reshape(-1, stream.styles.shape[-1])
+    pool_size, f = probs.shape
+    if clients > pool_size:
+        raise ValueError(f"clients={clients} exceeds pool of {pool_size} "
+                         "devices")
+    n = stream.batch_size
+    protos = jnp.asarray(femnist.class_prototypes())
+    pool_key = jax.random.fold_in(jax.random.PRNGKey(stream.seed), 303)
+
+    def round_batches(r):
+        k_sel, k_lab, k_img = jax.random.split(
+            jax.random.fold_in(pool_key, r), 3)
+        ids = jax.random.choice(k_sel, pool_size, (clients,), replace=False)
+        u = jax.random.uniform(k_lab, (clients, steps, n, 1))
+        cdf = jnp.cumsum(probs[ids], axis=-1)[:, None, None, :]  # (C,1,1,F)
+        labels = jnp.minimum((u > cdf).sum(axis=-1), f - 1).astype(jnp.int32)
+        sty = jnp.repeat(styles[ids], steps * n, axis=0)     # (C*S*n, 6)
+        imgs = femnist.generate_images_jax(
+            protos, labels.reshape(-1), sty, k_img)
+        imgs = imgs.reshape(clients, steps, n, femnist.IMAGE_SIZE,
+                            femnist.IMAGE_SIZE)
+        weights = jnp.full((clients,), float(steps * n), jnp.float32)
+        return (imgs, labels), weights
+
+    return ClientPool(round_batches=round_batches, num_clients=clients,
+                      local_steps=steps, batch_size=n, num_classes=f)
+
+
+class HostClientPool:
+    """Host-facing ``sample_round_batches`` adapter over a :class:`ClientPool`
+    (the baselines' counterpart of :class:`DeviceBackedStreams`): the host
+    per-round harness sees numpy copies of the *exact* batches the fused
+    scan samples on-device — parity tests run both paths over one pool."""
+
+    def __init__(self, pool: ClientPool):
+        self.pool = pool
+        self._fn = jax.jit(pool.round_batches)
+
+    def __call__(self, r: int):
+        (imgs, labs), w = self._fn(jnp.int32(r))
+        return ((np.asarray(imgs), np.asarray(labs)), np.asarray(w))
+
+
 class DeviceBackedStreams:
     """Host-facing ``FactoryStreams`` adapter over a :class:`DeviceSampler`.
 

@@ -1,39 +1,50 @@
-"""FEDGS federated training driver (the paper's kind: training).
+"""Federated training driver (the paper's kind: training).
 
-Runs Alg. 1 end-to-end on the synthetic FEMNIST stream with the paper's
-hyperparameters as defaults (M=10, K=35, L=10, L_rnd=2, T=50, R=500, η=0.01,
-n=32). On this CPU container use reduced --rounds/--iters; on a real cluster
-the same core library drives the production mesh via launch/steps.py.
+Runs Alg. 1 — or ANY of the fifteen Table II comparison strategies — end to
+end on the synthetic FEMNIST stream with the paper's hyperparameters as
+defaults (M=10, K=35, L=10, L_rnd=2, T=50, R=500, η=0.01, n=32). On this CPU
+container use reduced --rounds/--iters; on a real cluster the same core
+library drives the production mesh via launch/steps.py.
 
-Engines (DESIGN.md §10.2): ``host`` is the two-phase host loop over the
-numpy FactoryStreams; ``fused`` runs the whole round on-device via lax.scan
-over the jax.random DeviceStream; ``sharded`` additionally shard_maps the
+Engines (DESIGN.md §10.2, §12): ``host`` is the per-round host loop (two-
+phase numpy FactoryStreams for FEDGS, per-round batch uploads for the
+baselines); ``fused`` runs whole *chunks of rounds* on-device through the
+unified experiment engine (``--eval-chunk`` rounds per host dispatch, eval
+on-device inside the scan); ``sharded`` additionally shard_maps the FEDGS
 group axis across every available device.
 
   PYTHONPATH=src python -m repro.launch.train --rounds 20 --iters 10
-  PYTHONPATH=src python -m repro.launch.train --selection random   # FedAvg-ish
-  PYTHONPATH=src python -m repro.launch.train --engine fused --rounds 20
+  PYTHONPATH=src python -m repro.launch.train --engine fused --eval-chunk 10
+  PYTHONPATH=src python -m repro.launch.train --strategy fedadam --rounds 20
+  PYTHONPATH=src python -m repro.launch.train --selection random   # ablation
 """
 from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
+import sys
 
 import jax
-import jax.numpy as jnp
 
 from repro import checkpoint as ckpt_lib
 from repro.configs import femnist_cnn
-from repro.core import fedgs
-from repro.data import (DeviceStream, FactoryStreams, PartitionConfig,
-                        femnist, make_device_sampler, make_partition)
+from repro.core import baselines, fedgs
+from repro.data import (DeviceStream, FactoryStreams, HostClientPool,
+                        PartitionConfig, femnist, make_client_pool,
+                        make_device_sampler, make_partition)
 from repro.launch.mesh import make_group_mesh
 from repro.models import cnn
+
+STRATEGIES = ("fedgs",) + tuple(sorted(
+    baselines.all_strategies(cnn.make_model_api(femnist_cnn.CONFIG))))
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--strategy", choices=STRATEGIES, default="fedgs",
+                    help="fedgs (Alg. 1) or any Table II baseline strategy")
     ap.add_argument("--groups", type=int, default=10, help="M factories")
     ap.add_argument("--devices-per-group", type=int, default=35, help="K^m")
     ap.add_argument("--selected", type=int, default=10, help="L")
@@ -42,11 +53,19 @@ def main() -> None:
     ap.add_argument("--rounds", type=int, default=500, help="R")
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--batch-size", type=int, default=32)
+    ap.add_argument("--clients-per-round", type=int, default=0,
+                    help="baseline strategies: C sampled clients per round "
+                         "(default M*L — matches FEDGS participation)")
+    ap.add_argument("--local-steps", type=int, default=10,
+                    help="baseline strategies: local mini-batch steps")
     ap.add_argument("--selection", choices=("gbp_cs", "random"),
                     default="gbp_cs")
     ap.add_argument("--engine", choices=("host", "fused", "sharded"),
                     default="host",
-                    help="host loop / fused lax.scan / scan + shard_map")
+                    help="host loop / fused chunked scan / scan + shard_map")
+    ap.add_argument("--eval-chunk", type=int, default=1,
+                    help="fused/sharded: rounds per host dispatch "
+                         "(⌈R/chunk⌉ dispatches; 0 = auto, 1 = per-round)")
     ap.add_argument("--train-step", choices=("grad_avg", "model_avg"),
                     default="grad_avg",
                     help="Eq. 4 in gradient space (one update per group) / "
@@ -69,47 +88,77 @@ def main() -> None:
     part = make_partition(PartitionConfig(
         num_factories=args.groups, devices_per_factory=args.devices_per_group,
         alpha=args.alpha, seed=args.seed))
-    streams = FactoryStreams(part, batch_size=args.batch_size, seed=args.seed)
     test_x, test_y = femnist.make_test_set(n_per_class=20)
-    test_x, test_y = jnp.asarray(test_x), jnp.asarray(test_y)
+    # device-cached, jittable eval: test set uploaded once, usable both by
+    # host loops and on-device inside the engine's round scan
+    eval_fn = cnn.make_eval_fn(test_x, test_y)
 
     mcfg = femnist_cnn.smoke_config() if args.smoke_model else femnist_cnn.CONFIG
     params = cnn.init_cnn(jax.random.PRNGKey(args.seed), mcfg)
 
-    fcfg = fedgs.FedGSConfig(
-        num_groups=args.groups, devices_per_group=args.devices_per_group,
-        num_selected=args.selected, num_presampled=args.presampled,
-        iters_per_round=args.iters, rounds=args.rounds, lr=args.lr,
-        batch_size=args.batch_size, selection=args.selection,
-        init=args.init, seed=args.seed, train_step=args.train_step,
-        kernel_backend=args.kernel_backend)
-
     logs_out = []
 
-    def log_fn(log):
-        msg = (f"round {log.round:4d} | loss {log.loss:.4f} | "
-               f"divergence {log.divergence:.4f}")
-        if log.test_accuracy is not None:
-            msg += (f" | test acc {log.test_accuracy:.4f} "
-                    f"loss {log.test_loss:.4f}")
+    def log_fn(rec):
+        msg = f"round {rec.round:4d} | loss {rec.loss:.4f}"
+        if not math.isnan(rec.divergence):
+            msg += f" | divergence {rec.divergence:.4f}"
+        if rec.test_accuracy is not None:
+            msg += (f" | test acc {rec.test_accuracy:.4f} "
+                    f"loss {rec.test_loss:.4f}")
         print(msg, flush=True)
-        logs_out.append(vars(log))
-        if args.ckpt_dir and (log.round + 1) % 50 == 0:
-            pass  # saved below via closure-less final save
+        logs_out.append(rec.to_dict())
 
-    eval_fn = lambda p: cnn.evaluate(p, test_x, test_y)
-    if args.engine == "host":
-        final, _ = fedgs.run_fedgs(
-            params, cnn.loss_fn, streams, part.p_real, fcfg,
-            eval_fn=eval_fn, eval_every=args.eval_every, log_fn=log_fn)
+    if args.strategy == "fedgs":
+        fcfg = fedgs.FedGSConfig(
+            num_groups=args.groups, devices_per_group=args.devices_per_group,
+            num_selected=args.selected, num_presampled=args.presampled,
+            iters_per_round=args.iters, rounds=args.rounds, lr=args.lr,
+            batch_size=args.batch_size, selection=args.selection,
+            init=args.init, seed=args.seed, train_step=args.train_step,
+            kernel_backend=args.kernel_backend)
+        if args.engine == "host":
+            streams = FactoryStreams(part, batch_size=args.batch_size,
+                                     seed=args.seed)
+            final, _ = fedgs.run_fedgs(
+                params, cnn.loss_fn, streams, part.p_real, fcfg,
+                eval_fn=eval_fn, eval_every=args.eval_every, log_fn=log_fn)
+        else:
+            sampler = make_device_sampler(DeviceStream.from_partition(
+                part, batch_size=args.batch_size, seed=args.seed))
+            mesh = make_group_mesh(args.groups) if args.engine == "sharded" \
+                else None
+            # chunk=1 inlines the single round (the fast CPU path); larger
+            # chunks keep the rounds scan rolled — inlining chunk·T round
+            # bodies would blow up compile time (DESIGN.md §12.2)
+            final, _ = fedgs.run_fedgs_fused(
+                params, cnn.loss_fn, sampler, part.p_real, fcfg, mesh=mesh,
+                eval_fn=eval_fn, eval_every=args.eval_every, log_fn=log_fn,
+                chunk=args.eval_chunk,
+                unroll=0 if args.eval_chunk == 1 else 1)
     else:
-        sampler = make_device_sampler(DeviceStream.from_partition(
-            part, batch_size=args.batch_size, seed=args.seed))
-        mesh = make_group_mesh(args.groups) if args.engine == "sharded" \
-            else None
-        final, _ = fedgs.run_fedgs_fused(
-            params, cnn.loss_fn, sampler, part.p_real, fcfg, mesh=mesh,
-            eval_fn=eval_fn, eval_every=args.eval_every, log_fn=log_fn)
+        for flag in ("train_step", "kernel_backend", "selection", "init",
+                     "iters"):
+            if getattr(args, flag) != ap.get_default(flag):
+                print(f"warning: --{flag.replace('_', '-')} applies only to "
+                      f"--strategy fedgs; ignored for {args.strategy}",
+                      file=sys.stderr)
+        model = cnn.make_model_api(mcfg)
+        strategy = baselines.all_strategies(model)[args.strategy]
+        clients = args.clients_per_round or args.groups * args.selected
+        bcfg = baselines.BaselineConfig(
+            clients_per_round=clients, local_steps=args.local_steps,
+            lr=args.lr, rounds=args.rounds, seed=args.seed)
+        pool = make_client_pool(
+            DeviceStream.from_partition(part, batch_size=args.batch_size,
+                                        seed=args.seed),
+            clients=clients, steps=args.local_steps)
+        # the baselines evaluate through the shared backbone + head
+        pe_eval = lambda pe: eval_fn(pe[0])
+        data = HostClientPool(pool) if args.engine == "host" else pool
+        (final, _extras), _ = baselines.run_baseline(
+            model, strategy, data, bcfg, eval_fn=pe_eval,
+            eval_every=args.eval_every, params=params,
+            chunk=args.eval_chunk, log_fn=log_fn)
 
     if args.ckpt_dir:
         path = ckpt_lib.save(args.ckpt_dir, final, step=args.rounds,

@@ -59,7 +59,7 @@ def test_fedavg_improves_loss(env):
         model, strat,
         lambda r: streams.sample_baseline_round(8, 8, seed=200 + r),
         cfg, eval_fn=eval_fn, eval_every=15, params=params0)
-    l1 = logs[-1]["test_loss"]
+    l1 = logs[-1].test_loss
     assert l1 < l0, (l0, l1)
 
 
