@@ -187,7 +187,7 @@ def buffer_check(p: dict, seed: int = 0) -> dict:
         cfg = _make_cfg(p, seed, train_step=ts, scan_unroll=1)
         round_fn = fedgs.make_fused_round(loss_fn, cfg, sampler)
         text = round_fn.lower(
-            gp, key, jnp.int32(0),
+            gp, key, fedgs.init_selection_state(cfg), jnp.int32(0),
             jnp.asarray(part.p_real, jnp.float32)).compile().as_text()
         out[ts] = hlo_analysis.param_replica_bytes(
             text, weight_shapes, p["m"], p["l"])

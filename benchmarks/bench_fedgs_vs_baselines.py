@@ -44,7 +44,7 @@ from repro.data import (DeviceStream, FactoryStreams, PartitionConfig,
                         make_partition)
 from repro.models import cnn
 
-from .common import emit
+from .common import emit, min_delta_rate as _min_delta_rate
 
 # reduced-scale protocol (quick / full); chunk = rounds per host dispatch.
 # rounds/b_rounds divide by chunk so every dispatch covers `chunk` rounds
@@ -58,13 +58,6 @@ QUICK_SUBSET = ["fedavg", "fedprox", "fedavgm", "fedadam"]
 # the harness matrix always runs the quick protocol + these strategies
 HARNESS_SUBSET = QUICK_SUBSET
 HARNESS_ROUNDS = 40
-
-
-def _min_delta_rate(stamps: list[float], per_delta: int) -> float:
-    """rounds/sec from the FASTEST inter-stamp delta (stamp 0 pays compile;
-    min rejects transient contention on shared CPU boxes, DESIGN.md §9)."""
-    deltas = [b - a for a, b in zip(stamps, stamps[1:])]
-    return per_delta / min(deltas)
 
 
 def rounds_to_target(logs: list[engine.RoundRecord],
@@ -102,7 +95,7 @@ def run_fedgs_leg(p: dict, part, eval_fn,
     _, logs = engine.run_experiment(
         exp, cfg.rounds, eval_every=1, chunk=p["chunk"],
         on_chunk=lambda r0, n: stamps.append(time.perf_counter()))
-    rps = _min_delta_rate(stamps, p["chunk"]) if len(stamps) >= 2 else 0.0
+    rps = _min_delta_rate(stamps, p["chunk"])
     disp = dict(rounds=cfg.rounds, chunk=p["chunk"],
                 dispatches=engine.num_dispatches(cfg.rounds, p["chunk"]))
     return logs, rps, disp
@@ -121,7 +114,7 @@ def run_baseline_leg(p: dict, pool, model, strategy, eval_fn, *,
     _, logs = engine.run_experiment(
         exp, cfg.rounds, eval_every=eval_every, chunk=chunk,
         on_chunk=lambda r0, n: stamps.append(time.perf_counter()))
-    rps = _min_delta_rate(stamps, chunk) if len(stamps) >= 2 else 0.0
+    rps = _min_delta_rate(stamps, chunk)
     return logs, rps
 
 

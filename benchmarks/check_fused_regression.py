@@ -3,6 +3,21 @@ committed numbers.
 
   python benchmarks/check_fused_regression.py BASELINE.json NEW.json
   python benchmarks/check_fused_regression.py --table2 BASELINE.json NEW.json
+  python benchmarks/check_fused_regression.py --drift BASELINE.json NEW.json
+
+A missing BASELINE file is tolerated in ``--drift`` mode only (first-run
+tolerance: the drift gate checks the NEW json's invariant and reports "no
+committed baseline", so the suite can be introduced before its JSON lands
+on the branch). The fused/table2 modes keep failing loudly on a missing
+baseline — their committed JSONs exist, so a missing file there means a
+broken path, and exiting 0 would silently disarm the regression gates.
+
+``--drift`` gates ``BENCH_drift.json`` on the *invariant*, not throughput:
+under the step-shift schedule FEDGS with periodic reselection must strictly
+beat FEDGS with static (frozen-at-t0) selection on final test accuracy —
+the paper's adaptivity claim (DESIGN.md §13). Throughput and the other
+schedules are reported but not enforced (accuracy under rotate/redraw/churn
+is compared against the committed numbers informationally only).
 
 Default mode compares ``BENCH_fedgs_fused.json``'s ``fused_iters_per_sec``
 (the default engine config: ``train_step='grad_avg'``,
@@ -87,16 +102,53 @@ def check_table2(baseline: dict, new: dict) -> int:
     return 0
 
 
+def check_drift(baseline: dict | None, new: dict) -> int:
+    for schedule, legs in new["schedules"].items():
+        row = " ".join(
+            f"{leg}={rec['final_test_accuracy']}"
+            for leg, rec in legs.items() if isinstance(rec, dict))
+        old = (baseline or {}).get("schedules", {}).get(schedule)
+        if old:
+            row += (" (committed gap "
+                    f"{old['reselect_minus_static_acc']} -> "
+                    f"{legs['reselect_minus_static_acc']})")
+        print(f"{schedule}: {row}")
+    if not new.get("invariant_step_shift_reselect_beats_static", False):
+        ss = new["schedules"]["step_shift"]
+        print("FAIL: under step_shift drift, FEDGS with reselection "
+              f"({ss['fedgs_reselect']['final_test_accuracy']}) does not "
+              "strictly beat static selection "
+              f"({ss['fedgs_static']['final_test_accuracy']}) — the "
+              "adaptivity invariant (DESIGN.md §13) is broken",
+              file=sys.stderr)
+        return 1
+    print("OK: step_shift reselect > static (adaptivity invariant holds)")
+    return 0
+
+
+def _load(path: str, *, required: bool) -> dict | None:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        if required:
+            raise
+        print(f"note: no committed baseline at {path} (first run) — "
+              "nothing to compare against")
+        return None
+
+
 def main(argv: list[str]) -> int:
     table2 = "--table2" in argv
-    paths = [a for a in argv if a != "--table2"]
-    if len(paths) != 2:
+    drift = "--drift" in argv
+    paths = [a for a in argv if a not in ("--table2", "--drift")]
+    if len(paths) != 2 or (table2 and drift):
         print(__doc__, file=sys.stderr)
         return 2
-    with open(paths[0]) as f:
-        baseline = json.load(f)
-    with open(paths[1]) as f:
-        new = json.load(f)
+    baseline = _load(paths[0], required=not drift)
+    new = _load(paths[1], required=True)
+    if drift:
+        return check_drift(baseline, new)
     return (check_table2 if table2 else check_fused)(baseline, new)
 
 

@@ -10,6 +10,15 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
+def min_delta_rate(stamps: list[float], per_delta: int) -> float:
+    """Events/sec from the FASTEST inter-stamp delta (stamp 0 pays compile;
+    min rejects transient contention on shared CPU boxes, DESIGN.md §9).
+    0.0 when fewer than two stamps (no floor — callers treat it as
+    'ungated')."""
+    deltas = [b - a for a, b in zip(stamps, stamps[1:])]
+    return per_delta / min(deltas) if deltas else 0.0
+
+
 def time_fn(fn: Callable, *, repeats: int = 5, warmup: int = 1) -> float:
     """Median wall time per call in microseconds."""
     for _ in range(warmup):

@@ -14,6 +14,7 @@ import time
 import traceback
 
 from . import (
+    bench_drift,
     bench_fedgs_fused,
     bench_fedgs_vs_baselines,
     bench_hyperparams,
@@ -33,6 +34,7 @@ SUITES = {
     "kernels": bench_kernels.run,            # Pallas kernels
     "roofline": bench_roofline.run,          # dry-run roofline table
     "fedgs_fused": bench_fedgs_fused.run,    # host loop vs scan-fused engine
+    "drift": bench_drift.run,                # dynamic environments (§13)
 }
 
 

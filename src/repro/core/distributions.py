@@ -52,6 +52,33 @@ def supernode_distribution(counts: Array, mask: Array | None = None) -> Array:
     return norm(jnp.sum(c, axis=0))
 
 
+def mask_divergence(counts: Array, mask: Array, p_real: Array) -> Array:
+    """Eq. (6) for a *carried* selection mask: divergence of the super node
+    the mask pools out of the CURRENT counts (DESIGN.md §13 telemetry — under
+    drift this tracks how stale a committee has become between reselections).
+
+    Args:
+      counts: (..., K, F) per-device next-batch class counts.
+      mask: (..., K) 0/1 selection.
+    Returns: (...,) L2 divergence vs ``p_real``.
+    """
+    c = jnp.asarray(counts, jnp.float32)
+    pooled = jnp.sum(c * jnp.asarray(mask, jnp.float32)[..., None], axis=-2)
+    return distribution_divergence(norm(pooled), p_real)
+
+
+def group_discrepancy(counts: Array, p_real: Array) -> Array:
+    """Per-group data-distribution discrepancy vs the global distribution:
+    || norm(sum_k a^{m,k}) − P_real ||_2 over ALL K devices of the group —
+    the environment-heterogeneity telemetry of DESIGN.md §13 (independent of
+    which devices were selected, unlike :func:`mask_divergence`).
+
+    Args: counts (..., K, F). Returns (...,).
+    """
+    c = jnp.asarray(counts, jnp.float32)
+    return distribution_divergence(norm(jnp.sum(c, axis=-2)), p_real)
+
+
 def selection_objective(A: Array, x: Array, y: Array) -> Array:
     """Eq. (10): || A x - y ||_2 with A (F, K), x (K,), y (F,)."""
     r = A.astype(jnp.float32) @ x.astype(jnp.float32) - y.astype(jnp.float32)

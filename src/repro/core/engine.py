@@ -46,7 +46,11 @@ class RoundRecord(NamedTuple):
     ``test_loss``/``test_accuracy`` are None on rounds without eval.
     Field names match the old ``fedgs.RoundLog`` so attribute access is
     unchanged; ``to_dict`` replaces ``vars(log)`` / the baselines' ad-hoc
-    dicts for JSON output.
+    dicts for JSON output. The heterogeneity-telemetry fields (DESIGN.md
+    §13) are NaN for strategies that don't report them: ``group_discrepancy``
+    is the mean per-group data-distribution discrepancy vs the global
+    distribution, ``selection_distance`` the GBP-CS objective ``d`` of the
+    last rebuild, ``reselections`` the number of GBP-CS rebuilds this round.
     """
     round: int
     loss: float
@@ -54,12 +58,23 @@ class RoundRecord(NamedTuple):
     test_loss: float | None = None
     test_accuracy: float | None = None
     strategy: str = ""
+    group_discrepancy: float = _NAN
+    selection_distance: float = _NAN
+    reselections: float = _NAN
 
     def to_dict(self) -> dict:
         d = dict(self._asdict())
-        if math.isnan(d["divergence"]):   # strategies without a divergence
-            d["divergence"] = None        # (strict-JSON safe, unlike NaN)
+        for k in ("divergence", "group_discrepancy", "selection_distance",
+                  "reselections"):
+            if math.isnan(d[k]):          # strategies without the telemetry
+                d[k] = None               # (strict-JSON safe, unlike NaN)
         return d
+
+
+# metric names records_from_metrics forwards to same-named RoundRecord
+# fields when an experiment's round_fn reports them (all NaN-defaulted)
+_OPTIONAL_METRICS = ("divergence", "group_discrepancy", "selection_distance",
+                     "reselections")
 
 
 def records_from_metrics(r0: int, metrics: dict, *, strategy: str = ""
@@ -67,8 +82,8 @@ def records_from_metrics(r0: int, metrics: dict, *, strategy: str = ""
     """Stacked per-chunk device metrics -> per-round typed records.
 
     ``metrics`` maps name -> (chunk,) array; recognized names: ``loss``,
-    ``divergence``, ``test_loss``, ``test_accuracy`` (NaN = no eval that
-    round).
+    ``test_loss``, ``test_accuracy`` (NaN = no eval that round), and the
+    telemetry names in ``_OPTIONAL_METRICS``.
     """
     host = {k: np.asarray(v, np.float64) for k, v in metrics.items()}
     n = len(next(iter(host.values())))
@@ -79,10 +94,10 @@ def records_from_metrics(r0: int, metrics: dict, *, strategy: str = ""
         recs.append(RoundRecord(
             round=r0 + i,
             loss=float(host["loss"][i]) if "loss" in host else _NAN,
-            divergence=float(host.get("divergence", [_NAN] * n)[i]),
             test_loss=None if math.isnan(tl) else float(tl),
             test_accuracy=None if math.isnan(ta) else float(ta),
             strategy=strategy,
+            **{k: float(host[k][i]) for k in _OPTIONAL_METRICS if k in host},
         ))
     return recs
 

@@ -37,7 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from . import dispatch, engine, gbp_cs, selection, sync
+from . import dispatch, distributions, engine, gbp_cs, selection, sync
 
 PyTree = Any
 Array = jax.Array
@@ -64,11 +64,18 @@ class FedGSConfig:
     train_step: str = "grad_avg"  # 'grad_avg' (Eq. 4 in gradient space) |
     #                               'model_avg' (oracle: L one-step models)
     kernel_backend: str = "jnp"   # 'jnp' | 'pallas' (core.dispatch)
+    reselect_every: int = 1       # GBP-CS cadence in internal iterations:
+    #                               1 = every iteration (historical default),
+    #                               N = every N iters, 0 = static super nodes
+    #                               (select once at t=0; DESIGN.md §13)
 
     def __post_init__(self):
         if self.train_step not in ("grad_avg", "model_avg"):
             raise ValueError(f"unknown train_step: {self.train_step!r} "
                              "(expected 'grad_avg' or 'model_avg')")
+        if self.reselect_every < 0:
+            raise ValueError("reselect_every must be >= 0 (0 = static), got "
+                             f"{self.reselect_every}")
         dispatch.check_backend(self.kernel_backend)
 
     @property
@@ -228,9 +235,11 @@ def run_fedgs(
     """Alg. 1 end to end — two-phase host loop (DESIGN.md §10.1):
 
     per iteration: (1) devices report next-batch class counts; (2) the BS
-    runs GBP-CS (jitted) to pick C_t^m; (3) ONLY the selected devices
-    generate/fetch data and take one local SGD step; (4) internal sync.
-    External sync every T iterations.
+    runs GBP-CS (jitted) to pick C_t^m — every ``cfg.reselect_every``
+    iterations; between rebuilds the carried masks are reused and only
+    re-scored against the fresh counts (DESIGN.md §13); (3) ONLY the
+    selected devices generate/fetch data and take one local SGD step;
+    (4) internal sync. External sync every T iterations.
 
     With ``cfg.engine == 'fused'`` (or ``'sharded'``, which additionally
     shards the group axis over every available device), dispatches to
@@ -250,23 +259,35 @@ def run_fedgs(
     gp = replicate_for_groups(params, cfg.num_groups)
     key = jax.random.PRNGKey(cfg.seed)
     p_real = jnp.asarray(p_real, jnp.float32)
+    mask_c, dist_c = init_selection_state(cfg)
     logs: list[RoundLog] = []
+    t = 0
     for r in range(cfg.rounds):
-        losses, divs = [], []
+        losses, divs, discs, dists = [], [], [], []
+        resel = 0
         for _ in range(cfg.iters_per_round):
             key, sub = jax.random.split(key)
             counts = jnp.asarray(streams.next_counts())
             keys = jax.random.split(sub, cfg.num_groups)
-            sel = selection.select_groups_any(
-                keys, counts, p_real, cfg.num_selected, cfg.num_presampled,
-                method=cfg.selection, init=cfg.init,
-                max_iters=cfg.gbp_max_iters,
-                step_fn=dispatch.gbp_step_fn(cfg.kernel_backend))
-            masks = np.asarray(sel.mask)
-            imgs, labs = streams.fetch_selected(masks, cfg.num_selected)
+            discs.append(float(jnp.mean(
+                distributions.group_discrepancy(counts, p_real))))
+            if bool(selection.reselect_predicate(t, cfg.reselect_every)):
+                sel = selection.select_groups_any(
+                    keys, counts, p_real, cfg.num_selected,
+                    cfg.num_presampled, method=cfg.selection, init=cfg.init,
+                    max_iters=cfg.gbp_max_iters,
+                    step_fn=dispatch.gbp_step_fn(cfg.kernel_backend))
+                mask_c, dist_c, div = sel.mask, sel.distance, sel.divergence
+                resel += 1
+            else:
+                div = distributions.mask_divergence(counts, mask_c, p_real)
+            imgs, labs = streams.fetch_selected(np.asarray(mask_c),
+                                                cfg.num_selected)
             gp, loss = train_step(gp, (jnp.asarray(imgs), jnp.asarray(labs)))
             losses.append(float(jnp.mean(loss)))
-            divs.append(float(jnp.mean(sel.divergence)))
+            divs.append(float(jnp.mean(div)))
+            dists.append(float(jnp.mean(dist_c)))
+            t += 1
         gp = external_sync_and_broadcast(gp, backend=cfg.kernel_backend)
         tl = ta = None
         if eval_fn is not None and (r + 1) % eval_every == 0:
@@ -274,7 +295,10 @@ def run_fedgs(
             tl, ta = float(tl), float(ta)
         log = RoundRecord(round=r, loss=float(np.mean(losses)),
                           divergence=float(np.mean(divs)),
-                          test_loss=tl, test_accuracy=ta, strategy="fedgs")
+                          test_loss=tl, test_accuracy=ta, strategy="fedgs",
+                          group_discrepancy=float(np.mean(discs)),
+                          selection_distance=float(np.mean(dists)),
+                          reselections=float(resel))
         logs.append(log)
         if log_fn is not None:
             log_fn(log)
@@ -303,18 +327,37 @@ def make_group_mesh(num_groups: int | None = None):
     return jax.make_mesh((n,), ("groups",))
 
 
+def init_selection_state(cfg: FedGSConfig) -> tuple[Array, Array]:
+    """Initial carried selection state ``(mask (M, K), distance (M,))`` for
+    the round body (DESIGN.md §13). All-zero: iteration t=0 always rebuilds
+    (``reselect_predicate(0, N)`` is True for every cadence N), so the zeros
+    are never trained on. Always full-M — under ``shard_map`` the state is
+    sharded by the in_specs/state_spec, not built per shard."""
+    return (jnp.zeros((cfg.num_groups, cfg.devices_per_group), jnp.float32),
+            jnp.zeros((cfg.num_groups,), jnp.float32))
+
+
 def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
                     mesh=None, axis_name: str = "groups"):
     """Build the PURE one-round body of the device-resident engine.
 
-    Returns ``round_body(group_params, key, t0, p_real) -> (group_params',
-    key', losses (T,), divergences (T,))``. The T internal iterations run as
-    a single ``lax.scan`` (selection → local step → internal sync per scan
-    step), with external sync + broadcast as the epilogue.
+    Returns ``round_body(group_params, key, sel, t0, p_real) ->
+    (group_params', key', sel', metrics)`` where ``sel = (mask (M, K),
+    distance (M,))`` is the carried selection state (DESIGN.md §13) and
+    ``metrics`` maps ``loss`` / ``divergence`` / ``group_discrepancy`` /
+    ``selection_distance`` / ``reselected`` to (T,) per-iteration arrays.
+    The T internal iterations run as a single ``lax.scan`` (selection →
+    local step → internal sync per scan step), with external sync +
+    broadcast as the epilogue.
 
     ``sampler`` is a DeviceSampler (see repro.data.streaming): two pure
     functions of (iteration t, global group ids) — the scan never leaves the
-    accelerator for data.
+    accelerator for data. Under a drift schedule (DESIGN.md §13) the
+    sampler's counts evolve with t and ``cfg.reselect_every`` decides when
+    GBP-CS rebuilds the super nodes: cadence 1 (default) keeps the
+    historical select-every-iteration path with no ``lax.cond``; any other
+    cadence routes through :func:`selection.select_or_keep` (one scalar
+    cond around the whole GBP-CS solve).
 
     With ``mesh``, the body is written for execution *inside* ``shard_map``
     over ``axis_name``: each shard simulates M/n_shards super nodes,
@@ -338,8 +381,8 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
     unroll = cfg.scan_unroll or (
         t_per_round if jax.default_backend() == "cpu" else 1)
 
-    def round_body(group_params: PyTree, key: Array, t0: Array,
-                   p_real: Array):
+    def round_body(group_params: PyTree, key: Array, sel: tuple,
+                   t0: Array, p_real: Array):
         if mesh is None:
             gids = jnp.arange(m, dtype=jnp.int32)
         else:
@@ -348,30 +391,46 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
                     + jnp.arange(m_local, dtype=jnp.int32)).astype(jnp.int32)
 
         def iteration(carry, t):
-            gp, key = carry
+            gp, key, mask, dist = carry
             # PRNG discipline identical to the host loop: split the round
             # key, fan out to all M groups, take this shard's slice.
             key, sub = jax.random.split(key)
             keys = jnp.take(jax.random.split(sub, m), gids, axis=0)
             counts = sampler.counts(t, gids)
-            sel = selection.select_for_groups(
-                keys, counts, p_real, l, cfg.num_presampled,
-                method=cfg.selection, init=cfg.init,
-                max_iters=cfg.gbp_max_iters,
-                step_fn=dispatch.gbp_step_fn(cfg.kernel_backend))
-            imgs, labs = sampler.selected_batch(t, gids, sel.mask, l)
+            if cfg.reselect_every == 1:
+                res = selection.select_for_groups(
+                    keys, counts, p_real, l, cfg.num_presampled,
+                    method=cfg.selection, init=cfg.init,
+                    max_iters=cfg.gbp_max_iters,
+                    step_fn=dispatch.gbp_step_fn(cfg.kernel_backend))
+                mask, div, dist = res.mask, res.divergence, res.distance
+                resel = jnp.float32(1.0)
+            else:
+                do = selection.reselect_predicate(t, cfg.reselect_every)
+                mask, div, dist = selection.select_or_keep(
+                    do, keys, counts, p_real, l, cfg.num_presampled,
+                    prev_mask=mask, prev_distance=dist,
+                    method=cfg.selection, init=cfg.init,
+                    max_iters=cfg.gbp_max_iters,
+                    step_fn=dispatch.gbp_step_fn(cfg.kernel_backend))
+                resel = do.astype(jnp.float32)
+            imgs, labs = sampler.selected_batch(t, gids, mask, l)
             gp, losses = jax.vmap(
                 lambda p, b: _per_group_train(p, b, loss_fn, cfg)
             )(gp, (imgs, labs))
-            loss, div = jnp.mean(losses), jnp.mean(sel.divergence)
+            disc = jnp.mean(distributions.group_discrepancy(counts, p_real))
+            loss, div, d = jnp.mean(losses), jnp.mean(div), jnp.mean(dist)
             if mesh is not None:
                 loss = jax.lax.pmean(loss, axis_name)
                 div = jax.lax.pmean(div, axis_name)
-            return (gp, key), (loss, div)
+                disc = jax.lax.pmean(disc, axis_name)
+                d = jax.lax.pmean(d, axis_name)
+            return (gp, key, mask, dist), (loss, div, disc, d, resel)
 
-        (gp, key), (losses, divs) = jax.lax.scan(
-            iteration, (group_params, key),
-            t0 + jnp.arange(t_per_round, dtype=jnp.int32), unroll=unroll)
+        (gp, key, mask, dist), (losses, divs, discs, dists, resels) = \
+            jax.lax.scan(
+                iteration, (group_params, key) + tuple(sel),
+                t0 + jnp.arange(t_per_round, dtype=jnp.int32), unroll=unroll)
         # epilogue: external sync (Eq. 5) + broadcast back to the group axis
         g = sync.external_sync_grouped(
             gp, axis_name if mesh is not None else None,
@@ -379,7 +438,10 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
         gp = jax.tree.map(
             lambda leaf: jnp.broadcast_to(leaf[None],
                                           (m_local,) + leaf.shape), g)
-        return gp, key, losses, divs
+        metrics = {"loss": losses, "divergence": divs,
+                   "group_discrepancy": discs, "selection_distance": dists,
+                   "reselected": resels}
+        return gp, key, (mask, dist), metrics
 
     return round_body
 
@@ -388,16 +450,19 @@ def make_fused_round(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
                      mesh=None, axis_name: str = "groups"):
     """Jitted one-round dispatch over :func:`make_round_body` —
     ``group_params`` buffers are donated, so steady-state rounds allocate
-    nothing new. (The chunked multi-round engine wraps the same body via
+    nothing new. Call as ``fn(gp, key, init_selection_state(cfg), t0,
+    p_real)`` and thread the returned selection state into the next round.
+    (The chunked multi-round engine wraps the same body via
     ``make_fedgs_experiment`` instead.)"""
     fn = make_round_body(loss_fn, cfg, sampler, mesh=mesh,
                          axis_name=axis_name)
     if mesh is not None:
         from jax.experimental.shard_map import shard_map
+        sel_spec = (P(axis_name), P(axis_name))
         fn = shard_map(
             fn, mesh=mesh,
-            in_specs=(P(axis_name), P(), P(), P()),
-            out_specs=(P(axis_name), P(), P(), P()),
+            in_specs=(P(axis_name), P(), sel_spec, P(), P()),
+            out_specs=(P(axis_name), P(), sel_spec, P()),
             check_rep=False)
     return jax.jit(fn, donate_argnums=(0,))
 
@@ -415,7 +480,8 @@ def make_fedgs_experiment(
     unroll: int = 0,
 ) -> engine.Experiment:
     """FEDGS as an ``engine.Experiment`` (DESIGN.md §12): state is
-    (group_params (M, ...), PRNG key); one round = :func:`make_round_body`
+    (group_params (M, ...), PRNG key, carried selection state (mask,
+    distance) — DESIGN.md §13); one round = :func:`make_round_body`
     at ``t0 = r·T``. ``eval_fn`` must be jittable (the engine evaluates
     inside the round scan — ``models.cnn.make_eval_fn``). ``unroll``
     controls the engine's rounds-scan unroll (0 = auto: full on CPU;
@@ -424,21 +490,28 @@ def make_fedgs_experiment(
                            axis_name=axis_name)
     p_real = jnp.asarray(p_real, jnp.float32)
     gp = replicate_for_groups(params, cfg.num_groups)
-    state = (gp, jax.random.PRNGKey(cfg.seed))
+    state = (gp, jax.random.PRNGKey(cfg.seed), init_selection_state(cfg))
 
     def round_fn(state, r):
-        gp, key = state
-        gp, key, losses, divs = body(
-            gp, key, (r * cfg.iters_per_round).astype(jnp.int32), p_real)
-        return (gp, key), {"loss": jnp.mean(losses),
-                           "divergence": jnp.mean(divs)}
+        gp, key, sel = state
+        gp, key, sel, mets = body(
+            gp, key, sel, (r * cfg.iters_per_round).astype(jnp.int32),
+            p_real)
+        return (gp, key, sel), {
+            "loss": jnp.mean(mets["loss"]),
+            "divergence": jnp.mean(mets["divergence"]),
+            "group_discrepancy": jnp.mean(mets["group_discrepancy"]),
+            "selection_distance": jnp.mean(mets["selection_distance"]),
+            "reselections": jnp.sum(mets["reselected"]),
+        }
 
     def params_fn(state):
         # every row of the group axis holds the post-broadcast global model,
         # so row 0 IS ω_t (bit-exact, no re-averaging of identical rows)
         return jax.tree.map(lambda leaf: leaf[0], state[0])
 
-    state_spec = (jax.tree.map(lambda _: P(axis_name), gp), P())
+    state_spec = (jax.tree.map(lambda _: P(axis_name), gp), P(),
+                  (P(axis_name), P(axis_name)))
     return engine.Experiment(
         name="fedgs" if cfg.selection == "gbp_cs" else "fedgs_random_sel",
         init_state=state, round_fn=round_fn, params_fn=params_fn,

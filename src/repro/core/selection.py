@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from . import gbp_cs
-from .distributions import norm
+from .distributions import mask_divergence
 
 Array = jax.Array
 
@@ -61,8 +61,7 @@ def select_clients_via_gbp_cs(
     sel_mask = jnp.zeros((k_total,), jnp.float32).at[cand_idx].set(res.x)
     mask = pre_mask + sel_mask                  # C_t^m = C_rnd ∪ C_sel (Eq. 18)
 
-    pooled = jnp.sum(counts * mask[:, None], axis=0)
-    divergence = jnp.linalg.norm(norm(pooled) - p_real)
+    divergence = mask_divergence(counts, mask, p_real)
     return SelectionResult(mask=mask, divergence=divergence,
                            distance=res.distance, iterations=res.iterations)
 
@@ -73,9 +72,8 @@ def select_clients_random(key: Array, counts: Array, p_real: Array,
     k_total, _ = counts.shape
     perm = jax.random.permutation(key, k_total)
     mask = jnp.zeros((k_total,), jnp.float32).at[perm[:l]].set(1.0)
-    counts = jnp.asarray(counts, jnp.float32)
-    pooled = jnp.sum(counts * mask[:, None], axis=0)
-    divergence = jnp.linalg.norm(norm(pooled) - jnp.asarray(p_real, jnp.float32))
+    divergence = mask_divergence(counts, mask,
+                                 jnp.asarray(p_real, jnp.float32))
     return SelectionResult(mask=mask, divergence=divergence,
                            distance=divergence, iterations=jnp.int32(0))
 
@@ -110,3 +108,51 @@ select_groups_any = functools.partial(
     jax.jit,
     static_argnames=("l", "l_rnd", "method", "init", "max_iters", "step_fn")
 )(select_for_groups)
+
+
+def reselect_predicate(t: Array, reselect_every: int) -> Array:
+    """When does iteration ``t`` rebuild the super nodes (DESIGN.md §13)?
+
+    ``reselect_every = N >= 1`` → every N internal iterations (N=1 is the
+    historical select-every-iteration cadence); ``0`` → static super nodes
+    (selection runs once, at t=0, and is carried forever). Shared by the
+    host loop (a Python bool on a concrete t) and the fused scan (a traced
+    predicate feeding ``lax.cond``), so both engines rebuild on exactly the
+    same iterations.
+    """
+    if reselect_every == 0:
+        return t == 0
+    return t % reselect_every == 0
+
+
+def select_or_keep(do_reselect: Array, keys: Array, counts: Array,
+                   p_real: Array, l: int, l_rnd: int, *,
+                   prev_mask: Array, prev_distance: Array,
+                   method: str = "gbp_cs", init: str = gbp_cs.MPINV,
+                   max_iters: int = 64, step_fn=None
+                   ) -> tuple[Array, Array, Array]:
+    """Periodic in-scan reselection: run GBP-CS for all M groups, or keep
+    the carried masks, behind ONE scalar ``lax.cond`` (DESIGN.md §13).
+
+    The cond sits *outside* the group vmap — the cadence predicate is global,
+    so on skip iterations the whole GBP-CS solve (the expensive branch) is
+    never executed; the cheap branch only re-scores the carried mask against
+    the CURRENT counts (``mask_divergence`` — under drift the carried
+    committee's divergence degrades, which is the telemetry that makes
+    staleness visible).
+
+    Returns ``(mask (M, K), divergence (M,), distance (M,))``; distance is
+    the GBP-CS objective of the LAST rebuild (carried through skips).
+    """
+
+    def fresh(_):
+        sel = select_for_groups(keys, counts, p_real, l, l_rnd,
+                                method=method, init=init,
+                                max_iters=max_iters, step_fn=step_fn)
+        return sel.mask, sel.divergence, sel.distance
+
+    def keep(_):
+        div = mask_divergence(counts, prev_mask, p_real)
+        return prev_mask, div, prev_distance
+
+    return jax.lax.cond(do_reselect, fresh, keep, None)

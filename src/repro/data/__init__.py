@@ -1,12 +1,15 @@
 from . import femnist, lm_data, partition, streaming  # noqa: F401
 from .partition import Partition, PartitionConfig, make_partition  # noqa: F401
 from .streaming import (  # noqa: F401
+    DRIFT_SCHEDULES,
     ClientPool,
     DeviceBackedStreams,
     DeviceSampler,
     DeviceStream,
+    DriftConfig,
     FactoryStreams,
     HostClientPool,
     make_client_pool,
     make_device_sampler,
+    make_drift_fn,
 )

@@ -109,6 +109,139 @@ class FactoryStreams:
 
 
 # ---------------------------------------------------------------------------
+# Drift schedules (DESIGN.md §13).
+#
+# A dynamic environment is a *pure function of time*: the per-device class
+# distributions evolve with the internal-iteration index t, on-device, with
+# no mutable host state — so the drifted label-count vectors a_t^{m,k} flow
+# into GBP-CS selection without host round-trips, and replaying any t
+# reproduces the same environment (the same purity discipline as
+# DeviceSampler below). Schedules are keyed by *flat device ids*
+# (gid·K + k), so the fused sampler, the sharded sampler, and the baselines'
+# ClientPool all see one consistent environment.
+# ---------------------------------------------------------------------------
+
+DRIFT_SCHEDULES = ("static", "step_shift", "rotate", "redraw", "churn")
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftConfig:
+    """Parameterized drift of the per-device class distributions.
+
+    schedule:
+      * ``static``     — no drift (the historical behavior; exact no-op).
+      * ``step_shift`` — at t >= ``t0`` every device's distribution is
+        cyclically shifted by a per-device offset drawn once from the seed
+        (a permanent regime change: which classes a device streams is
+        re-scrambled, so a committee selected before t0 is stale after it).
+      * ``rotate``     — all distributions rotate by ``(t // period) % F``
+        classes (a slow global label-space cycle).
+      * ``redraw``     — every ``period`` iterations each device's
+        distribution is re-drawn from Dirichlet(``alpha``) (epoch e > 0;
+        epoch 0 keeps the base partition).
+      * ``churn``      — every ``period`` iterations a ``churn_rate``
+        fraction of devices (Bernoulli per device per epoch) is replaced by
+        a fresh device with a Dirichlet(``alpha``) distribution; the rest
+        keep the base partition. Memoryless across epochs: a device not
+        churned at epoch e streams its base distribution again.
+
+    Every schedule is pure in (t, device id, seed): same seed ⇒ same
+    ``class_probs`` trajectory.
+    """
+    schedule: str = "static"
+    t0: int = 50            # step_shift: first shifted iteration
+    period: int = 50        # rotate / redraw / churn: iterations per epoch
+    alpha: float = 0.3      # redraw / churn Dirichlet concentration
+    churn_rate: float = 0.25  # churn: expected fraction replaced per epoch
+
+    def __post_init__(self):
+        if self.schedule not in DRIFT_SCHEDULES:
+            raise ValueError(f"unknown drift schedule: {self.schedule!r} "
+                             f"(expected one of {DRIFT_SCHEDULES})")
+        if self.period < 1:
+            raise ValueError(f"drift period must be >= 1, got {self.period}")
+        if self.alpha <= 0:
+            raise ValueError("drift alpha (Dirichlet concentration) must be "
+                             f"> 0, got {self.alpha}")
+        if not 0.0 <= self.churn_rate <= 1.0:
+            raise ValueError("churn_rate must be a probability in [0, 1], "
+                             f"got {self.churn_rate}")
+
+
+def make_drift_fn(drift: DriftConfig | None, seed: int, num_classes: int,
+                  num_devices: int):
+    """Build ``probs_fn(base, t, ids) -> drifted`` for one drift schedule.
+
+    ``base`` is (D, F) rows of per-device class distributions, ``ids`` the
+    (D,) flat device ids those rows belong to (all < ``num_devices``, the
+    total flat-id range M·K), ``t`` the traced iteration index. Pure and
+    jittable; ``drift=None`` or ``static`` returns ``base`` unchanged (the
+    same array, so the no-drift path is bit-identical to the pre-drift
+    engine). ``step_shift``'s t-invariant per-device offsets are
+    precomputed once over ``num_devices`` at build time — not re-derived
+    (D threefry hashes) on every scan iteration.
+    """
+    f = num_classes
+    if drift is None or drift.schedule == "static":
+        return lambda base, t, ids: base
+    base_key = jax.random.fold_in(jax.random.PRNGKey(seed), 404)
+
+    if drift.schedule == "step_shift":
+        k_off = jax.random.fold_in(base_key, 1)
+        table = jax.vmap(lambda i: jax.random.randint(
+            jax.random.fold_in(k_off, i), (), 1, f))(
+                jnp.arange(num_devices, dtype=jnp.int32))
+
+        def step_shift(base, t, ids):
+            offs = table[ids]                                      # (D,)
+            cols = (jnp.arange(f)[None, :] - offs[:, None]) % f    # (D, F)
+            shifted = jnp.take_along_axis(base, cols, axis=-1)
+            return jnp.where(t >= drift.t0, shifted, base)
+
+        return step_shift
+
+    if drift.schedule == "rotate":
+        def rotate(base, t, ids):
+            s = (t // drift.period) % f
+            cols = (jnp.arange(f)[None, :] - s) % f
+            return jnp.take_along_axis(
+                base, jnp.broadcast_to(cols, base.shape), axis=-1)
+
+        return rotate
+
+    conc = jnp.full((f,), drift.alpha, jnp.float32)
+
+    if drift.schedule == "redraw":
+        k_rd = jax.random.fold_in(base_key, 2)
+
+        def redraw(base, t, ids):
+            e = t // drift.period
+            def per_dev(i):
+                kd = jax.random.fold_in(jax.random.fold_in(k_rd, i), e)
+                return jax.random.dirichlet(kd, conc)
+            drawn = jax.vmap(per_dev)(ids)
+            return jnp.where(e > 0, drawn, base)
+
+        return redraw
+
+    k_ch = jax.random.fold_in(base_key, 3)
+
+    def churn(base, t, ids):
+        e = t // drift.period
+        def per_dev(i):
+            ke = jax.random.fold_in(jax.random.fold_in(k_ch, i), e)
+            hit = jax.random.bernoulli(jax.random.fold_in(ke, 1),
+                                       drift.churn_rate)
+            fresh = jax.random.dirichlet(jax.random.fold_in(ke, 2), conc)
+            return hit, fresh
+        hit, fresh = jax.vmap(per_dev)(ids)
+        replaced = jnp.where(hit[:, None], fresh, base)
+        return jnp.where(e > 0, replaced, base)
+
+    return churn
+
+
+# ---------------------------------------------------------------------------
 # Device-resident streams (DESIGN.md §7).
 #
 # The scan-fused engine must never leave the accelerator mid-round, so the
@@ -166,7 +299,8 @@ class DeviceSampler(NamedTuple):
     batch_size: int
 
 
-def make_device_sampler(stream: DeviceStream) -> DeviceSampler:
+def make_device_sampler(stream: DeviceStream,
+                        drift: DriftConfig | None = None) -> DeviceSampler:
     probs = stream.class_probs
     styles = stream.styles
     m, k, f = probs.shape
@@ -175,12 +309,17 @@ def make_device_sampler(stream: DeviceStream) -> DeviceSampler:
     base = jax.random.PRNGKey(stream.seed)
     label_key = jax.random.fold_in(base, 101)
     img_key = jax.random.fold_in(base, 202)
+    drift_fn = make_drift_fn(drift, stream.seed, f, m * k)
 
     def _group_labels(t, gid):
-        """Next-batch labels of one group: (K, n) int32, pure in (t, gid)."""
+        """Next-batch labels of one group: (K, n) int32, pure in (t, gid).
+        Under drift the group's class distributions evolve with t
+        (DESIGN.md §13) — same purity, so counts stay repeatable."""
         kg = jax.random.fold_in(jax.random.fold_in(label_key, t), gid)
+        ids = gid * k + jnp.arange(k, dtype=jnp.int32)      # flat device ids
+        p = drift_fn(probs[gid], t, ids)                    # (K, F)
         u = jax.random.uniform(kg, (k, n, 1))
-        cdf = jnp.cumsum(probs[gid], axis=-1)[:, None, :]   # (K, 1, F)
+        cdf = jnp.cumsum(p, axis=-1)[:, None, :]            # (K, 1, F)
         labels = (u > cdf).sum(axis=-1)
         return jnp.minimum(labels, f - 1).astype(jnp.int32)
 
@@ -228,8 +367,13 @@ class ClientPool(NamedTuple):
     num_classes: int
 
 
-def make_client_pool(stream: DeviceStream, clients: int,
-                     steps: int) -> ClientPool:
+def make_client_pool(stream: DeviceStream, clients: int, steps: int,
+                     drift: DriftConfig | None = None,
+                     iters_per_round: int = 1) -> ClientPool:
+    """``drift`` evolves the pool's device distributions with time
+    (DESIGN.md §13); round r maps to environment time t = r·``iters_per_round``
+    so baselines can share a clock with a FEDGS run of T internal iterations
+    per round."""
     probs = stream.class_probs.reshape(-1, stream.class_probs.shape[-1])
     styles = stream.styles.reshape(-1, stream.styles.shape[-1])
     pool_size, f = probs.shape
@@ -239,13 +383,15 @@ def make_client_pool(stream: DeviceStream, clients: int,
     n = stream.batch_size
     protos = jnp.asarray(femnist.class_prototypes())
     pool_key = jax.random.fold_in(jax.random.PRNGKey(stream.seed), 303)
+    drift_fn = make_drift_fn(drift, stream.seed, f, pool_size)
 
     def round_batches(r):
         k_sel, k_lab, k_img = jax.random.split(
             jax.random.fold_in(pool_key, r), 3)
         ids = jax.random.choice(k_sel, pool_size, (clients,), replace=False)
+        p = drift_fn(probs[ids], r * iters_per_round, ids)       # (C, F)
         u = jax.random.uniform(k_lab, (clients, steps, n, 1))
-        cdf = jnp.cumsum(probs[ids], axis=-1)[:, None, None, :]  # (C,1,1,F)
+        cdf = jnp.cumsum(p, axis=-1)[:, None, None, :]           # (C,1,1,F)
         labels = jnp.minimum((u > cdf).sum(axis=-1), f - 1).astype(jnp.int32)
         sty = jnp.repeat(styles[ids], steps * n, axis=0)     # (C*S*n, 6)
         imgs = femnist.generate_images_jax(

@@ -17,6 +17,14 @@ group axis across every available device.
   PYTHONPATH=src python -m repro.launch.train --engine fused --eval-chunk 10
   PYTHONPATH=src python -m repro.launch.train --strategy fedadam --rounds 20
   PYTHONPATH=src python -m repro.launch.train --selection random   # ablation
+
+Dynamic environments (DESIGN.md §13): ``--drift`` evolves the per-device
+class distributions over time on-device; ``--reselect-every`` sets the
+GBP-CS rebuild cadence in internal iterations (1 = every iteration,
+0 = static super nodes — the no-adaptivity ablation):
+
+  PYTHONPATH=src python -m repro.launch.train --engine fused \
+      --drift step_shift --drift-t0 40 --reselect-every 10
 """
 from __future__ import annotations
 
@@ -31,7 +39,8 @@ import jax
 from repro import checkpoint as ckpt_lib
 from repro.configs import femnist_cnn
 from repro.core import baselines, fedgs
-from repro.data import (DeviceStream, FactoryStreams, HostClientPool,
+from repro.data import (DRIFT_SCHEDULES, DeviceBackedStreams, DeviceStream,
+                        DriftConfig, FactoryStreams, HostClientPool,
                         PartitionConfig, femnist, make_client_pool,
                         make_device_sampler, make_partition)
 from repro.launch.mesh import make_group_mesh
@@ -74,6 +83,23 @@ def main() -> None:
                     default="jnp",
                     help="route aggregation + GBP-CS steps through jnp or "
                          "the Pallas kernels (interpret-mode on CPU)")
+    ap.add_argument("--drift", choices=DRIFT_SCHEDULES, default="static",
+                    help="dynamic environment: drift schedule of the "
+                         "per-device class distributions (DESIGN.md §13)")
+    ap.add_argument("--drift-t0", type=int, default=50,
+                    help="step_shift: first shifted internal iteration")
+    ap.add_argument("--drift-period", type=int, default=50,
+                    help="rotate/redraw/churn: iterations per drift epoch")
+    ap.add_argument("--drift-alpha", type=float, default=0.3,
+                    help="redraw/churn: Dirichlet concentration of re-drawn "
+                         "device distributions")
+    ap.add_argument("--drift-churn", type=float, default=0.25,
+                    help="churn: expected fraction of devices replaced "
+                         "per epoch")
+    ap.add_argument("--reselect-every", type=int, default=1,
+                    help="GBP-CS rebuild cadence in internal iterations "
+                         "(1 = every iteration, N = every N, 0 = static "
+                         "super nodes; fedgs only, DESIGN.md §13)")
     ap.add_argument("--init", choices=("mpinv", "zero", "random"),
                     default="mpinv")
     ap.add_argument("--alpha", type=float, default=0.3, help="Dirichlet skew")
@@ -102,11 +128,18 @@ def main() -> None:
         msg = f"round {rec.round:4d} | loss {rec.loss:.4f}"
         if not math.isnan(rec.divergence):
             msg += f" | divergence {rec.divergence:.4f}"
+        if not math.isnan(rec.group_discrepancy):
+            msg += (f" | disc {rec.group_discrepancy:.4f}"
+                    f" | resel {rec.reselections:.0f}")
         if rec.test_accuracy is not None:
             msg += (f" | test acc {rec.test_accuracy:.4f} "
                     f"loss {rec.test_loss:.4f}")
         print(msg, flush=True)
         logs_out.append(rec.to_dict())
+
+    drift = None if args.drift == "static" else DriftConfig(
+        schedule=args.drift, t0=args.drift_t0, period=args.drift_period,
+        alpha=args.drift_alpha, churn_rate=args.drift_churn)
 
     if args.strategy == "fedgs":
         fcfg = fedgs.FedGSConfig(
@@ -115,16 +148,27 @@ def main() -> None:
             iters_per_round=args.iters, rounds=args.rounds, lr=args.lr,
             batch_size=args.batch_size, selection=args.selection,
             init=args.init, seed=args.seed, train_step=args.train_step,
-            kernel_backend=args.kernel_backend)
+            kernel_backend=args.kernel_backend,
+            reselect_every=args.reselect_every)
         if args.engine == "host":
-            streams = FactoryStreams(part, batch_size=args.batch_size,
-                                     seed=args.seed)
+            if drift is None:
+                streams = FactoryStreams(part, batch_size=args.batch_size,
+                                         seed=args.seed)
+            else:
+                # drift schedules live on the device-resident stream (pure
+                # in t, DESIGN.md §13); the host loop replays the same
+                # environment through the DeviceBackedStreams adapter
+                streams = DeviceBackedStreams(make_device_sampler(
+                    DeviceStream.from_partition(
+                        part, batch_size=args.batch_size, seed=args.seed),
+                    drift=drift))
             final, _ = fedgs.run_fedgs(
                 params, cnn.loss_fn, streams, part.p_real, fcfg,
                 eval_fn=eval_fn, eval_every=args.eval_every, log_fn=log_fn)
         else:
             sampler = make_device_sampler(DeviceStream.from_partition(
-                part, batch_size=args.batch_size, seed=args.seed))
+                part, batch_size=args.batch_size, seed=args.seed),
+                drift=drift)
             mesh = make_group_mesh(args.groups) if args.engine == "sharded" \
                 else None
             # chunk=1 inlines the single round (the fast CPU path); larger
@@ -137,7 +181,7 @@ def main() -> None:
                 unroll=0 if args.eval_chunk == 1 else 1)
     else:
         for flag in ("train_step", "kernel_backend", "selection", "init",
-                     "iters"):
+                     "reselect_every"):
             if getattr(args, flag) != ap.get_default(flag):
                 print(f"warning: --{flag.replace('_', '-')} applies only to "
                       f"--strategy fedgs; ignored for {args.strategy}",
@@ -148,10 +192,13 @@ def main() -> None:
         bcfg = baselines.BaselineConfig(
             clients_per_round=clients, local_steps=args.local_steps,
             lr=args.lr, rounds=args.rounds, seed=args.seed)
+        # the baselines share FEDGS's environment clock: round r sits at
+        # t = r·T so --drift schedules hit both at the same wall time
         pool = make_client_pool(
             DeviceStream.from_partition(part, batch_size=args.batch_size,
                                         seed=args.seed),
-            clients=clients, steps=args.local_steps)
+            clients=clients, steps=args.local_steps, drift=drift,
+            iters_per_round=args.iters)
         # the baselines evaluate through the shared backbone + head
         pe_eval = lambda pe: eval_fn(pe[0])
         data = HostClientPool(pool) if args.engine == "host" else pool

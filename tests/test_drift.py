@@ -1,0 +1,197 @@
+"""Dynamic environments (DESIGN.md §13): drift schedules are pure in the
+round index, reselection cadence semantics, telemetry, and host == fused ==
+sharded parity under drift with periodic reselection."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines, distributions, fedgs, selection
+from repro.data import (DeviceBackedStreams, DeviceStream, DriftConfig,
+                        PartitionConfig, make_client_pool,
+                        make_device_sampler, make_drift_fn, make_partition)
+
+CFG = dict(num_groups=4, devices_per_group=8, num_selected=4,
+           num_presampled=1, iters_per_round=4, rounds=3, lr=0.05,
+           batch_size=8, gbp_max_iters=16)
+DRIFT = DriftConfig(schedule="step_shift", t0=5, period=4)
+
+_PROBE = baselines.linear_probe_model()
+
+
+def linear_loss(params, batch):
+    x, y = batch
+    return baselines.softmax_xent(_PROBE.apply(params, x), y)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    part = make_partition(PartitionConfig(num_factories=4,
+                                          devices_per_factory=8, seed=0))
+    stream = DeviceStream.from_partition(part, batch_size=8, seed=0)
+    params = _PROBE.init(jax.random.PRNGKey(0))
+    return part, stream, params
+
+
+def _max_diff(a, b):
+    return max(jax.tree.leaves(
+        jax.tree.map(lambda x, y: float(jnp.abs(x - y).max()), a, b)))
+
+
+@pytest.mark.parametrize("schedule", ["static", "step_shift", "rotate",
+                                      "redraw", "churn"])
+def test_drift_fn_pure_and_valid(schedule, setup):
+    """Same seed ⇒ same class_probs trajectory; rows stay distributions."""
+    part, _, _ = setup
+    base = jnp.asarray(part.class_probs[0])                  # (K, F)
+    ids = jnp.arange(base.shape[0], dtype=jnp.int32)
+    f = base.shape[-1]
+    fn = jax.jit(make_drift_fn(DriftConfig(schedule=schedule, t0=3,
+                                           period=3), 0, f, base.shape[0]))
+    traj1 = [fn(base, jnp.int32(t), ids) for t in range(8)]
+    traj2 = [fn(base, jnp.int32(t), ids) for t in range(8)]
+    for a, b in zip(traj1, traj2):
+        assert bool(jnp.all(a == b)), "drift must be pure in t"
+        assert bool(jnp.allclose(a.sum(-1), 1.0, atol=1e-4))
+        assert bool(jnp.all(a >= 0))
+    # t=0 is always the base environment
+    assert bool(jnp.allclose(traj1[0], base, atol=1e-6))
+    if schedule != "static":
+        assert any(not bool(jnp.allclose(p, base)) for p in traj1), \
+            f"{schedule} never drifted"
+    else:
+        assert all(bool(jnp.all(p == base)) for p in traj1)
+
+
+def test_drift_fn_different_seeds_differ(setup):
+    part, _, _ = setup
+    base = jnp.asarray(part.class_probs[0])
+    ids = jnp.arange(base.shape[0], dtype=jnp.int32)
+    f = base.shape[-1]
+    d = DriftConfig(schedule="redraw", period=2)
+    a = make_drift_fn(d, 0, f, base.shape[0])(base, jnp.int32(4), ids)
+    b = make_drift_fn(d, 1, f, base.shape[0])(base, jnp.int32(4), ids)
+    assert not bool(jnp.allclose(a, b))
+
+
+def test_drift_config_validates():
+    with pytest.raises(ValueError, match="schedule"):
+        DriftConfig(schedule="sudden")
+    with pytest.raises(ValueError, match="period"):
+        DriftConfig(schedule="rotate", period=0)
+    with pytest.raises(ValueError, match="alpha"):
+        DriftConfig(schedule="redraw", alpha=0.0)   # Dirichlet(0) -> NaNs
+    with pytest.raises(ValueError, match="churn_rate"):
+        DriftConfig(schedule="churn", churn_rate=1.5)
+    with pytest.raises(ValueError, match="reselect_every"):
+        fedgs.FedGSConfig(reselect_every=-1)
+
+
+def test_sampler_counts_drift(setup):
+    """Drifted counts differ from the static stream only after t0, and stay
+    repeatable (pure in t) — the a_t^{m,k} the BS selects on."""
+    _, stream, _ = setup
+    plain = make_device_sampler(stream)
+    drifted = make_device_sampler(stream, drift=DRIFT)
+    gids = jnp.arange(4, dtype=jnp.int32)
+    pre = jnp.int32(DRIFT.t0 - 1)
+    post = jnp.int32(DRIFT.t0 + 1)
+    assert bool(jnp.all(plain.counts(pre, gids) == drifted.counts(pre, gids)))
+    assert not bool(jnp.all(plain.counts(post, gids)
+                            == drifted.counts(post, gids)))
+    assert bool(jnp.all(drifted.counts(post, gids)
+                        == drifted.counts(post, gids)))
+
+
+def test_client_pool_drift_clock(setup):
+    """ClientPool shares the environment clock: round r = iteration r·T."""
+    _, stream, _ = setup
+    plain = make_client_pool(stream, clients=4, steps=2)
+    drifted = make_client_pool(stream, clients=4, steps=2, drift=DRIFT,
+                               iters_per_round=4)
+    (_, l_pre), _ = drifted.round_batches(jnp.int32(1))    # t=4 < t0
+    (_, p_pre), _ = plain.round_batches(jnp.int32(1))
+    np.testing.assert_array_equal(np.asarray(l_pre), np.asarray(p_pre))
+    (_, l_post), _ = drifted.round_batches(jnp.int32(2))   # t=8 >= t0
+    (_, p_post), _ = plain.round_batches(jnp.int32(2))
+    assert not bool(jnp.all(l_post == p_post))
+
+
+def test_reselect_predicate_semantics():
+    assert [bool(selection.reselect_predicate(t, 1)) for t in range(4)] == \
+        [True, True, True, True]
+    assert [bool(selection.reselect_predicate(t, 3)) for t in range(7)] == \
+        [True, False, False, True, False, False, True]
+    assert [bool(selection.reselect_predicate(t, 0)) for t in range(4)] == \
+        [True, False, False, False]
+
+
+def test_telemetry_helpers(setup):
+    part, _, _ = setup
+    counts = jnp.asarray(
+        np.random.default_rng(0).integers(0, 5, (4, 8, 62)), jnp.float32)
+    p_real = jnp.asarray(part.p_real)
+    full = distributions.group_discrepancy(counts, p_real)
+    assert full.shape == (4,)
+    ones = jnp.ones((4, 8), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(distributions.mask_divergence(counts, ones, p_real)),
+        np.asarray(full), atol=1e-6)
+
+
+def test_reselection_counts_in_logs(setup):
+    """reselect_every cadence shows up in the RoundRecord telemetry: with
+    T=4 and cadence 0, only round 0 rebuilds (once); cadence 2 rebuilds
+    twice per round; cadence 1 every iteration."""
+    part, stream, params = setup
+    sampler = make_device_sampler(stream, drift=DRIFT)
+    for cadence, per_round in ((0, [1, 0, 0]), (2, [2, 2, 2]),
+                               (1, [4, 4, 4])):
+        cfg = fedgs.FedGSConfig(**CFG, reselect_every=cadence)
+        _, logs = fedgs.run_fedgs_fused(params, linear_loss, sampler,
+                                        part.p_real, cfg)
+        assert [int(l.reselections) for l in logs] == per_round, cadence
+        assert all(np.isfinite(l.group_discrepancy) for l in logs)
+        assert all(np.isfinite(l.selection_distance) for l in logs)
+
+
+def test_host_fused_sharded_parity_under_drift(setup):
+    """ISSUE 5 acceptance: host == fused == sharded to 1e-5 on params under
+    a drift schedule with periodic (non-trivial) reselection."""
+    part, stream, params = setup
+    sampler = make_device_sampler(stream, drift=DRIFT)
+    cfg = fedgs.FedGSConfig(**CFG, reselect_every=3)
+    host, host_logs = fedgs.run_fedgs(
+        params, linear_loss, DeviceBackedStreams(sampler), part.p_real, cfg)
+    fused, fused_logs = fedgs.run_fedgs_fused(
+        params, linear_loss, sampler, part.p_real, cfg)
+    mesh = jax.make_mesh((1,), ("groups",))
+    sharded, _ = fedgs.run_fedgs_fused(
+        params, linear_loss, sampler, part.p_real, cfg, mesh=mesh, chunk=2)
+    assert _max_diff(host, fused) < 1e-5
+    assert _max_diff(fused, sharded) < 1e-5
+    for field in ("loss", "divergence", "group_discrepancy",
+                  "selection_distance", "reselections"):
+        np.testing.assert_allclose(
+            [getattr(l, field) for l in host_logs],
+            [getattr(l, field) for l in fused_logs], atol=1e-5,
+            err_msg=field)
+
+
+def test_static_selection_carries_mask_across_rounds(setup):
+    """reselect_every=0 freezes the committee: every post-t0 iteration
+    trains the exact same device set, and its divergence degrades under
+    drift relative to the reselecting run (the staleness telemetry)."""
+    part, stream, params = setup
+    drift = DriftConfig(schedule="step_shift", t0=2)
+    sampler = make_device_sampler(stream, drift=drift)
+    cfg_static = fedgs.FedGSConfig(**CFG, reselect_every=0)
+    cfg_resel = fedgs.FedGSConfig(**CFG)
+    _, logs_static = fedgs.run_fedgs_fused(params, linear_loss, sampler,
+                                           part.p_real, cfg_static)
+    _, logs_resel = fedgs.run_fedgs_fused(params, linear_loss, sampler,
+                                          part.p_real, cfg_resel)
+    # post-shift rounds: the frozen committee must be no better matched
+    # than the re-optimized one (GBP-CS re-optimizes every iteration)
+    assert logs_static[-1].divergence >= logs_resel[-1].divergence - 1e-6
+    assert sum(l.reselections for l in logs_static) == 1

@@ -184,13 +184,19 @@ def test_run_experiment_preserves_init_state_and_reruns(setup):
 def test_round_record_typed_log():
     rec = engine.RoundRecord(round=3, loss=1.5, strategy="fedavg")
     assert rec.test_accuracy is None and math.isnan(rec.divergence)
+    assert math.isnan(rec.group_discrepancy) and math.isnan(rec.reselections)
     d = rec.to_dict()
     assert d["round"] == 3 and d["strategy"] == "fedavg"
     assert set(d) == {"round", "loss", "divergence", "test_loss",
-                      "test_accuracy", "strategy"}
-    # records_from_metrics: NaN eval slots -> None
+                      "test_accuracy", "strategy", "group_discrepancy",
+                      "selection_distance", "reselections"}
+    # NaN telemetry slots (strategies without them) -> None, JSON-safe
+    assert d["group_discrepancy"] is None and d["reselections"] is None
+    # records_from_metrics: NaN eval slots -> None, telemetry forwarded
     recs = engine.records_from_metrics(
         10, {"loss": jnp.asarray([1.0, 2.0]),
-             "test_accuracy": jnp.asarray([float("nan"), 0.5])}, strategy="s")
+             "test_accuracy": jnp.asarray([float("nan"), 0.5]),
+             "reselections": jnp.asarray([5.0, 0.0])}, strategy="s")
     assert recs[0].round == 10 and recs[0].test_accuracy is None
     assert recs[1].test_accuracy == 0.5 and recs[1].strategy == "s"
+    assert recs[0].reselections == 5.0 and recs[1].reselections == 0.0

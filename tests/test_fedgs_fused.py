@@ -165,7 +165,8 @@ def test_fused_round_param_buffers_scale_with_m_not_ml(setup):
             **{**CFG, "iters_per_round": 2, "train_step": ts,
                "scan_unroll": 1})
         text = fedgs.make_fused_round(cnn.loss_fn, cfg, sampler).lower(
-            gp, key, jnp.int32(0), p_real).compile().as_text()
+            gp, key, fedgs.init_selection_state(cfg), jnp.int32(0),
+            p_real).compile().as_text()
         footprints[ts] = hlo_analysis.param_replica_bytes(
             text, weight_shapes, CFG["num_groups"], CFG["num_selected"])
     assert footprints["grad_avg"]["ml_count"] == 0, footprints
