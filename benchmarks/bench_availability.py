@@ -1,0 +1,246 @@
+"""Availability benchmark (DESIGN.md §14): churn robustness.
+
+Industrial IIoT devices drop out — duty cycles, contention, stragglers
+missing the round deadline. This suite makes the availability subsystem's
+claim executable: under an on/off Markov churn schedule
+(``data.streaming.AvailabilityConfig``) it runs FEDGS legs over the *same*
+availability trace on the unified fused engine:
+
+* ``fedgs_aware`` — the availability-aware protocol: GBP-CS scores dark
+  devices out of the committee (``avail_selection='aware'``), churn
+  re-triggers selection between cadence points, and missed contributions
+  are carried as staleness-discounted last gradients
+  (``sync='bounded_async'``, DESIGN.md §14.3).
+* ``fedgs_blind`` — the ablation: selection ignores availability
+  (``avail_selection='blind'``) and ``sync='sync'`` simply drops dark
+  members' contributions (their weight is zeroed for the round).
+* ``fedgs_aware_sync`` — informational: aware selection but synchronous
+  drops, isolating how much of the gap is selection vs staleness reuse.
+* ``fedgs_always`` — informational: no availability schedule at all, the
+  full-participation reference ceiling.
+* ``fedavg`` — random client sampling reference over the same partition
+  (the pool abstraction has no committee, so churn is modeled as the
+  selection problem it creates for FEDGS, not re-implemented for FedAvg).
+
+Legs run the **linear probe** at the drift bench's reduced scale; as there,
+``final_test_accuracy`` is the mean over the LAST THREE per-round evals and
+the partition uses α=0.1 (strongly non-i.i.d. — the regime where losing a
+committee member actually costs class coverage).
+
+Writes ``BENCH_availability.json``: per-leg final accuracy, mean
+participation, dark-selection totals, mean staleness, and fused rounds/sec.
+The headline invariant — gated by ``check_fused_regression.py
+--availability`` — is that under Markov churn the availability-aware run
+beats the availability-blind run on final accuracy, as the MEAN over
+``GATE_SEEDS`` environment seeds (partition + stream + availability + PRNG
+seeded together): a single pinned trace can hand the blind committee a
+lucky uptime streak, but the robustness claim is statistical — and, being
+fully seeded, exactly reproducible in CI.
+
+  PYTHONPATH=src python -m benchmarks.run --only availability
+  PYTHONPATH=src python -m benchmarks.bench_availability --full
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import time
+
+import jax
+
+from repro.core import baselines, engine, fedgs
+from repro.data import (AvailabilityConfig, DeviceStream, PartitionConfig,
+                        femnist, make_availability_fn, make_client_pool,
+                        make_device_sampler, make_partition)
+from repro.models import cnn
+
+from .common import emit, min_delta_rate as _min_delta_rate
+
+# reduced-scale protocol: the drift bench's QUICK geometry (K=24 so GBP-CS
+# has a real candidate pool to route around dark devices) plus the churn
+# knobs. up_prob=0.5/dwell=8 gives outages spanning two reselection
+# cadences — the regime where a blind committee wastes seats on dark
+# devices for many iterations while aware selection routes around them;
+# gamma close to 1 keeps stale gradients useful over a dwell.
+QUICK = dict(m=4, k=24, l=8, l_rnd=2, t=8, rounds=14, n=16, lr=0.1,
+             clients=32, steps=4, b_rounds=14, chunk=7, test_n=20,
+             alpha=0.1, up_prob=0.5, dwell=8, reselect_every=4,
+             gamma=0.9, max_staleness=4)
+FULL = dict(m=10, k=35, l=10, l_rnd=2, t=25, rounds=16, n=32, lr=0.1,
+            clients=50, steps=5, b_rounds=16, chunk=8, test_n=40,
+            alpha=0.1, up_prob=0.6, dwell=10, reselect_every=5,
+            gamma=0.9, max_staleness=4)
+
+GATE_SEEDS = (0, 1, 2, 3, 4)   # environment seeds averaged for the gate
+
+_PROBE = baselines.linear_probe_model()
+
+
+def _probe_loss(params, batch):
+    x, y = batch
+    return baselines.softmax_xent(_PROBE.apply(params, x), y)
+
+
+def _avail_cfg(p: dict) -> AvailabilityConfig:
+    return AvailabilityConfig(schedule="markov", up_prob=p["up_prob"],
+                              dwell=p["dwell"])
+
+
+def _tail_accuracy(logs: list[engine.RoundRecord], k: int = 3) -> float:
+    accs = [l.test_accuracy for l in logs if l.test_accuracy is not None]
+    tail = accs[-k:]
+    return sum(tail) / len(tail)
+
+
+def _mean_metric(logs: list[engine.RoundRecord], name: str) -> float:
+    vals = [getattr(l, name) for l in logs]
+    vals = [v for v in vals if not math.isnan(v)]
+    return sum(vals) / len(vals) if vals else float("nan")
+
+
+def run_fedgs_leg(p: dict, part, eval_fn, avail: AvailabilityConfig | None,
+                  sync: str, avail_selection: str, seed: int = 0) -> dict:
+    """One FEDGS run over the churned environment on the fused engine."""
+    sampler = make_device_sampler(
+        DeviceStream.from_partition(part, batch_size=p["n"], seed=seed + 1))
+    avail_fn = (None if avail is None else
+                make_availability_fn(avail, seed, p["m"] * p["k"]))
+    params = _PROBE.init(jax.random.PRNGKey(seed))
+    # scan_unroll=1: same rationale as bench_drift — the probe is
+    # engine-bound and each leg pays its own compile, so the rolled
+    # T-iteration scan is the dominant-cost win (identical numerics)
+    cfg = fedgs.FedGSConfig(
+        num_groups=p["m"], devices_per_group=p["k"], num_selected=p["l"],
+        num_presampled=p["l_rnd"], iters_per_round=p["t"],
+        rounds=p["rounds"], lr=p["lr"], batch_size=p["n"],
+        reselect_every=p["reselect_every"], seed=seed, scan_unroll=1,
+        sync=sync, gamma=p["gamma"], max_staleness=p["max_staleness"],
+        avail_selection=avail_selection)
+    exp = fedgs.make_fedgs_experiment(params, _probe_loss, sampler,
+                                      part.p_real, cfg, eval_fn=eval_fn,
+                                      unroll=1, avail_fn=avail_fn)
+    stamps: list[float] = []
+    _, logs = engine.run_experiment(
+        exp, cfg.rounds, eval_every=1, chunk=p["chunk"],
+        on_chunk=lambda r0, n: stamps.append(time.perf_counter()))
+    out = {
+        "final_test_accuracy": round(_tail_accuracy(logs), 4),
+        "final_test_loss": round(logs[-1].test_loss, 4),
+        "reselections": int(sum(l.reselections for l in logs)),
+        "fused_rounds_per_sec": round(_min_delta_rate(stamps, p["chunk"]), 3),
+    }
+    if avail_fn is not None:
+        out["participation"] = round(_mean_metric(logs, "participation"), 4)
+        out["dark_selected"] = int(sum(l.dark_selected for l in logs))
+    if sync == "bounded_async":
+        out["staleness_mean"] = round(_mean_metric(logs, "staleness_mean"), 4)
+        out["staleness_max"] = int(max(l.staleness_max for l in logs))
+    return out
+
+
+def run_fedavg_leg(p: dict, part, eval_fn, seed: int = 0) -> dict:
+    """FedAvg reference over the same partition (full participation)."""
+    stream = DeviceStream.from_partition(part, batch_size=p["n"],
+                                         seed=seed + 1)
+    pool = make_client_pool(stream, clients=p["clients"], steps=p["steps"])
+    cfg = baselines.BaselineConfig(
+        clients_per_round=p["clients"], local_steps=p["steps"], lr=p["lr"],
+        rounds=p["b_rounds"], seed=seed)
+    strat = baselines.all_strategies(_PROBE)["fedavg"]
+    pe_eval = lambda pe: eval_fn(pe[0])
+    exp = baselines.make_baseline_experiment(_PROBE, strat, pool, cfg,
+                                             eval_fn=pe_eval, unroll=1)
+    stamps: list[float] = []
+    _, logs = engine.run_experiment(
+        exp, cfg.rounds, eval_every=1, chunk=p["chunk"],
+        on_chunk=lambda r0, n: stamps.append(time.perf_counter()))
+    return {
+        "final_test_accuracy": round(_tail_accuracy(logs), 4),
+        "final_test_loss": round(logs[-1].test_loss, 4),
+        "fused_rounds_per_sec": round(_min_delta_rate(stamps, p["chunk"]), 3),
+    }
+
+
+def _mean_legs(legs: list[dict]) -> dict:
+    return {k: round(sum(leg[k] for leg in legs) / len(legs), 4)
+            for k in legs[0]}
+
+
+def run(quick: bool = True,
+        json_path: str = "BENCH_availability.json") -> None:
+    p = QUICK if quick else FULL
+    avail = _avail_cfg(p)
+    tx, ty = femnist.make_test_set(n_per_class=p["test_n"])
+    eval_fn = cnn.make_eval_fn(tx, ty, apply_fn=_PROBE.apply)
+    out = {"scale": "quick" if quick else "full", "config": p,
+           "backend": jax.default_backend(), "model": "linear_probe",
+           "gate_seeds": list(GATE_SEEDS), "schedule": "markov"}
+
+    def part_for(seed: int):
+        return make_partition(PartitionConfig(
+            num_factories=p["m"], devices_per_factory=p["k"],
+            alpha=p["alpha"], seed=seed))
+
+    # the gated legs: aware vs blind as means over the SAME GATE_SEEDS
+    # environment population (each seed couples partition + stream +
+    # availability trace + PRNG, so every leg at a seed faces the same
+    # churn trace)
+    t0 = time.time()
+    per_seed = []
+    for seed in GATE_SEEDS:
+        part = part_for(seed)
+        a = run_fedgs_leg(p, part, eval_fn, avail, "bounded_async",
+                          "aware", seed=seed)
+        b = run_fedgs_leg(p, part, eval_fn, avail, "sync", "blind",
+                          seed=seed)
+        per_seed.append(dict(seed=seed, fedgs_aware=a, fedgs_blind=b,
+                             gap=round(a["final_test_accuracy"]
+                                       - b["final_test_accuracy"], 4)))
+    legs = {
+        "fedgs_aware": _mean_legs([d["fedgs_aware"] for d in per_seed]),
+        "fedgs_blind": _mean_legs([d["fedgs_blind"] for d in per_seed]),
+    }
+    # informational single-seed legs: selection-only ablation and the
+    # full-participation ceiling + FedAvg reference
+    part0 = part_for(0)
+    legs["fedgs_aware_sync"] = run_fedgs_leg(p, part0, eval_fn, avail,
+                                             "sync", "aware")
+    legs["fedgs_always"] = run_fedgs_leg(p, part0, eval_fn, None, "sync",
+                                         "aware")
+    legs["fedavg"] = run_fedavg_leg(p, part0, eval_fn)
+
+    gap = (legs["fedgs_aware"]["final_test_accuracy"]
+           - legs["fedgs_blind"]["final_test_accuracy"])
+    out["legs"] = legs
+    out["aware_minus_blind_acc"] = round(gap, 4)
+    out["per_seed"] = per_seed
+    out["rounds"] = p["rounds"]
+    emit("availability.markov", (time.time() - t0) * 1e6,
+         ";".join(f"{k}_acc={v['final_test_accuracy']:.4f}"
+                  for k, v in legs.items())
+         + f";aware_minus_blind={gap:+.4f}")
+
+    # headline invariant (gated by check_fused_regression.py
+    # --availability): availability-awareness must pay under churn, in the
+    # mean over the gate-seed environments
+    out["invariant_churn_aware_beats_blind"] = bool(
+        legs["fedgs_aware"]["final_test_accuracy"]
+        > legs["fedgs_blind"]["final_test_accuracy"])
+    emit("availability.invariant", 0.0,
+         f"churn_aware_beats_blind="
+         f"{out['invariant_churn_aware_beats_blind']}"
+         f";mean_gap={gap:+.4f}")
+
+    with open(json_path, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="the larger reduced scale (slow)")
+    ap.add_argument("--json", default="BENCH_availability.json")
+    args = ap.parse_args()
+    run(quick=not args.full, json_path=args.json)

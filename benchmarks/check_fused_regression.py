@@ -4,13 +4,15 @@ committed numbers.
   python benchmarks/check_fused_regression.py BASELINE.json NEW.json
   python benchmarks/check_fused_regression.py --table2 BASELINE.json NEW.json
   python benchmarks/check_fused_regression.py --drift BASELINE.json NEW.json
+  python benchmarks/check_fused_regression.py --availability B.json NEW.json
 
-A missing BASELINE file is tolerated in ``--drift`` mode only (first-run
-tolerance: the drift gate checks the NEW json's invariant and reports "no
-committed baseline", so the suite can be introduced before its JSON lands
-on the branch). The fused/table2 modes keep failing loudly on a missing
-baseline — their committed JSONs exist, so a missing file there means a
-broken path, and exiting 0 would silently disarm the regression gates.
+A missing BASELINE file is tolerated in ``--drift`` and ``--availability``
+modes only (first-run tolerance: those gates check the NEW json's invariant
+and report "no committed baseline", so a suite can be introduced before its
+JSON lands on the branch). The fused/table2 modes keep failing loudly on a
+missing baseline — their committed JSONs exist, so a missing file there
+means a broken path, and exiting 0 would silently disarm the regression
+gates.
 
 ``--drift`` gates ``BENCH_drift.json`` on the *invariant*, not throughput:
 under the step-shift schedule FEDGS with periodic reselection must strictly
@@ -18,6 +20,12 @@ beat FEDGS with static (frozen-at-t0) selection on final test accuracy —
 the paper's adaptivity claim (DESIGN.md §13). Throughput and the other
 schedules are reported but not enforced (accuracy under rotate/redraw/churn
 is compared against the committed numbers informationally only).
+
+``--availability`` gates ``BENCH_availability.json`` the same way: under
+Markov churn the availability-aware protocol (aware GBP-CS selection +
+staleness-bounded async sync) must strictly beat the availability-blind
+ablation on mean final test accuracy over the gate seeds (DESIGN.md §14).
+Participation/staleness telemetry and throughput are reported only.
 
 Default mode compares ``BENCH_fedgs_fused.json``'s ``fused_iters_per_sec``
 (the default engine config: ``train_step='grad_avg'``,
@@ -126,6 +134,31 @@ def check_drift(baseline: dict | None, new: dict) -> int:
     return 0
 
 
+def check_availability(baseline: dict | None, new: dict) -> int:
+    for leg, rec in new["legs"].items():
+        row = f"{leg}: acc={rec['final_test_accuracy']}"
+        if "participation" in rec:
+            row += f" participation={rec['participation']}"
+        if "staleness_mean" in rec:
+            row += f" staleness={rec['staleness_mean']}"
+        old = (baseline or {}).get("legs", {}).get(leg)
+        if old:
+            row += f" (committed acc {old['final_test_accuracy']})"
+        print(row)
+    if not new.get("invariant_churn_aware_beats_blind", False):
+        legs = new["legs"]
+        print("FAIL: under Markov churn, availability-aware FEDGS "
+              f"({legs['fedgs_aware']['final_test_accuracy']}) does not "
+              "strictly beat the availability-blind ablation "
+              f"({legs['fedgs_blind']['final_test_accuracy']}) — the "
+              "churn-robustness invariant (DESIGN.md §14) is broken",
+              file=sys.stderr)
+        return 1
+    print("OK: churn aware > blind (availability invariant holds, gap "
+          f"{new.get('aware_minus_blind_acc')})")
+    return 0
+
+
 def _load(path: str, *, required: bool) -> dict | None:
     try:
         with open(path) as f:
@@ -141,14 +174,18 @@ def _load(path: str, *, required: bool) -> dict | None:
 def main(argv: list[str]) -> int:
     table2 = "--table2" in argv
     drift = "--drift" in argv
-    paths = [a for a in argv if a not in ("--table2", "--drift")]
-    if len(paths) != 2 or (table2 and drift):
+    availability = "--availability" in argv
+    paths = [a for a in argv
+             if a not in ("--table2", "--drift", "--availability")]
+    if len(paths) != 2 or (table2 + drift + availability) > 1:
         print(__doc__, file=sys.stderr)
         return 2
-    baseline = _load(paths[0], required=not drift)
+    baseline = _load(paths[0], required=not (drift or availability))
     new = _load(paths[1], required=True)
     if drift:
         return check_drift(baseline, new)
+    if availability:
+        return check_availability(baseline, new)
     return (check_table2 if table2 else check_fused)(baseline, new)
 
 

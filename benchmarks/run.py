@@ -14,6 +14,7 @@ import time
 import traceback
 
 from . import (
+    bench_availability,
     bench_drift,
     bench_fedgs_fused,
     bench_fedgs_vs_baselines,
@@ -35,6 +36,7 @@ SUITES = {
     "roofline": bench_roofline.run,          # dry-run roofline table
     "fedgs_fused": bench_fedgs_fused.run,    # host loop vs scan-fused engine
     "drift": bench_drift.run,                # dynamic environments (§13)
+    "availability": bench_availability.run,  # churn robustness (§14)
 }
 
 

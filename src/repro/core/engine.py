@@ -51,6 +51,11 @@ class RoundRecord(NamedTuple):
     is the mean per-group data-distribution discrepancy vs the global
     distribution, ``selection_distance`` the GBP-CS objective ``d`` of the
     last rebuild, ``reselections`` the number of GBP-CS rebuilds this round.
+    The availability-telemetry fields (DESIGN.md §14.4) are NaN without an
+    availability schedule: ``participation`` is the mean fraction of devices
+    up, ``dark_selected`` the round's count of committee-member-iteration
+    pairs that missed, ``staleness_mean``/``staleness_max`` the
+    mean/worst staleness of bounded-async stale contributors.
     """
     round: int
     loss: float
@@ -61,11 +66,14 @@ class RoundRecord(NamedTuple):
     group_discrepancy: float = _NAN
     selection_distance: float = _NAN
     reselections: float = _NAN
+    participation: float = _NAN
+    staleness_mean: float = _NAN
+    staleness_max: float = _NAN
+    dark_selected: float = _NAN
 
     def to_dict(self) -> dict:
         d = dict(self._asdict())
-        for k in ("divergence", "group_discrepancy", "selection_distance",
-                  "reselections"):
+        for k in _OPTIONAL_METRICS:
             if math.isnan(d[k]):          # strategies without the telemetry
                 d[k] = None               # (strict-JSON safe, unlike NaN)
         return d
@@ -74,7 +82,8 @@ class RoundRecord(NamedTuple):
 # metric names records_from_metrics forwards to same-named RoundRecord
 # fields when an experiment's round_fn reports them (all NaN-defaulted)
 _OPTIONAL_METRICS = ("divergence", "group_discrepancy", "selection_distance",
-                     "reselections")
+                     "reselections", "participation", "staleness_mean",
+                     "staleness_max", "dark_selected")
 
 
 def records_from_metrics(r0: int, metrics: dict, *, strategy: str = ""

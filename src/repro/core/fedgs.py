@@ -68,6 +68,20 @@ class FedGSConfig:
     #                               1 = every iteration (historical default),
     #                               N = every N iters, 0 = static super nodes
     #                               (select once at t=0; DESIGN.md §13)
+    sync: str = "sync"            # availability handling of Eq. 4
+    #                               (DESIGN.md §14.3): 'sync' drops missed
+    #                               devices (weight 0, committee rebuilt on
+    #                               churn); 'bounded_async' keeps them at
+    #                               γ^staleness weight via the carried group
+    #                               gradient
+    gamma: float = 0.5            # bounded_async staleness decay γ ∈ (0, 1]
+    max_staleness: int = 4        # bounded_async staleness cap (≥ 1)
+    avail_selection: str = "aware"  # 'aware' — GBP-CS sees the up-mask and
+    #                               never selects dark devices (DESIGN.md
+    #                               §14.2); 'blind' — selection ignores
+    #                               availability (the ablation baseline; dark
+    #                               picks are dropped or go stale at train
+    #                               time, per ``sync``)
 
     def __post_init__(self):
         if self.train_step not in ("grad_avg", "model_avg"):
@@ -76,6 +90,24 @@ class FedGSConfig:
         if self.reselect_every < 0:
             raise ValueError("reselect_every must be >= 0 (0 = static), got "
                              f"{self.reselect_every}")
+        if self.sync not in ("sync", "bounded_async"):
+            raise ValueError(f"unknown sync mode: {self.sync!r} "
+                             "(expected 'sync' or 'bounded_async')")
+        if self.sync == "bounded_async":
+            if not 0.0 < self.gamma <= 1.0:
+                raise ValueError(f"gamma must be in (0, 1], got {self.gamma}")
+            if self.max_staleness < 1:
+                raise ValueError("max_staleness must be >= 1, got "
+                                 f"{self.max_staleness}")
+            if self.train_step == "model_avg":
+                raise ValueError(
+                    "sync='bounded_async' blends gradients and requires "
+                    "train_step='grad_avg' (model_avg has no per-group "
+                    "gradient to carry)")
+        if self.avail_selection not in ("aware", "blind"):
+            raise ValueError(
+                f"unknown avail_selection: {self.avail_selection!r} "
+                "(expected 'aware' or 'blind')")
         dispatch.check_backend(self.kernel_backend)
 
     @property
@@ -186,6 +218,12 @@ def _per_group_train(params_m: PyTree, batches_m: PyTree, loss_fn: LossFn,
         new_params, losses = jax.vmap(dev_step)(batches_m)
         synced = dispatch.internal_avg_fn(cfg.kernel_backend)(
             new_params, weights)
+        # fault tolerance (DESIGN.md §14.3): a group whose whole committee
+        # went dark (all weights 0) keeps its params instead of averaging
+        # toward the 1e-12-denominator zero model
+        total = jnp.sum(weights)
+        synced = jax.tree.map(
+            lambda s, p: jnp.where(total > 0, s, p), synced, params_m)
         return synced, jnp.mean(losses)
     if cfg.kernel_backend == "pallas":
         losses, grads = jax.vmap(
@@ -202,9 +240,102 @@ def _per_group_train(params_m: PyTree, batches_m: PyTree, loss_fn: LossFn,
     return sync.apply_sgd(params_m, g, cfg.lr), jnp.mean(losses)
 
 
-def make_group_train_step(loss_fn: LossFn, cfg: FedGSConfig):
+def _per_group_train_avail(params_m: PyTree, batches_m: PyTree,
+                           loss_fn: LossFn, cfg: FedGSConfig,
+                           fresh_w: Array, stale_sum: Array, g_prev: PyTree
+                           ) -> tuple[PyTree, Array, PyTree]:
+    """Staleness-bounded Eq. (4) for one group (DESIGN.md §14.3):
+
+        g = Σ_k (w_k/D) g_k + (S/D) ḡ,   D = Σ_k w_k + S,  S = Σ_j γ^{s_j}
+
+    — a single weighted backward over the fresh superbatch (the grad_avg
+    trick: ∇ of the w_k/D-weighted loss sum IS the first term), plus the
+    carried group gradient ``ḡ = g_prev`` at the stale mass S. Matches
+    :func:`sync.bounded_async_sync` without materializing per-device grads.
+    At ``S = 0, fresh_w = 1`` every op reduces to the availability-blind
+    grad_avg path (÷ same denominator, + S·ḡ/D = + 0·ḡ), and with an
+    all-dark committee D's 1e-12 floor yields g = 0 → params unchanged.
+    Returns ``(params', mean loss, g)`` — the blend is the next ḡ.
+    """
+    denom = jnp.maximum(fresh_w.sum() + stale_sum, 1e-12)
+    wn = fresh_w / denom
+
+    def weighted_loss(p):
+        losses = jax.vmap(lambda b: loss_fn(p, b))(batches_m)
+        return jnp.sum(losses * wn), losses
+
+    (_, losses), g_f = jax.value_and_grad(weighted_loss, has_aux=True)(
+        params_m)
+    frac = stale_sum / denom
+    g = jax.tree.map(lambda gf, gp: gf + frac * gp.astype(jnp.float32),
+                     g_f, g_prev)
+    g_out = jax.tree.map(lambda gl, gp: gl.astype(gp.dtype), g, g_prev)
+    return sync.apply_sgd(params_m, g, cfg.lr), jnp.mean(losses), g_out
+
+
+class AvailStep(NamedTuple):
+    """Per-iteration availability bookkeeping (DESIGN.md §14.3); leading
+    axes are whatever ``mask``/``avail``/``staleness`` carry (M or none)."""
+    fresh_w: Array      # (..., L) internal-sync weights of fresh members
+    stale_sum: Array    # (...,)   S = Σ γ^s over this iteration's stale ones
+    staleness: Array    # (..., K) advanced clock (post-iteration)
+    dark: Array         # (...,)   selected-but-dark count
+    stale_mean: Array   # (...,)   mean staleness of the stale contributors
+    stale_max: Array    # (...,)   max staleness of the stale contributors
+
+
+def _avail_weights(mask: Array, avail: Array, staleness: Array,
+                   cfg: FedGSConfig) -> AvailStep:
+    """Split the committee into fresh vs stale for one iteration. ``fresh_w``
+    rides the ``top_k`` gather order of :func:`_gather_selected` /
+    ``DeviceSampler.selected_batch``, so weight i belongs to gathered batch
+    i. Uses the PRE-update ``staleness`` for the γ^s mass and telemetry,
+    then advances the clock."""
+    vals, idx = jax.lax.top_k(mask, cfg.num_selected)
+    fresh_w = vals * jnp.take_along_axis(avail, idx, axis=-1)
+    stale = mask * (1.0 - avail)
+    w = sync.staleness_weights(staleness, cfg.gamma)
+    stale_sum = jnp.sum(stale * w, axis=-1)
+    s_f = jnp.asarray(staleness, jnp.float32)
+    n_stale = jnp.sum(stale, axis=-1)
+    stale_mean = jnp.sum(stale * s_f, axis=-1) / jnp.maximum(n_stale, 1.0)
+    stale_max = jnp.max(stale * s_f, axis=-1)
+    new_staleness = sync.update_staleness(staleness, mask * avail,
+                                          cfg.max_staleness)
+    return AvailStep(fresh_w, stale_sum, new_staleness, n_stale,
+                     stale_mean, stale_max)
+
+
+def make_group_train_step(loss_fn: LossFn, cfg: FedGSConfig, *,
+                          availability: bool = False):
     """Train-only half of the iteration (used by the two-phase host loop):
-    selected batches (M, L, n, ...) -> internally-synced group params."""
+    selected batches (M, L, n, ...) -> internally-synced group params.
+
+    ``availability=True`` returns the weighted form (DESIGN.md §14): for
+    ``cfg.sync='sync'`` it is ``step(gp, batches, fresh_w)`` — missed
+    devices at weight 0; for ``'bounded_async'`` it is ``step(gp, batches,
+    fresh_w, stale_sum, g_prev) -> (gp', loss, g_prev')``."""
+
+    if availability and cfg.sync == "bounded_async":
+        @jax.jit
+        def step_async(group_params: PyTree, batches: PyTree, fresh_w: Array,
+                       stale_sum: Array, g_prev: PyTree):
+            return jax.vmap(
+                lambda p, b, fw, ss, gp: _per_group_train_avail(
+                    p, b, loss_fn, cfg, fw, ss, gp)
+            )(group_params, batches, fresh_w, stale_sum, g_prev)
+
+        return step_async
+
+    if availability:
+        @jax.jit
+        def step_weighted(group_params: PyTree, batches: PyTree,
+                          fresh_w: Array):
+            return jax.vmap(
+                lambda p, b, w: _per_group_train(p, b, loss_fn, cfg, w)
+            )(group_params, batches, fresh_w)
+
+        return step_weighted
 
     @jax.jit
     def step(group_params: PyTree, batches: PyTree):
@@ -228,6 +359,7 @@ def run_fedgs(
     p_real: Array,
     cfg: FedGSConfig,
     *,
+    avail_fn=None,
     eval_fn: Callable[[PyTree], tuple[float, float]] | None = None,
     eval_every: int = 10,
     log_fn: Callable[[RoundLog], None] | None = None,
@@ -239,7 +371,9 @@ def run_fedgs(
     iterations; between rebuilds the carried masks are reused and only
     re-scored against the fresh counts (DESIGN.md §13); (3) ONLY the
     selected devices generate/fetch data and take one local SGD step;
-    (4) internal sync. External sync every T iterations.
+    (4) internal sync. External sync every T iterations. ``avail_fn``
+    threads an availability schedule through selection and sync — same
+    semantics as the fused body (DESIGN.md §14).
 
     With ``cfg.engine == 'fused'`` (or ``'sharded'``, which additionally
     shards the group axis over every available device), dispatches to
@@ -250,20 +384,32 @@ def run_fedgs(
         mesh = make_group_mesh(cfg.num_groups) if cfg.engine == "sharded" \
             else None
         return run_fedgs_fused(params, loss_fn, streams, p_real, cfg,
-                               mesh=mesh, eval_fn=eval_fn,
+                               avail_fn=avail_fn, mesh=mesh, eval_fn=eval_fn,
                                eval_every=eval_every, log_fn=log_fn)
     if cfg.engine != "host":
         raise ValueError(f"unknown engine: {cfg.engine!r} "
                          "(expected 'host', 'fused', or 'sharded')")
-    train_step = make_group_train_step(loss_fn, cfg)
+    bounded = cfg.sync == "bounded_async"
+    if bounded and avail_fn is None:
+        raise ValueError("sync='bounded_async' requires an availability "
+                         "schedule (avail_fn)")
+    train_step = make_group_train_step(loss_fn, cfg,
+                                       availability=avail_fn is not None)
     gp = replicate_for_groups(params, cfg.num_groups)
     key = jax.random.PRNGKey(cfg.seed)
     p_real = jnp.asarray(p_real, jnp.float32)
-    mask_c, dist_c = init_selection_state(cfg)
+    sel_state = init_selection_state(cfg, params)
+    mask_c, dist_c = sel_state[0], sel_state[1]
+    if bounded:
+        staleness, g_prev = sel_state[2], sel_state[3]
+    avail_jit = jax.jit(avail_fn) if avail_fn is not None else None
+    flat_ids = jnp.arange(cfg.num_groups * cfg.devices_per_group,
+                          dtype=jnp.int32)
     logs: list[RoundLog] = []
     t = 0
     for r in range(cfg.rounds):
         losses, divs, discs, dists = [], [], [], []
+        parts, darks, smeans, smaxs = [], [], [], []
         resel = 0
         for _ in range(cfg.iters_per_round):
             key, sub = jax.random.split(key)
@@ -271,19 +417,50 @@ def run_fedgs(
             keys = jax.random.split(sub, cfg.num_groups)
             discs.append(float(jnp.mean(
                 distributions.group_discrepancy(counts, p_real))))
-            if bool(selection.reselect_predicate(t, cfg.reselect_every)):
+            if avail_fn is None:
+                avail = None
+            else:
+                up, _lat = avail_jit(jnp.int32(t), flat_ids)
+                avail = up.reshape((cfg.num_groups, cfg.devices_per_group))
+            sel_avail = avail if cfg.avail_selection == "aware" else None
+            do = bool(selection.reselect_predicate(t, cfg.reselect_every))
+            if sel_avail is not None and not bounded \
+                    and cfg.reselect_every != 1:
+                do = bool(selection.reselect_trigger(
+                    do, mask_c, sel_avail, cfg.num_selected))
+            if do:
                 sel = selection.select_groups_any(
                     keys, counts, p_real, cfg.num_selected,
-                    cfg.num_presampled, method=cfg.selection, init=cfg.init,
+                    cfg.num_presampled, avail=sel_avail,
+                    method=cfg.selection, init=cfg.init,
                     max_iters=cfg.gbp_max_iters,
                     step_fn=dispatch.gbp_step_fn(cfg.kernel_backend))
                 mask_c, dist_c, div = sel.mask, sel.distance, sel.divergence
                 resel += 1
             else:
-                div = distributions.mask_divergence(counts, mask_c, p_real)
+                ce = counts if sel_avail is None \
+                    else counts * sel_avail[..., None]
+                div = distributions.mask_divergence(ce, mask_c, p_real)
             imgs, labs = streams.fetch_selected(np.asarray(mask_c),
                                                 cfg.num_selected)
-            gp, loss = train_step(gp, (jnp.asarray(imgs), jnp.asarray(labs)))
+            batches = (jnp.asarray(imgs), jnp.asarray(labs))
+            if avail is None:
+                gp, loss = train_step(gp, batches)
+            elif bounded:
+                st = _avail_weights(mask_c, avail, staleness, cfg)
+                gp, loss, g_prev = train_step(gp, batches, st.fresh_w,
+                                              st.stale_sum, g_prev)
+                staleness = st.staleness
+                darks.append(float(jnp.sum(st.dark)))
+                smeans.append(float(jnp.mean(st.stale_mean)))
+                smaxs.append(float(jnp.max(st.stale_max)))
+                parts.append(float(jnp.mean(avail)))
+            else:
+                vals, idx = jax.lax.top_k(mask_c, cfg.num_selected)
+                fresh_w = vals * jnp.take_along_axis(avail, idx, axis=-1)
+                gp, loss = train_step(gp, batches, fresh_w)
+                darks.append(float(jnp.sum(mask_c * (1.0 - avail))))
+                parts.append(float(jnp.mean(avail)))
             losses.append(float(jnp.mean(loss)))
             divs.append(float(jnp.mean(div)))
             dists.append(float(jnp.mean(dist_c)))
@@ -293,12 +470,18 @@ def run_fedgs(
         if eval_fn is not None and (r + 1) % eval_every == 0:
             tl, ta = eval_fn(global_params(gp))
             tl, ta = float(tl), float(ta)
-        log = RoundRecord(round=r, loss=float(np.mean(losses)),
-                          divergence=float(np.mean(divs)),
-                          test_loss=tl, test_accuracy=ta, strategy="fedgs",
-                          group_discrepancy=float(np.mean(discs)),
-                          selection_distance=float(np.mean(dists)),
-                          reselections=float(resel))
+        log = RoundRecord(
+            round=r, loss=float(np.mean(losses)),
+            divergence=float(np.mean(divs)),
+            test_loss=tl, test_accuracy=ta, strategy="fedgs",
+            group_discrepancy=float(np.mean(discs)),
+            selection_distance=float(np.mean(dists)),
+            reselections=float(resel),
+            participation=float(np.mean(parts)) if parts else float("nan"),
+            dark_selected=float(np.sum(darks)) if darks else float("nan"),
+            staleness_mean=float(np.mean(smeans)) if smeans
+            else float("nan"),
+            staleness_max=float(np.max(smaxs)) if smaxs else float("nan"))
         logs.append(log)
         if log_fn is not None:
             log_fn(log)
@@ -327,25 +510,47 @@ def make_group_mesh(num_groups: int | None = None):
     return jax.make_mesh((n,), ("groups",))
 
 
-def init_selection_state(cfg: FedGSConfig) -> tuple[Array, Array]:
-    """Initial carried selection state ``(mask (M, K), distance (M,))`` for
-    the round body (DESIGN.md §13). All-zero: iteration t=0 always rebuilds
+def init_selection_state(cfg: FedGSConfig, params: PyTree | None = None
+                         ) -> tuple:
+    """Initial carried selection state for the round body (DESIGN.md §13):
+    ``(mask (M, K), distance (M,))``. All-zero: iteration t=0 always rebuilds
     (``reselect_predicate(0, N)`` is True for every cadence N), so the zeros
     are never trained on. Always full-M — under ``shard_map`` the state is
-    sharded by the in_specs/state_spec, not built per shard."""
-    return (jnp.zeros((cfg.num_groups, cfg.devices_per_group), jnp.float32),
-            jnp.zeros((cfg.num_groups,), jnp.float32))
+    sharded by the in_specs/state_spec, not built per shard.
+
+    With ``cfg.sync='bounded_async'`` two more leaves join the carry
+    (DESIGN.md §14.3, sharded ``P('groups')`` like the mask): the per-device
+    staleness clock ``(M, K) int32``, initialized at ``max_staleness``
+    (nobody has ever contributed), and the per-group carried gradient
+    ``ḡ (M, |θ|)``, initialized at zero so initial stale mass only damps the
+    fresh gradient instead of fabricating an update — ``params`` (the
+    zero-template) is required then."""
+    sel = (jnp.zeros((cfg.num_groups, cfg.devices_per_group), jnp.float32),
+           jnp.zeros((cfg.num_groups,), jnp.float32))
+    if cfg.sync == "bounded_async":
+        if params is None:
+            raise ValueError("sync='bounded_async' needs the params template "
+                             "to size the carried group gradient")
+        staleness = jnp.full((cfg.num_groups, cfg.devices_per_group),
+                             cfg.max_staleness, jnp.int32)
+        g_prev = replicate_for_groups(
+            jax.tree.map(jnp.zeros_like, params), cfg.num_groups)
+        sel = sel + (staleness, g_prev)
+    return sel
 
 
 def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
-                    mesh=None, axis_name: str = "groups"):
+                    avail_fn=None, mesh=None, axis_name: str = "groups"):
     """Build the PURE one-round body of the device-resident engine.
 
     Returns ``round_body(group_params, key, sel, t0, p_real) ->
-    (group_params', key', sel', metrics)`` where ``sel = (mask (M, K),
-    distance (M,))`` is the carried selection state (DESIGN.md §13) and
-    ``metrics`` maps ``loss`` / ``divergence`` / ``group_discrepancy`` /
-    ``selection_distance`` / ``reselected`` to (T,) per-iteration arrays.
+    (group_params', key', sel', metrics)`` where ``sel`` is the carried
+    selection state — ``(mask (M, K), distance (M,))``, extended with the
+    staleness clock and carried group gradient under ``sync='bounded_async'``
+    (:func:`init_selection_state`, DESIGN.md §13–§14) — and ``metrics`` maps
+    ``loss`` / ``divergence`` / ``group_discrepancy`` /
+    ``selection_distance`` / ``reselected`` (plus the §14 availability
+    telemetry when ``avail_fn`` is given) to (T,) per-iteration arrays.
     The T internal iterations run as a single ``lax.scan`` (selection →
     local step → internal sync per scan step), with external sync +
     broadcast as the epilogue.
@@ -359,6 +564,14 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
     cadence routes through :func:`selection.select_or_keep` (one scalar
     cond around the whole GBP-CS solve).
 
+    ``avail_fn`` is the availability schedule (``data.streaming.
+    make_availability_fn``, DESIGN.md §14): a pure fn of (t, flat device
+    ids) evaluated on-device each scan step. ``cfg.avail_selection='aware'``
+    feeds the up-mask to GBP-CS; ``cfg.sync`` decides whether missed
+    committee members are dropped (``'sync'``, with churn-triggered
+    reselection) or contribute their γ^staleness-weighted stale gradient
+    (``'bounded_async'``).
+
     With ``mesh``, the body is written for execution *inside* ``shard_map``
     over ``axis_name``: each shard simulates M/n_shards super nodes,
     selection keys are sliced from the *global* key fan-out (so results are
@@ -369,6 +582,11 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
     single-device path.
     """
     m, t_per_round, l = cfg.num_groups, cfg.iters_per_round, cfg.num_selected
+    k = cfg.devices_per_group
+    bounded = cfg.sync == "bounded_async"
+    if bounded and avail_fn is None:
+        raise ValueError("sync='bounded_async' requires an availability "
+                         "schedule (avail_fn)")
     n_shards = 1 if mesh is None else _mesh_axis_size(mesh, axis_name)
     if m % n_shards != 0:
         raise ValueError(
@@ -389,35 +607,75 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
             shard = jax.lax.axis_index(axis_name)
             gids = (shard * m_local
                     + jnp.arange(m_local, dtype=jnp.int32)).astype(jnp.int32)
+        flat_ids = (gids[:, None] * k
+                    + jnp.arange(k, dtype=jnp.int32)).reshape(-1)
 
         def iteration(carry, t):
-            gp, key, mask, dist = carry
+            gp, key, sel = carry
+            mask, dist = sel[0], sel[1]
             # PRNG discipline identical to the host loop: split the round
             # key, fan out to all M groups, take this shard's slice.
             key, sub = jax.random.split(key)
             keys = jnp.take(jax.random.split(sub, m), gids, axis=0)
             counts = sampler.counts(t, gids)
+            if avail_fn is None:
+                avail = None
+            else:
+                up, _lat = avail_fn(t, flat_ids)
+                avail = up.reshape((gids.shape[0], k))
+            sel_avail = avail if cfg.avail_selection == "aware" else None
             if cfg.reselect_every == 1:
                 res = selection.select_for_groups(
                     keys, counts, p_real, l, cfg.num_presampled,
-                    method=cfg.selection, init=cfg.init,
+                    avail=sel_avail, method=cfg.selection, init=cfg.init,
                     max_iters=cfg.gbp_max_iters,
                     step_fn=dispatch.gbp_step_fn(cfg.kernel_backend))
                 mask, div, dist = res.mask, res.divergence, res.distance
                 resel = jnp.float32(1.0)
             else:
                 do = selection.reselect_predicate(t, cfg.reselect_every)
+                if sel_avail is not None and not bounded:
+                    # churn re-trigger (DESIGN.md §14.2) — psum'd so every
+                    # shard takes the same lax.cond branch
+                    dark_under = selection.reselect_trigger(
+                        do, mask, sel_avail, l)
+                    do = dark_under if mesh is None else \
+                        jax.lax.psum(dark_under.astype(jnp.float32),
+                                     axis_name) > 0
                 mask, div, dist = selection.select_or_keep(
                     do, keys, counts, p_real, l, cfg.num_presampled,
-                    prev_mask=mask, prev_distance=dist,
+                    prev_mask=mask, prev_distance=dist, avail=sel_avail,
                     method=cfg.selection, init=cfg.init,
                     max_iters=cfg.gbp_max_iters,
                     step_fn=dispatch.gbp_step_fn(cfg.kernel_backend))
                 resel = do.astype(jnp.float32)
             imgs, labs = sampler.selected_batch(t, gids, mask, l)
-            gp, losses = jax.vmap(
-                lambda p, b: _per_group_train(p, b, loss_fn, cfg)
-            )(gp, (imgs, labs))
+            extra = {}
+            if avail is None:
+                gp, losses = jax.vmap(
+                    lambda p, b: _per_group_train(p, b, loss_fn, cfg)
+                )(gp, (imgs, labs))
+                sel_new = (mask, dist)
+            elif bounded:
+                st = _avail_weights(mask, avail, sel[2], cfg)
+                gp, losses, g_prev = jax.vmap(
+                    lambda p, b, fw, ss, gpv: _per_group_train_avail(
+                        p, b, loss_fn, cfg, fw, ss, gpv)
+                )(gp, (imgs, labs), st.fresh_w, st.stale_sum, sel[3])
+                sel_new = (mask, dist, st.staleness, g_prev)
+                extra = {"participation": jnp.mean(avail),
+                         "dark_selected": jnp.sum(st.dark),
+                         "staleness_mean": jnp.mean(st.stale_mean),
+                         "staleness_max": jnp.max(st.stale_max)}
+            else:
+                vals, idx = jax.lax.top_k(mask, l)
+                fresh_w = vals * jnp.take_along_axis(avail, idx, axis=-1)
+                gp, losses = jax.vmap(
+                    lambda p, b, w: _per_group_train(p, b, loss_fn, cfg, w)
+                )(gp, (imgs, labs), fresh_w)
+                sel_new = (mask, dist)
+                extra = {"participation": jnp.mean(avail),
+                         "dark_selected": jnp.sum(mask * (1.0 - avail))}
             disc = jnp.mean(distributions.group_discrepancy(counts, p_real))
             loss, div, d = jnp.mean(losses), jnp.mean(div), jnp.mean(dist)
             if mesh is not None:
@@ -425,12 +683,22 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
                 div = jax.lax.pmean(div, axis_name)
                 disc = jax.lax.pmean(disc, axis_name)
                 d = jax.lax.pmean(d, axis_name)
-            return (gp, key, mask, dist), (loss, div, disc, d, resel)
+                for name in ("participation", "staleness_mean"):
+                    if name in extra:
+                        extra[name] = jax.lax.pmean(extra[name], axis_name)
+                if "dark_selected" in extra:
+                    extra["dark_selected"] = jax.lax.psum(
+                        extra["dark_selected"], axis_name)
+                if "staleness_max" in extra:
+                    extra["staleness_max"] = jax.lax.pmax(
+                        extra["staleness_max"], axis_name)
+            met = {"loss": loss, "divergence": div, "group_discrepancy": disc,
+                   "selection_distance": d, "reselected": resel, **extra}
+            return (gp, key, sel_new), met
 
-        (gp, key, mask, dist), (losses, divs, discs, dists, resels) = \
-            jax.lax.scan(
-                iteration, (group_params, key) + tuple(sel),
-                t0 + jnp.arange(t_per_round, dtype=jnp.int32), unroll=unroll)
+        (gp, key, sel), mets = jax.lax.scan(
+            iteration, (group_params, key, tuple(sel)),
+            t0 + jnp.arange(t_per_round, dtype=jnp.int32), unroll=unroll)
         # epilogue: external sync (Eq. 5) + broadcast back to the group axis
         g = sync.external_sync_grouped(
             gp, axis_name if mesh is not None else None,
@@ -438,27 +706,35 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
         gp = jax.tree.map(
             lambda leaf: jnp.broadcast_to(leaf[None],
                                           (m_local,) + leaf.shape), g)
-        metrics = {"loss": losses, "divergence": divs,
-                   "group_discrepancy": discs, "selection_distance": dists,
-                   "reselected": resels}
-        return gp, key, (mask, dist), metrics
+        return gp, key, sel, mets
 
     return round_body
 
 
+def _selection_state_spec(cfg: FedGSConfig, params: PyTree | None,
+                          axis_name: str):
+    """PartitionSpec tree matching :func:`init_selection_state`: every leaf
+    of the carried selection state — mask, distance, and (bounded_async) the
+    staleness clock and group gradient — is sharded over the group axis."""
+    template = init_selection_state(cfg, params)
+    return jax.tree.map(lambda _: P(axis_name), template)
+
+
 def make_fused_round(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
+                     avail_fn=None, params: PyTree | None = None,
                      mesh=None, axis_name: str = "groups"):
     """Jitted one-round dispatch over :func:`make_round_body` —
     ``group_params`` buffers are donated, so steady-state rounds allocate
-    nothing new. Call as ``fn(gp, key, init_selection_state(cfg), t0,
-    p_real)`` and thread the returned selection state into the next round.
-    (The chunked multi-round engine wraps the same body via
-    ``make_fedgs_experiment`` instead.)"""
-    fn = make_round_body(loss_fn, cfg, sampler, mesh=mesh,
+    nothing new. Call as ``fn(gp, key, init_selection_state(cfg[, params]),
+    t0, p_real)`` and thread the returned selection state into the next
+    round; under ``sync='bounded_async'`` pass the ``params`` template so
+    the sharding spec covers the extended carry. (The chunked multi-round
+    engine wraps the same body via ``make_fedgs_experiment`` instead.)"""
+    fn = make_round_body(loss_fn, cfg, sampler, avail_fn=avail_fn, mesh=mesh,
                          axis_name=axis_name)
     if mesh is not None:
         from jax.experimental.shard_map import shard_map
-        sel_spec = (P(axis_name), P(axis_name))
+        sel_spec = _selection_state_spec(cfg, params, axis_name)
         fn = shard_map(
             fn, mesh=mesh,
             in_specs=(P(axis_name), P(), sel_spec, P(), P()),
@@ -474,6 +750,7 @@ def make_fedgs_experiment(
     p_real: Array,
     cfg: FedGSConfig,
     *,
+    avail_fn=None,
     mesh=None,
     axis_name: str = "groups",
     eval_fn: Callable[[PyTree], tuple[Array, Array]] | None = None,
@@ -481,29 +758,39 @@ def make_fedgs_experiment(
 ) -> engine.Experiment:
     """FEDGS as an ``engine.Experiment`` (DESIGN.md §12): state is
     (group_params (M, ...), PRNG key, carried selection state (mask,
-    distance) — DESIGN.md §13); one round = :func:`make_round_body`
-    at ``t0 = r·T``. ``eval_fn`` must be jittable (the engine evaluates
-    inside the round scan — ``models.cnn.make_eval_fn``). ``unroll``
-    controls the engine's rounds-scan unroll (0 = auto: full on CPU;
-    1 = rolled — far cheaper to compile for large chunks)."""
-    body = make_round_body(loss_fn, cfg, sampler, mesh=mesh,
-                           axis_name=axis_name)
+    distance[, staleness, ḡ] — DESIGN.md §13–§14); one round =
+    :func:`make_round_body` at ``t0 = r·T``. ``eval_fn`` must be jittable
+    (the engine evaluates inside the round scan — ``models.cnn.
+    make_eval_fn``). ``unroll`` controls the engine's rounds-scan unroll
+    (0 = auto: full on CPU; 1 = rolled — far cheaper to compile for large
+    chunks)."""
+    body = make_round_body(loss_fn, cfg, sampler, avail_fn=avail_fn,
+                           mesh=mesh, axis_name=axis_name)
     p_real = jnp.asarray(p_real, jnp.float32)
     gp = replicate_for_groups(params, cfg.num_groups)
-    state = (gp, jax.random.PRNGKey(cfg.seed), init_selection_state(cfg))
+    state = (gp, jax.random.PRNGKey(cfg.seed),
+             init_selection_state(cfg, params))
+    bounded = cfg.sync == "bounded_async"
 
     def round_fn(state, r):
         gp, key, sel = state
         gp, key, sel, mets = body(
             gp, key, sel, (r * cfg.iters_per_round).astype(jnp.int32),
             p_real)
-        return (gp, key, sel), {
+        out = {
             "loss": jnp.mean(mets["loss"]),
             "divergence": jnp.mean(mets["divergence"]),
             "group_discrepancy": jnp.mean(mets["group_discrepancy"]),
             "selection_distance": jnp.mean(mets["selection_distance"]),
             "reselections": jnp.sum(mets["reselected"]),
         }
+        if avail_fn is not None:
+            out["participation"] = jnp.mean(mets["participation"])
+            out["dark_selected"] = jnp.sum(mets["dark_selected"])
+        if bounded:
+            out["staleness_mean"] = jnp.mean(mets["staleness_mean"])
+            out["staleness_max"] = jnp.max(mets["staleness_max"])
+        return (gp, key, sel), out
 
     def params_fn(state):
         # every row of the group axis holds the post-broadcast global model,
@@ -511,7 +798,7 @@ def make_fedgs_experiment(
         return jax.tree.map(lambda leaf: leaf[0], state[0])
 
     state_spec = (jax.tree.map(lambda _: P(axis_name), gp), P(),
-                  (P(axis_name), P(axis_name)))
+                  _selection_state_spec(cfg, params, axis_name))
     return engine.Experiment(
         name="fedgs" if cfg.selection == "gbp_cs" else "fedgs_random_sel",
         init_state=state, round_fn=round_fn, params_fn=params_fn,
@@ -526,6 +813,7 @@ def run_fedgs_fused(
     p_real: Array,
     cfg: FedGSConfig,
     *,
+    avail_fn=None,
     mesh=None,
     axis_name: str = "groups",
     eval_fn: Callable[[PyTree], tuple[Array, Array]] | None = None,
@@ -545,10 +833,12 @@ def run_fedgs_fused(
     chunk size (see ``models.cnn.make_eval_fn``). ``unroll`` is the
     rounds-scan unroll (0 = auto: full on CPU — right for chunk=1; pass
     unroll=1 for large CPU chunks, where inlining chunk·T round bodies
-    would blow up compile time, DESIGN.md §12.2).
+    would blow up compile time, DESIGN.md §12.2). ``avail_fn`` threads an
+    availability schedule through selection and sync (DESIGN.md §14).
     """
     exp = make_fedgs_experiment(params, loss_fn, sampler, p_real, cfg,
-                                mesh=mesh, axis_name=axis_name,
+                                avail_fn=avail_fn, mesh=mesh,
+                                axis_name=axis_name,
                                 eval_fn=eval_fn, unroll=unroll)
     state, logs = engine.run_experiment(
         exp, cfg.rounds, eval_every=eval_every if eval_fn is not None else 0,

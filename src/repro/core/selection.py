@@ -34,17 +34,35 @@ def select_clients_via_gbp_cs(
     l: int,                   # L devices to select in total
     l_rnd: int,               # randomly pre-sampled devices
     *,
+    avail: Array | None = None,   # (K,) 0/1 up-mask (DESIGN.md §14.2)
     init: str = gbp_cs.MPINV,
     max_iters: int = 64,
     step_fn=None,
 ) -> SelectionResult:
-    """One group's client selection. K and F are static; jit-friendly."""
+    """One group's client selection. K and F are static; jit-friendly.
+
+    With ``avail``, dark devices are never selected (DESIGN.md §14.2):
+    their counts are zeroed (they report nothing), the pre-sample
+    permutation is stably partitioned so available devices fill the random
+    slots first, a repair step swaps any dark GBP-CS picks for the
+    best-ranked available candidates, and the final mask is intersected
+    with ``avail``. Every step is a no-op at ``avail ≡ 1`` — multiplying
+    by 1.0 and stable-sorting equal keys are exact identities — so this
+    path is bit-identical to the availability-blind one there.
+    """
     k_total, f = counts.shape
     l_sel = l - l_rnd
     counts = jnp.asarray(counts, jnp.float32)
+    if avail is not None:
+        avail = jnp.asarray(avail, jnp.float32)
+        counts = counts * avail[:, None]        # dark devices report nothing
 
     key_pre, key_opt = jax.random.split(key)
     perm = jax.random.permutation(key_pre, k_total)
+    if avail is not None:
+        # stable partition: available devices first, permutation order kept
+        # within each class (equal keys at avail ≡ 1 leave perm unchanged)
+        perm = perm[jnp.argsort(1.0 - avail[perm], stable=True)]
     pre_idx = perm[:l_rnd]                      # C^m_rnd
     cand_idx = perm[l_rnd:]                     # C^m \ C^m_rnd
     pre_mask = jnp.zeros((k_total,), jnp.float32).at[pre_idx].set(1.0)
@@ -58,20 +76,38 @@ def select_clients_via_gbp_cs(
         A, y, l_sel, key=key_opt, init=init, max_iters=max_iters,
         step_fn=step_fn,
     )
-    sel_mask = jnp.zeros((k_total,), jnp.float32).at[cand_idx].set(res.x)
+    x, distance = res.x, res.distance
+    if avail is not None:
+        # repair: availability dominates the solver's choice — any dark pick
+        # is swapped for the best available candidate (chosen-and-up scores
+        # 3, up 2, chosen-but-dark 1; stable top-L_sel returns exactly res.x
+        # when every chosen candidate is up), then the objective is re-scored
+        x = gbp_cs.top_lsel(2.0 * avail[cand_idx] + x, l_sel)
+        distance = gbp_cs.objective(A, x, y)
+    sel_mask = jnp.zeros((k_total,), jnp.float32).at[cand_idx].set(x)
     mask = pre_mask + sel_mask                  # C_t^m = C_rnd ∪ C_sel (Eq. 18)
+    if avail is not None:
+        mask = mask * avail                     # invariant: mask ⊆ avail
 
     divergence = mask_divergence(counts, mask, p_real)
     return SelectionResult(mask=mask, divergence=divergence,
-                           distance=res.distance, iterations=res.iterations)
+                           distance=distance, iterations=res.iterations)
 
 
 def select_clients_random(key: Array, counts: Array, p_real: Array,
-                          l: int) -> SelectionResult:
+                          l: int, *,
+                          avail: Array | None = None) -> SelectionResult:
     """FedAvg's random selection in the same interface (for baselines)."""
     k_total, _ = counts.shape
+    counts = jnp.asarray(counts, jnp.float32)
     perm = jax.random.permutation(key, k_total)
+    if avail is not None:
+        avail = jnp.asarray(avail, jnp.float32)
+        counts = counts * avail[:, None]
+        perm = perm[jnp.argsort(1.0 - avail[perm], stable=True)]
     mask = jnp.zeros((k_total,), jnp.float32).at[perm[:l]].set(1.0)
+    if avail is not None:
+        mask = mask * avail
     divergence = mask_divergence(counts, mask,
                                  jnp.asarray(p_real, jnp.float32))
     return SelectionResult(mask=mask, divergence=divergence,
@@ -79,10 +115,11 @@ def select_clients_random(key: Array, counts: Array, p_real: Array,
 
 
 def select_for_groups(keys: Array, counts: Array, p_real: Array, l: int,
-                      l_rnd: int, *, method: str = "gbp_cs",
+                      l_rnd: int, *, avail: Array | None = None,
+                      method: str = "gbp_cs",
                       init: str = gbp_cs.MPINV,
                       max_iters: int = 64, step_fn=None) -> SelectionResult:
-    """vmap over M groups: keys (M,2), counts (M, K, F).
+    """vmap over M groups: keys (M,2), counts (M, K, F), avail (M, K)|None.
 
     Un-jitted on purpose: this is the selection body shared by the two-phase
     host loop (which jits it via :func:`select_groups_any`) and the fused
@@ -94,14 +131,16 @@ def select_for_groups(keys: Array, counts: Array, p_real: Array, l: int,
     it is forwarded untouched to :func:`gbp_cs.gbp_cs_minimize`.
     """
     if method == "gbp_cs":
-        fn = lambda k, c: select_clients_via_gbp_cs(
-            k, c, p_real, l, l_rnd, init=init, max_iters=max_iters,
+        fn = lambda k, c, a: select_clients_via_gbp_cs(
+            k, c, p_real, l, l_rnd, avail=a, init=init, max_iters=max_iters,
             step_fn=step_fn)
     elif method == "random":
-        fn = lambda k, c: select_clients_random(k, c, p_real, l)
+        fn = lambda k, c, a: select_clients_random(k, c, p_real, l, avail=a)
     else:
         raise ValueError(f"unknown selection method: {method!r}")
-    return jax.vmap(fn)(keys, counts)
+    if avail is None:
+        return jax.vmap(lambda k, c: fn(k, c, None))(keys, counts)
+    return jax.vmap(fn)(keys, counts, avail)
 
 
 select_groups_any = functools.partial(
@@ -125,9 +164,26 @@ def reselect_predicate(t: Array, reselect_every: int) -> Array:
     return t % reselect_every == 0
 
 
+def reselect_trigger(do_reselect: Array, mask: Array, avail: Array,
+                     l: int) -> Array:
+    """Availability re-trigger for ``sync='sync'`` committees (DESIGN.md
+    §14.2): force a rebuild when any carried-committee member went dark, or
+    when any committee is under-strength (fewer than ``l`` members — the
+    aftermath of an infeasible rebuild, retried until devices return).
+
+    Returns a scalar predicate; under shard_map callers must ``psum`` the
+    per-shard counts first so every shard takes the same ``lax.cond`` branch
+    — this helper is pure local math, the collective stays at the call site.
+    """
+    dark = jnp.sum(mask * (1.0 - avail))
+    under = jnp.sum(jnp.maximum(l - jnp.sum(mask, axis=-1), 0.0))
+    return jnp.logical_or(do_reselect, (dark + under) > 0)
+
+
 def select_or_keep(do_reselect: Array, keys: Array, counts: Array,
                    p_real: Array, l: int, l_rnd: int, *,
                    prev_mask: Array, prev_distance: Array,
+                   avail: Array | None = None,
                    method: str = "gbp_cs", init: str = gbp_cs.MPINV,
                    max_iters: int = 64, step_fn=None
                    ) -> tuple[Array, Array, Array]:
@@ -141,18 +197,26 @@ def select_or_keep(do_reselect: Array, keys: Array, counts: Array,
     committee's divergence degrades, which is the telemetry that makes
     staleness visible).
 
+    With ``avail`` the fresh branch runs availability-aware selection; the
+    keep branch re-scores against availability-masked counts but carries the
+    FULL committee mask — a dark member is not evicted here (in
+    ``bounded_async`` it keeps contributing its stale gradient, and in
+    ``sync`` mode :func:`reselect_trigger` folds churn into ``do_reselect``
+    so this cond rebuilds instead of keeping).
+
     Returns ``(mask (M, K), divergence (M,), distance (M,))``; distance is
     the GBP-CS objective of the LAST rebuild (carried through skips).
     """
 
     def fresh(_):
-        sel = select_for_groups(keys, counts, p_real, l, l_rnd,
+        sel = select_for_groups(keys, counts, p_real, l, l_rnd, avail=avail,
                                 method=method, init=init,
                                 max_iters=max_iters, step_fn=step_fn)
         return sel.mask, sel.divergence, sel.distance
 
     def keep(_):
-        div = mask_divergence(counts, prev_mask, p_real)
+        c = counts if avail is None else counts * avail[..., None]
+        div = mask_divergence(c, prev_mask, p_real)
         return prev_mask, div, prev_distance
 
     return jax.lax.cond(do_reselect, fresh, keep, None)

@@ -109,6 +109,67 @@ def external_sync(group_params: PyTree) -> PyTree:
 
 
 # ---------------------------------------------------------------------------
+# Staleness-bounded asynchronous aggregation (DESIGN.md §14.3).
+#
+# When availability churn makes selected devices miss an iteration,
+# ``FedGSConfig.sync='bounded_async'`` keeps them in Eq. (4) at a damped
+# weight: a missed device contributes the group's previous blended gradient
+# at weight γ^s, where s is its per-device staleness clock (iterations since
+# it last delivered a fresh gradient), saturated at ``max_staleness``.
+# ---------------------------------------------------------------------------
+
+def staleness_weights(staleness: Array, gamma: float) -> Array:
+    """γ^s contribution weights for stale participants. ``staleness`` is
+    kept ≤ max_staleness by :func:`update_staleness`, so weights never decay
+    below γ^max — the *bounded* in bounded_async."""
+    return jnp.asarray(gamma, jnp.float32) ** jnp.asarray(staleness,
+                                                          jnp.float32)
+
+
+def update_staleness(staleness: Array, contributed: Array,
+                     max_staleness: int) -> Array:
+    """Advance the per-device staleness clock one iteration: reset to 0
+    where the device delivered a fresh gradient (``contributed > 0``), else
+    +1, saturating at ``max_staleness``."""
+    s = jnp.asarray(staleness, jnp.int32)
+    return jnp.where(contributed > 0, jnp.int32(0),
+                     jnp.minimum(s + 1, jnp.int32(max_staleness)))
+
+
+def bounded_async_sync(grads: PyTree, fresh_w: Array, g_prev: PyTree,
+                       stale_w: Array) -> PyTree:
+    """Simulator form of the staleness-bounded Eq. (4):
+
+        g_t^m = ( Σ_{k fresh} w_k g_t^{m,k}  +  (Σ_{j stale} γ^{s_j}) ḡ^m )
+                / ( Σ_{k fresh} w_k  +  Σ_{j stale} γ^{s_j} )
+
+    Fresh devices contribute their gradients at weight ``fresh_w``; missed
+    committee members contribute the group's carried blended gradient
+    ``ḡ^m = g_prev`` at their γ^staleness weights (``stale_w``, zero for
+    fresh or unselected devices). The production engine computes the same
+    blend with a single weighted backward pass (``core.fedgs``); this
+    explicit form is the test oracle.
+
+    Args:
+      grads: leaves (K, ...) — stacked per-device gradients.
+      fresh_w: (K,) weights of fresh contributors (0 elsewhere).
+      g_prev: unstacked pytree — the group's previous blended gradient.
+      stale_w: (K,) γ^s weights of stale contributors (0 elsewhere).
+    """
+    fw = jnp.asarray(fresh_w, jnp.float32)
+    sw_total = jnp.sum(jnp.asarray(stale_w, jnp.float32))
+    denom = jnp.maximum(jnp.sum(fw) + sw_total, 1e-12)
+
+    def blend(gleaf, pleaf):
+        wb = fw.reshape((-1,) + (1,) * (gleaf.ndim - 1))
+        s = jnp.sum(gleaf.astype(jnp.float32) * wb, axis=0)
+        return ((s + sw_total * pleaf.astype(jnp.float32))
+                / denom).astype(pleaf.dtype)
+
+    return jax.tree.map(blend, grads, g_prev)
+
+
+# ---------------------------------------------------------------------------
 # Distributed (collective) forms — used inside shard_map on the mesh.
 # ---------------------------------------------------------------------------
 

@@ -1,6 +1,8 @@
 from . import femnist, lm_data, partition, streaming  # noqa: F401
 from .partition import Partition, PartitionConfig, make_partition  # noqa: F401
 from .streaming import (  # noqa: F401
+    AVAILABILITY_SCHEDULES,
+    AvailabilityConfig,
     DRIFT_SCHEDULES,
     ClientPool,
     DeviceBackedStreams,
@@ -9,6 +11,7 @@ from .streaming import (  # noqa: F401
     DriftConfig,
     FactoryStreams,
     HostClientPool,
+    make_availability_fn,
     make_client_pool,
     make_device_sampler,
     make_drift_fn,

@@ -242,6 +242,139 @@ def make_drift_fn(drift: DriftConfig | None, seed: int, num_classes: int,
 
 
 # ---------------------------------------------------------------------------
+# Availability / straggler schedules (DESIGN.md §14).
+#
+# Systems heterogeneity is modeled exactly like data drift above: a pure
+# function of (flat device id, internal-iteration index t) — no mutable host
+# state, so every engine (host loop, fused scan, every shard_map shard)
+# sees one consistent availability trace and replaying any t reproduces it.
+# The schedule returns BOTH an up/down mask and a latency draw; a device
+# whose latency exceeds ``deadline`` misses the iteration (straggler
+# semantics), so the effective mask already folds the latency budget in.
+# ---------------------------------------------------------------------------
+
+AVAILABILITY_SCHEDULES = ("always", "bernoulli", "markov", "straggler_tail")
+
+
+@dataclasses.dataclass(frozen=True)
+class AvailabilityConfig:
+    """Parameterized per-device availability / latency (DESIGN.md §14.1).
+
+    schedule:
+      * ``always``        — every device up, unit latency (the historical
+        behavior; callers usually pass ``avail_fn=None`` instead, which is
+        the exact pre-availability code path).
+      * ``bernoulli``     — each device is up with probability ``up_prob``,
+        i.i.d. per (device, iteration): fast memoryless flicker.
+      * ``markov``        — on/off churn with persistence: per-device
+        epochs of ``dwell`` iterations (randomly phase-shifted per device so
+        transitions never align globally); the device is up for a whole
+        epoch with probability ``up_prob``. A pure-in-t block-renewal
+        stand-in for a two-state Markov chain with mean sojourn ``dwell``
+        and stationary up-probability ``up_prob``.
+      * ``straggler_tail``— every device is up, but a deterministic
+        ``straggler_frac`` tail of devices (hashed from the seed) runs
+        ``slow_factor``× slower; draws above ``deadline`` miss the
+        iteration. The tail membership is fixed — the paper's systems
+        heterogeneity where the same weak devices straggle every round.
+
+    Every schedule is pure in (t, device id, seed); latency draws are
+    uniform in [0.5, 1.5) (× ``slow_factor`` for tail devices).
+    """
+    schedule: str = "always"
+    up_prob: float = 0.9       # bernoulli / markov stationary up-probability
+    dwell: int = 8             # markov: iterations per on/off epoch
+    straggler_frac: float = 0.15  # straggler_tail: fraction of slow devices
+    slow_factor: float = 4.0   # straggler_tail: latency multiplier
+    deadline: float = 3.0      # latency budget; draws above it are missed
+
+    def __post_init__(self):
+        if self.schedule not in AVAILABILITY_SCHEDULES:
+            raise ValueError(
+                f"unknown availability schedule: {self.schedule!r} "
+                f"(expected one of {AVAILABILITY_SCHEDULES})")
+        if not 0.0 < self.up_prob <= 1.0:
+            raise ValueError(f"up_prob must be in (0, 1], got {self.up_prob}")
+        if self.dwell < 1:
+            raise ValueError(f"dwell must be >= 1, got {self.dwell}")
+        if not 0.0 <= self.straggler_frac <= 1.0:
+            raise ValueError("straggler_frac must be a probability in "
+                             f"[0, 1], got {self.straggler_frac}")
+        if self.slow_factor < 1.0:
+            raise ValueError(f"slow_factor must be >= 1, "
+                             f"got {self.slow_factor}")
+        if self.deadline <= 0.0:
+            raise ValueError(f"deadline must be > 0, got {self.deadline}")
+
+
+def make_availability_fn(avail: AvailabilityConfig | None, seed: int,
+                         num_devices: int):
+    """Build ``avail_fn(t, ids) -> (mask, latency)`` for one schedule.
+
+    ``ids`` is a (D,) vector of flat device ids (gid·K + k, all <
+    ``num_devices``), ``t`` the traced iteration index. Returns the (D,)
+    float32 effective up-mask (0/1 — latency deadline already applied) and
+    the (D,) latency draws. Pure and jittable; t-invariant per-device
+    tables (markov phases, the straggler tail) are precomputed once over
+    ``num_devices`` at build time, like drift's ``step_shift`` offsets.
+    """
+    if avail is None or avail.schedule == "always":
+        return lambda t, ids: (jnp.ones(ids.shape, jnp.float32),
+                               jnp.ones(ids.shape, jnp.float32))
+    base_key = jax.random.fold_in(jax.random.PRNGKey(seed), 505)
+    k_lat = jax.random.fold_in(base_key, 9)
+    all_ids = jnp.arange(num_devices, dtype=jnp.int32)
+
+    def base_latency(t, ids):
+        def per_dev(i):
+            kd = jax.random.fold_in(jax.random.fold_in(k_lat, i), t)
+            return jax.random.uniform(kd, (), minval=0.5, maxval=1.5)
+        return jax.vmap(per_dev)(ids)
+
+    if avail.schedule == "bernoulli":
+        k_b = jax.random.fold_in(base_key, 1)
+
+        def bernoulli(t, ids):
+            def per_dev(i):
+                kd = jax.random.fold_in(jax.random.fold_in(k_b, i), t)
+                return jax.random.bernoulli(kd, avail.up_prob)
+            up = jax.vmap(per_dev)(ids).astype(jnp.float32)
+            lat = base_latency(t, ids)
+            return up * (lat <= avail.deadline), lat
+
+        return bernoulli
+
+    if avail.schedule == "markov":
+        k_m = jax.random.fold_in(base_key, 2)
+        phase = jax.vmap(lambda i: jax.random.randint(
+            jax.random.fold_in(jax.random.fold_in(base_key, 3), i),
+            (), 0, avail.dwell))(all_ids)
+
+        def markov(t, ids):
+            e = (t + phase[ids]) // avail.dwell     # per-device epoch index
+            def per_dev(i, ei):
+                kd = jax.random.fold_in(jax.random.fold_in(k_m, i), ei)
+                return jax.random.bernoulli(kd, avail.up_prob)
+            up = jax.vmap(per_dev)(ids, e).astype(jnp.float32)
+            lat = base_latency(t, ids)
+            return up * (lat <= avail.deadline), lat
+
+        return markov
+
+    # straggler_tail: fixed hashed tail of slow devices, always nominally up
+    tail = jax.vmap(lambda i: jax.random.bernoulli(
+        jax.random.fold_in(jax.random.fold_in(base_key, 4), i),
+        avail.straggler_frac))(all_ids)
+
+    def straggler_tail(t, ids):
+        lat = base_latency(t, ids) * jnp.where(tail[ids], avail.slow_factor,
+                                               1.0)
+        return (lat <= avail.deadline).astype(jnp.float32), lat
+
+    return straggler_tail
+
+
+# ---------------------------------------------------------------------------
 # Device-resident streams (DESIGN.md §7).
 #
 # The scan-fused engine must never leave the accelerator mid-round, so the

@@ -25,6 +25,14 @@ GBP-CS rebuild cadence in internal iterations (1 = every iteration,
 
   PYTHONPATH=src python -m repro.launch.train --engine fused \
       --drift step_shift --drift-t0 40 --reselect-every 10
+
+Availability & stragglers (DESIGN.md §14): ``--avail`` injects a per-device
+up/down + latency schedule; ``--sync bounded_async`` keeps missed committee
+members at γ^staleness weight instead of dropping them:
+
+  PYTHONPATH=src python -m repro.launch.train --engine fused \
+      --avail markov --avail-up-prob 0.6 --sync bounded_async \
+      --reselect-every 10
 """
 from __future__ import annotations
 
@@ -39,10 +47,11 @@ import jax
 from repro import checkpoint as ckpt_lib
 from repro.configs import femnist_cnn
 from repro.core import baselines, fedgs
-from repro.data import (DRIFT_SCHEDULES, DeviceBackedStreams, DeviceStream,
+from repro.data import (AVAILABILITY_SCHEDULES, AvailabilityConfig,
+                        DRIFT_SCHEDULES, DeviceBackedStreams, DeviceStream,
                         DriftConfig, FactoryStreams, HostClientPool,
-                        PartitionConfig, femnist, make_client_pool,
-                        make_device_sampler, make_partition)
+                        PartitionConfig, femnist, make_availability_fn,
+                        make_client_pool, make_device_sampler, make_partition)
 from repro.launch.mesh import make_group_mesh
 from repro.models import cnn
 
@@ -100,6 +109,33 @@ def main() -> None:
                     help="GBP-CS rebuild cadence in internal iterations "
                          "(1 = every iteration, N = every N, 0 = static "
                          "super nodes; fedgs only, DESIGN.md §13)")
+    ap.add_argument("--avail", choices=AVAILABILITY_SCHEDULES,
+                    default="always",
+                    help="device availability / straggler schedule "
+                         "(DESIGN.md §14; fedgs only)")
+    ap.add_argument("--avail-up-prob", type=float, default=0.9,
+                    help="bernoulli/markov: stationary up-probability")
+    ap.add_argument("--avail-dwell", type=int, default=8,
+                    help="markov: internal iterations per on/off epoch")
+    ap.add_argument("--avail-straggler-frac", type=float, default=0.15,
+                    help="straggler_tail: fraction of slow devices")
+    ap.add_argument("--avail-slow-factor", type=float, default=4.0,
+                    help="straggler_tail: latency multiplier of the tail")
+    ap.add_argument("--avail-deadline", type=float, default=3.0,
+                    help="latency budget; draws above it miss the iteration")
+    ap.add_argument("--sync", choices=("sync", "bounded_async"),
+                    default="sync",
+                    help="missed committee members: drop (sync, with "
+                         "churn-triggered reselection) or keep at "
+                         "gamma^staleness weight (bounded_async)")
+    ap.add_argument("--gamma", type=float, default=0.5,
+                    help="bounded_async staleness decay γ")
+    ap.add_argument("--max-staleness", type=int, default=4,
+                    help="bounded_async staleness cap")
+    ap.add_argument("--avail-selection", choices=("aware", "blind"),
+                    default="aware",
+                    help="whether GBP-CS sees the up-mask (aware) or "
+                         "ignores it (blind — the ablation baseline)")
     ap.add_argument("--init", choices=("mpinv", "zero", "random"),
                     default="mpinv")
     ap.add_argument("--alpha", type=float, default=0.3, help="Dirichlet skew")
@@ -131,6 +167,11 @@ def main() -> None:
         if not math.isnan(rec.group_discrepancy):
             msg += (f" | disc {rec.group_discrepancy:.4f}"
                     f" | resel {rec.reselections:.0f}")
+        if not math.isnan(rec.participation):
+            msg += f" | part {rec.participation:.2f}"
+        if not math.isnan(rec.staleness_mean):
+            msg += (f" | stale {rec.staleness_mean:.2f}"
+                    f"/{rec.staleness_max:.0f}")
         if rec.test_accuracy is not None:
             msg += (f" | test acc {rec.test_accuracy:.4f} "
                     f"loss {rec.test_loss:.4f}")
@@ -140,6 +181,14 @@ def main() -> None:
     drift = None if args.drift == "static" else DriftConfig(
         schedule=args.drift, t0=args.drift_t0, period=args.drift_period,
         alpha=args.drift_alpha, churn_rate=args.drift_churn)
+    avail_fn = None if args.avail == "always" else make_availability_fn(
+        AvailabilityConfig(
+            schedule=args.avail, up_prob=args.avail_up_prob,
+            dwell=args.avail_dwell,
+            straggler_frac=args.avail_straggler_frac,
+            slow_factor=args.avail_slow_factor,
+            deadline=args.avail_deadline),
+        args.seed, args.groups * args.devices_per_group)
 
     if args.strategy == "fedgs":
         fcfg = fedgs.FedGSConfig(
@@ -149,7 +198,9 @@ def main() -> None:
             batch_size=args.batch_size, selection=args.selection,
             init=args.init, seed=args.seed, train_step=args.train_step,
             kernel_backend=args.kernel_backend,
-            reselect_every=args.reselect_every)
+            reselect_every=args.reselect_every, sync=args.sync,
+            gamma=args.gamma, max_staleness=args.max_staleness,
+            avail_selection=args.avail_selection)
         if args.engine == "host":
             if drift is None:
                 streams = FactoryStreams(part, batch_size=args.batch_size,
@@ -164,7 +215,8 @@ def main() -> None:
                     drift=drift))
             final, _ = fedgs.run_fedgs(
                 params, cnn.loss_fn, streams, part.p_real, fcfg,
-                eval_fn=eval_fn, eval_every=args.eval_every, log_fn=log_fn)
+                avail_fn=avail_fn, eval_fn=eval_fn,
+                eval_every=args.eval_every, log_fn=log_fn)
         else:
             sampler = make_device_sampler(DeviceStream.from_partition(
                 part, batch_size=args.batch_size, seed=args.seed),
@@ -176,12 +228,13 @@ def main() -> None:
             # bodies would blow up compile time (DESIGN.md §12.2)
             final, _ = fedgs.run_fedgs_fused(
                 params, cnn.loss_fn, sampler, part.p_real, fcfg, mesh=mesh,
-                eval_fn=eval_fn, eval_every=args.eval_every, log_fn=log_fn,
+                avail_fn=avail_fn, eval_fn=eval_fn,
+                eval_every=args.eval_every, log_fn=log_fn,
                 chunk=args.eval_chunk,
                 unroll=0 if args.eval_chunk == 1 else 1)
     else:
         for flag in ("train_step", "kernel_backend", "selection", "init",
-                     "reselect_every"):
+                     "reselect_every", "avail", "sync"):
             if getattr(args, flag) != ap.get_default(flag):
                 print(f"warning: --{flag.replace('_', '-')} applies only to "
                       f"--strategy fedgs; ignored for {args.strategy}",

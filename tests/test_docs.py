@@ -32,8 +32,9 @@ def source_refs():
 
 def test_design_has_sections():
     secs = design_sections()
-    assert len(secs) >= 13, f"suspiciously few DESIGN.md headings: {secs}"
+    assert len(secs) >= 14, f"suspiciously few DESIGN.md headings: {secs}"
     assert "13" in secs, "DESIGN.md §13 (dynamic environments) missing"
+    assert "14" in secs, "DESIGN.md §14 (device availability) missing"
 
 
 def test_all_design_references_resolve():
@@ -48,7 +49,8 @@ def test_readme_documents_dynamic_environments():
     """README's dynamic-environment quickstart must mention the flags the
     CLI actually exposes."""
     readme = (REPO / "README.md").read_text()
-    for flag in ("--drift", "--reselect-every"):
+    for flag in ("--drift", "--reselect-every", "--avail", "--sync",
+                 "--avail-selection", "--max-staleness"):
         assert flag in readme, f"README missing {flag} quickstart"
     layout = readme[readme.index("## Repository layout"):]
     for mod in ("engine.py", "dispatch.py", "streaming.py", "fedgs.py"):

@@ -189,9 +189,11 @@ def test_round_record_typed_log():
     assert d["round"] == 3 and d["strategy"] == "fedavg"
     assert set(d) == {"round", "loss", "divergence", "test_loss",
                       "test_accuracy", "strategy", "group_discrepancy",
-                      "selection_distance", "reselections"}
+                      "selection_distance", "reselections", "participation",
+                      "staleness_mean", "staleness_max", "dark_selected"}
     # NaN telemetry slots (strategies without them) -> None, JSON-safe
     assert d["group_discrepancy"] is None and d["reselections"] is None
+    assert d["participation"] is None and d["staleness_max"] is None
     # records_from_metrics: NaN eval slots -> None, telemetry forwarded
     recs = engine.records_from_metrics(
         10, {"loss": jnp.asarray([1.0, 2.0]),
