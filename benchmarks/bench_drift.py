@@ -55,6 +55,7 @@ from repro.data import (DeviceStream, DriftConfig, PartitionConfig, femnist,
                         make_client_pool, make_device_sampler, make_partition)
 from repro.models import cnn
 
+from . import common
 from .common import emit, min_delta_rate as _min_delta_rate
 
 # reduced-scale protocol. t0/period land early so most of the run happens
@@ -159,7 +160,8 @@ def run(quick: bool = True, json_path: str = "BENCH_drift.json") -> None:
     tx, ty = femnist.make_test_set(n_per_class=p["test_n"])
     eval_fn = cnn.make_eval_fn(tx, ty, apply_fn=_PROBE.apply)
     out = {"scale": "quick" if quick else "full", "config": p,
-           "backend": jax.default_backend(), "model": "linear_probe",
+           "backend": jax.default_backend(), "env": common.env_info(),
+           "model": "linear_probe",
            "gate_seeds": list(GATE_SEEDS), "schedules": {}}
 
     def part_for(seed: int):

@@ -48,6 +48,7 @@ from repro.data import (DeviceBackedStreams, DeviceStream, FactoryStreams,
 from repro.launch import hlo_analysis
 from repro.models import cnn
 
+from . import common
 from .common import emit
 
 QUICK = dict(m=4, k=12, l=4, l_rnd=1, t=10, rounds=4, n=16,
@@ -197,7 +198,8 @@ def buffer_check(p: dict, seed: int = 0) -> dict:
 def run(quick: bool = True, json_path: str = "BENCH_fedgs_fused.json") -> None:
     p = QUICK if quick else FULL
     out = {"scale": "quick" if quick else "full", "config": p,
-           "backend": jax.default_backend(), "matrix": {}}
+           "backend": jax.default_backend(), "env": common.env_info(),
+           "matrix": {}}
     for model in ("linear", "cnn"):
         r = measure_engines(p, model=model)
         out[model] = r

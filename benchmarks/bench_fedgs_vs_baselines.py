@@ -44,6 +44,7 @@ from repro.data import (DeviceStream, FactoryStreams, PartitionConfig,
                         make_partition)
 from repro.models import cnn
 
+from . import common
 from .common import emit, min_delta_rate as _min_delta_rate
 
 # reduced-scale protocol (quick / full); chunk = rounds per host dispatch.
@@ -189,7 +190,8 @@ def run(quick: bool = True, json_path: str = "BENCH_table2.json") -> None:
     pe_eval = lambda pe: eval_fn(pe[0])           # baselines: (params, extras)
 
     out = {"scale": "quick" if quick else "full", "config": p,
-           "backend": jax.default_backend(), "strategies": {}}
+           "backend": jax.default_backend(), "env": common.env_info(),
+           "strategies": {}}
 
     # ---- FEDGS (ours) + random-selection ablation, chunked fused engine ---
     for sel in ("gbp_cs", "random"):

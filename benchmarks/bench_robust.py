@@ -1,0 +1,244 @@
+"""Corruption-robustness benchmark (DESIGN.md §15): faulty-device survival.
+
+Industrial edge devices emit garbage before they die — sensor glitches,
+overflowed fixed-point accumulators, bit-flipped DMA transfers — and one
+NaN gradient poisons a plain mean irreversibly. This suite makes the
+robustness subsystem's claim executable: under a seeded gradient-corruption
+schedule (``data.streaming.CorruptionConfig``) it runs FEDGS legs over the
+*same* fault trace on the unified fused engine:
+
+* ``fedgs_robust`` — the robust protocol: ``robust_agg='clip_norm'`` caps
+  each member's gradient norm at Eq. 4 internal sync, repeat offenders are
+  quarantined out of GBP-CS (``quarantine_limit``), and the NaN guard
+  rolls back any iteration whose update still goes non-finite.
+* ``fedgs_mean`` — the ablation: the plain weighted mean over the same
+  fault trace (guard still on, so NaN bursts roll back instead of
+  destroying the run — the scale faults are what the mean cannot absorb).
+* ``fedgs_trimmed`` / ``fedgs_median`` — informational: the order-statistics
+  aggregators over the same trace.
+* ``fedgs_clean`` — informational: no corruption at all, the ceiling.
+* ``fedgs_nan_mean`` — the guard leg: a pure ``nan_burst`` trace under the
+  plain mean; gated on ≥1 rollback firing AND the final parameters staying
+  finite (the guard is what stands between one NaN and a dead run).
+
+Legs run the **linear probe** at the availability bench's reduced scale;
+as there, ``final_test_accuracy`` is the mean over the LAST THREE per-round
+evals and the partition uses α=0.1 (strongly non-i.i.d.).
+
+Writes ``BENCH_robust.json``: per-leg final accuracy, corruption/clip/
+rollback telemetry, and fused rounds/sec. The headline invariant — gated by
+``check_fused_regression.py --robust`` — is that under the mixed
+``scale+nan_burst`` fault trace the robust run beats the plain-mean run on
+final accuracy, as the MEAN over ``GATE_SEEDS`` environment seeds
+(partition + stream + fault trace + PRNG seeded together): a single pinned
+trace can corrupt only unseated devices, but the robustness claim is
+statistical — and, being fully seeded, exactly reproducible in CI.
+
+  PYTHONPATH=src python -m benchmarks.run --only robust
+  PYTHONPATH=src python -m benchmarks.bench_robust --full
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines, engine, fedgs
+from repro.data import (CorruptionConfig, DeviceStream, PartitionConfig,
+                        femnist, make_corruption_fn, make_device_sampler,
+                        make_partition)
+from repro.models import cnn
+
+from . import common
+from .common import emit, min_delta_rate as _min_delta_rate
+
+# reduced-scale protocol: the availability bench's QUICK geometry but at
+# lr=1.0 — the probe must actually LEARN for destruction to be observable
+# (at lr=0.1 it sits at chance for 14 rounds and a blown-up mean is
+# indistinguishable from a clean one; at lr=1.0 the clean ceiling is
+# ~0.53). The fault trace corrupts frac of ALL devices; with prob=0.7 a
+# seated faulty device fires most iterations, and scale=1000 blows its
+# gradient up ~3 orders of magnitude past honest probe-gradient norms
+# (~1-2) — a mild scale (say 25x) merely acts as a learning-rate boost
+# and can HELP the mean; 1000x overshoots irrecoverably. clip=5 separates
+# faults from honest members without touching the latter.
+QUICK = dict(m=4, k=24, l=8, l_rnd=2, t=8, rounds=14, n=16, lr=1.0,
+             chunk=7, test_n=20, alpha=0.1, reselect_every=4,
+             frac=0.25, prob=0.7, scale=1000.0, clip=5.0, trim=1,
+             quarantine=2)
+FULL = dict(m=10, k=35, l=10, l_rnd=2, t=25, rounds=16, n=32, lr=1.0,
+            chunk=8, test_n=40, alpha=0.1, reselect_every=5,
+            frac=0.25, prob=0.7, scale=1000.0, clip=5.0, trim=1,
+            quarantine=3)
+
+GATE_SEEDS = (0, 1, 2, 3, 4)   # environment seeds averaged for the gate
+
+_PROBE = baselines.linear_probe_model()
+
+
+def _probe_loss(params, batch):
+    x, y = batch
+    return baselines.softmax_xent(_PROBE.apply(params, x), y)
+
+
+def _corrupt_cfg(p: dict, mode: str) -> CorruptionConfig:
+    return CorruptionConfig(mode=mode, frac=p["frac"], prob=p["prob"],
+                            scale=p["scale"])
+
+
+def _tail_accuracy(logs: list[engine.RoundRecord], k: int = 3) -> float:
+    accs = [l.test_accuracy for l in logs if l.test_accuracy is not None]
+    tail = accs[-k:]
+    return sum(tail) / len(tail)
+
+
+def _mean_metric(logs: list[engine.RoundRecord], name: str) -> float:
+    vals = [getattr(l, name) for l in logs]
+    vals = [v for v in vals if not math.isnan(v)]
+    return sum(vals) / len(vals) if vals else float("nan")
+
+
+def run_leg(p: dict, part, eval_fn, corrupt: CorruptionConfig | None,
+            robust_agg: str, seed: int = 0,
+            quarantine_limit: int | None = None) -> dict:
+    """One FEDGS run over the corrupted environment on the fused engine."""
+    sampler = make_device_sampler(
+        DeviceStream.from_partition(part, batch_size=p["n"], seed=seed + 1))
+    corrupt_fn = (None if corrupt is None else
+                  make_corruption_fn(corrupt, seed, p["m"] * p["k"]))
+    params = _PROBE.init(jax.random.PRNGKey(seed))
+    # scan_unroll=1: same rationale as bench_availability — the probe is
+    # engine-bound and each leg pays its own compile
+    cfg = fedgs.FedGSConfig(
+        num_groups=p["m"], devices_per_group=p["k"], num_selected=p["l"],
+        num_presampled=p["l_rnd"], iters_per_round=p["t"],
+        rounds=p["rounds"], lr=p["lr"], batch_size=p["n"],
+        reselect_every=p["reselect_every"], seed=seed, scan_unroll=1,
+        robust_agg=robust_agg, robust_clip=p["clip"], robust_trim=p["trim"],
+        quarantine_limit=(p["quarantine"] if quarantine_limit is None
+                          else quarantine_limit))
+    exp = fedgs.make_fedgs_experiment(params, _probe_loss, sampler,
+                                      part.p_real, cfg, eval_fn=eval_fn,
+                                      unroll=1, corrupt_fn=corrupt_fn)
+    stamps: list[float] = []
+    state, logs = engine.run_experiment(
+        exp, cfg.rounds, eval_every=1, chunk=p["chunk"],
+        on_chunk=lambda r0, n: stamps.append(time.perf_counter()))
+    final = exp.params_fn(state)
+    out = {
+        "final_test_accuracy": round(_tail_accuracy(logs), 4),
+        "final_test_loss": round(logs[-1].test_loss, 4),
+        "final_params_finite": bool(all(
+            bool(jnp.all(jnp.isfinite(leaf)))
+            for leaf in jax.tree.leaves(final))),
+        "fused_rounds_per_sec": round(_min_delta_rate(stamps, p["chunk"]), 3),
+    }
+    if corrupt_fn is not None:
+        out["corrupted_selected"] = int(sum(l.corrupted_selected
+                                            for l in logs))
+        out["clipped_fraction"] = round(
+            _mean_metric(logs, "clipped_fraction"), 4)
+        out["rollbacks"] = int(sum(l.rollbacks for l in logs))
+        out["agg_residual"] = round(_mean_metric(logs, "agg_residual"), 4)
+    return out
+
+
+def _mean_legs(legs: list[dict]) -> dict:
+    out = {}
+    for k in legs[0]:
+        if k == "final_params_finite":
+            out[k] = all(leg[k] for leg in legs)
+        else:
+            out[k] = round(sum(leg[k] for leg in legs) / len(legs), 4)
+    return out
+
+
+def run(quick: bool = True, json_path: str = "BENCH_robust.json") -> None:
+    p = QUICK if quick else FULL
+    tx, ty = femnist.make_test_set(n_per_class=p["test_n"])
+    eval_fn = cnn.make_eval_fn(tx, ty, apply_fn=_PROBE.apply)
+    out = {"scale": "quick" if quick else "full", "config": p,
+           "backend": jax.default_backend(), "env": common.env_info(),
+           "model": "linear_probe", "gate_seeds": list(GATE_SEEDS),
+           "mode": "scale+nan_burst"}
+
+    def part_for(seed: int):
+        return make_partition(PartitionConfig(
+            num_factories=p["m"], devices_per_factory=p["k"],
+            alpha=p["alpha"], seed=seed))
+
+    # the gated legs: robust vs plain mean as means over the SAME
+    # GATE_SEEDS environment population (each seed couples partition +
+    # stream + fault trace + PRNG, so both legs at a seed face the same
+    # corrupted devices firing at the same iterations)
+    mixed = _corrupt_cfg(p, "scale+nan_burst")
+    t0 = time.time()
+    per_seed = []
+    for seed in GATE_SEEDS:
+        part = part_for(seed)
+        a = run_leg(p, part, eval_fn, mixed, "clip_norm", seed=seed)
+        b = run_leg(p, part, eval_fn, mixed, "mean", seed=seed,
+                    quarantine_limit=0)
+        per_seed.append(dict(seed=seed, fedgs_robust=a, fedgs_mean=b,
+                             gap=round(a["final_test_accuracy"]
+                                       - b["final_test_accuracy"], 4)))
+    legs = {
+        "fedgs_robust": _mean_legs([d["fedgs_robust"] for d in per_seed]),
+        "fedgs_mean": _mean_legs([d["fedgs_mean"] for d in per_seed]),
+    }
+    # informational single-seed legs: the order-statistics aggregators over
+    # the same trace, and the corruption-free ceiling
+    part0 = part_for(0)
+    legs["fedgs_trimmed"] = run_leg(p, part0, eval_fn, mixed, "trimmed_mean")
+    legs["fedgs_median"] = run_leg(p, part0, eval_fn, mixed, "coord_median")
+    legs["fedgs_clean"] = run_leg(p, part0, eval_fn, None, "mean")
+    # the guard leg: pure NaN bursts under the plain mean — without the
+    # rollback one burst would zero the accuracy and NaN the params
+    legs["fedgs_nan_mean"] = run_leg(p, part0, eval_fn,
+                                     _corrupt_cfg(p, "nan_burst"), "mean",
+                                     quarantine_limit=0)
+
+    gap = (legs["fedgs_robust"]["final_test_accuracy"]
+           - legs["fedgs_mean"]["final_test_accuracy"])
+    out["legs"] = legs
+    out["robust_minus_mean_acc"] = round(gap, 4)
+    out["per_seed"] = per_seed
+    out["rounds"] = p["rounds"]
+    emit("robust.corruption", (time.time() - t0) * 1e6,
+         ";".join(f"{k}_acc={v['final_test_accuracy']:.4f}"
+                  for k, v in legs.items())
+         + f";robust_minus_mean={gap:+.4f}")
+
+    # headline invariants (gated by check_fused_regression.py --robust):
+    # robustness must pay under the mixed fault trace, in the mean over the
+    # gate-seed environments; and the NaN guard must fire AND keep the
+    # final parameters finite on the pure-burst leg
+    out["invariant_corrupt_robust_beats_mean"] = bool(
+        legs["fedgs_robust"]["final_test_accuracy"]
+        > legs["fedgs_mean"]["final_test_accuracy"])
+    out["invariant_nan_rollback_recovers"] = bool(
+        legs["fedgs_nan_mean"]["rollbacks"] >= 1
+        and legs["fedgs_nan_mean"]["final_params_finite"])
+    emit("robust.invariant", 0.0,
+         f"corrupt_robust_beats_mean="
+         f"{out['invariant_corrupt_robust_beats_mean']}"
+         f";nan_rollback_recovers={out['invariant_nan_rollback_recovers']}"
+         f";mean_gap={gap:+.4f}"
+         f";rollbacks={legs['fedgs_nan_mean']['rollbacks']}")
+
+    with open(json_path, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="the larger reduced scale (slow)")
+    ap.add_argument("--json", default="BENCH_robust.json")
+    args = ap.parse_args()
+    run(quick=not args.full, json_path=args.json)

@@ -5,14 +5,15 @@ committed numbers.
   python benchmarks/check_fused_regression.py --table2 BASELINE.json NEW.json
   python benchmarks/check_fused_regression.py --drift BASELINE.json NEW.json
   python benchmarks/check_fused_regression.py --availability B.json NEW.json
+  python benchmarks/check_fused_regression.py --robust B.json NEW.json
 
-A missing BASELINE file is tolerated in ``--drift`` and ``--availability``
-modes only (first-run tolerance: those gates check the NEW json's invariant
-and report "no committed baseline", so a suite can be introduced before its
-JSON lands on the branch). The fused/table2 modes keep failing loudly on a
-missing baseline — their committed JSONs exist, so a missing file there
-means a broken path, and exiting 0 would silently disarm the regression
-gates.
+A missing BASELINE file is tolerated in ``--drift``, ``--availability`` and
+``--robust`` modes only (first-run tolerance: those gates check the NEW
+json's invariant and report "no committed baseline", so a suite can be
+introduced before its JSON lands on the branch). The fused/table2 modes
+keep failing loudly on a missing baseline — their committed JSONs exist, so
+a missing file there means a broken path, and exiting 0 would silently
+disarm the regression gates.
 
 ``--drift`` gates ``BENCH_drift.json`` on the *invariant*, not throughput:
 under the step-shift schedule FEDGS with periodic reselection must strictly
@@ -26,6 +27,14 @@ Markov churn the availability-aware protocol (aware GBP-CS selection +
 staleness-bounded async sync) must strictly beat the availability-blind
 ablation on mean final test accuracy over the gate seeds (DESIGN.md §14).
 Participation/staleness telemetry and throughput are reported only.
+
+``--robust`` gates ``BENCH_robust.json`` on TWO invariants (DESIGN.md §15):
+under the mixed ``scale+nan_burst`` fault trace the robust protocol
+(clip-norm aggregation + quarantine + NaN guard) must strictly beat the
+plain-mean ablation on mean final test accuracy over the gate seeds, and on
+the pure NaN-burst leg the guard must have fired at least once while the
+final parameters stayed finite. Corruption/clip/rollback telemetry and
+throughput are reported only.
 
 Default mode compares ``BENCH_fedgs_fused.json``'s ``fused_iters_per_sec``
 (the default engine config: ``train_step='grad_avg'``,
@@ -159,6 +168,44 @@ def check_availability(baseline: dict | None, new: dict) -> int:
     return 0
 
 
+def check_robust(baseline: dict | None, new: dict) -> int:
+    for leg, rec in new["legs"].items():
+        row = f"{leg}: acc={rec['final_test_accuracy']}"
+        if "corrupted_selected" in rec:
+            row += (f" corrupted={rec['corrupted_selected']}"
+                    f" clipped={rec['clipped_fraction']}"
+                    f" rollbacks={rec['rollbacks']}")
+        old = (baseline or {}).get("legs", {}).get(leg)
+        if old:
+            row += f" (committed acc {old['final_test_accuracy']})"
+        print(row)
+    rc = 0
+    if not new.get("invariant_corrupt_robust_beats_mean", False):
+        legs = new["legs"]
+        print("FAIL: under the scale+nan_burst fault trace, robust FEDGS "
+              f"({legs['fedgs_robust']['final_test_accuracy']}) does not "
+              "strictly beat the plain-mean ablation "
+              f"({legs['fedgs_mean']['final_test_accuracy']}) — the "
+              "corruption-robustness invariant (DESIGN.md §15) is broken",
+              file=sys.stderr)
+        rc = 1
+    else:
+        print("OK: corrupt robust > mean (robustness invariant holds, gap "
+              f"{new.get('robust_minus_mean_acc')})")
+    if not new.get("invariant_nan_rollback_recovers", False):
+        nm = new["legs"]["fedgs_nan_mean"]
+        print("FAIL: the NaN-burst leg recorded "
+              f"{nm.get('rollbacks')} rollbacks with final_params_finite="
+              f"{nm.get('final_params_finite')} — the guard must fire at "
+              "least once and keep the parameters finite (DESIGN.md §15.3)",
+              file=sys.stderr)
+        rc = 1
+    else:
+        print("OK: NaN guard fired and the final parameters stayed finite "
+              f"(rollbacks={new['legs']['fedgs_nan_mean']['rollbacks']})")
+    return rc
+
+
 def _load(path: str, *, required: bool) -> dict | None:
     try:
         with open(path) as f:
@@ -175,17 +222,22 @@ def main(argv: list[str]) -> int:
     table2 = "--table2" in argv
     drift = "--drift" in argv
     availability = "--availability" in argv
+    robust = "--robust" in argv
     paths = [a for a in argv
-             if a not in ("--table2", "--drift", "--availability")]
-    if len(paths) != 2 or (table2 + drift + availability) > 1:
+             if a not in ("--table2", "--drift", "--availability",
+                          "--robust")]
+    if len(paths) != 2 or (table2 + drift + availability + robust) > 1:
         print(__doc__, file=sys.stderr)
         return 2
-    baseline = _load(paths[0], required=not (drift or availability))
+    baseline = _load(paths[0],
+                     required=not (drift or availability or robust))
     new = _load(paths[1], required=True)
     if drift:
         return check_drift(baseline, new)
     if availability:
         return check_availability(baseline, new)
+    if robust:
+        return check_robust(baseline, new)
     return (check_table2 if table2 else check_fused)(baseline, new)
 
 

@@ -19,6 +19,20 @@ def min_delta_rate(stamps: list[float], per_delta: int) -> float:
     return per_delta / min(deltas) if deltas else 0.0
 
 
+def env_info() -> dict:
+    """Execution-environment stamp for every BENCH_*.json: jax version,
+    backend and device kind/count, so a regression diff can tell a real
+    slowdown from a run on different hardware or a jax upgrade."""
+    import jax
+    devs = jax.devices()
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": devs[0].device_kind if devs else "none",
+        "device_count": len(devs),
+    }
+
+
 def time_fn(fn: Callable, *, repeats: int = 5, warmup: int = 1) -> float:
     """Median wall time per call in microseconds."""
     for _ in range(warmup):

@@ -21,6 +21,7 @@ from . import (
     bench_hyperparams,
     bench_initializers,
     bench_kernels,
+    bench_robust,
     bench_roofline,
     bench_samplers,
     bench_time_model,
@@ -37,6 +38,7 @@ SUITES = {
     "fedgs_fused": bench_fedgs_fused.run,    # host loop vs scan-fused engine
     "drift": bench_drift.run,                # dynamic environments (§13)
     "availability": bench_availability.run,  # churn robustness (§14)
+    "robust": bench_robust.run,              # corruption robustness (§15)
 }
 
 

@@ -8,6 +8,7 @@ either plain jnp reductions or the repo's Pallas kernels:
 | internal average (Eq. 4) | `sync.weighted_average` | `kernels.agg_weighted.weighted_average_tree` |
 | external average (Eq. 5) | `sync.external_sync` | `kernels.agg_weighted.weighted_average_tree` (uniform) |
 | GBP-CS permutation step | `gbp_cs._default_step` (None) | `kernels.gbp_cs.ops.fused_step` |
+| robust Eq. 4 (DESIGN.md §15.2) | `sync.robust_aggregate` | `kernels.robust_agg.ops.robust_aggregate_tree` |
 
 The Pallas ops fall back to interpret mode on CPU automatically
 (`kernels.common.use_interpret`), so `'pallas'` is runnable — if slow —
@@ -16,6 +17,7 @@ default `'jnp'` path never touches `jax.experimental.pallas`.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Callable
 
 import jax
@@ -57,6 +59,26 @@ def external_avg_fn(backend: str) -> Callable[[PyTree], PyTree]:
 
         return mean_tree
     return sync.external_sync
+
+
+def robust_agg_fn(backend: str, method: str, *, clip: float = 10.0,
+                  trim: int = 1) -> Callable[[PyTree, jax.Array], PyTree]:
+    """Robust internal aggregation over a stacked member axis (Eq. 4,
+    DESIGN.md §15.2): ``fn(grads, weights) -> aggregate``. ``method='mean'``
+    returns the plain Eq. 4 weighted average — the same callable as
+    :func:`internal_avg_fn`, keeping the non-robust path bit-identical."""
+    sync.check_robust_agg(method)
+    if check_backend(backend) == "pallas":
+        if method == "mean":
+            from repro.kernels.agg_weighted import ops as agg_ops
+            return agg_ops.weighted_average_tree
+        from repro.kernels.robust_agg import ops as robust_ops
+        return functools.partial(robust_ops.robust_aggregate_tree,
+                                 method=method, clip=clip, trim=trim)
+    if method == "mean":
+        return sync.weighted_average
+    return functools.partial(sync.robust_aggregate, method=method,
+                             clip=clip, trim=trim)
 
 
 def gbp_step_fn(backend: str):

@@ -56,6 +56,15 @@ class RoundRecord(NamedTuple):
     up, ``dark_selected`` the round's count of committee-member-iteration
     pairs that missed, ``staleness_mean``/``staleness_max`` the
     mean/worst staleness of bounded-async stale contributors.
+    The robustness fields (DESIGN.md §15.5) are NaN unless corruption
+    injection or a robust aggregator is active: ``corrupted_selected`` is
+    the round's count of seated-member-iteration pairs whose gradient was
+    corrupted (injection ground truth), ``clipped_fraction`` the mean
+    fraction of seated members flagged as outliers by the observable signal
+    (non-finite or over-norm), ``rollbacks`` the count of group-iteration
+    pairs the NaN guard rolled back, and ``agg_residual`` the mean L2
+    distance between the robust aggregate and the finite-masked mean (how
+    much the robust aggregator actually changed the update).
     """
     round: int
     loss: float
@@ -70,6 +79,10 @@ class RoundRecord(NamedTuple):
     staleness_mean: float = _NAN
     staleness_max: float = _NAN
     dark_selected: float = _NAN
+    corrupted_selected: float = _NAN
+    clipped_fraction: float = _NAN
+    rollbacks: float = _NAN
+    agg_residual: float = _NAN
 
     def to_dict(self) -> dict:
         d = dict(self._asdict())
@@ -83,7 +96,8 @@ class RoundRecord(NamedTuple):
 # fields when an experiment's round_fn reports them (all NaN-defaulted)
 _OPTIONAL_METRICS = ("divergence", "group_discrepancy", "selection_distance",
                      "reselections", "participation", "staleness_mean",
-                     "staleness_max", "dark_selected")
+                     "staleness_max", "dark_selected", "corrupted_selected",
+                     "clipped_fraction", "rollbacks", "agg_residual")
 
 
 def records_from_metrics(r0: int, metrics: dict, *, strategy: str = ""

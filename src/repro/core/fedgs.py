@@ -82,6 +82,19 @@ class FedGSConfig:
     #                               availability (the ablation baseline; dark
     #                               picks are dropped or go stale at train
     #                               time, per ``sync``)
+    robust_agg: str = "mean"      # Eq. 4 internal aggregation (DESIGN.md
+    #                               §15.2): 'mean' (historical, bit-identical)
+    #                               | 'clip_norm' | 'trimmed_mean' |
+    #                               'coord_median'
+    robust_clip: float = 10.0     # clip_norm threshold; also the norm above
+    #                               which a member counts as an outlier for
+    #                               quarantine/telemetry
+    robust_trim: int = 1          # trimmed_mean: members trimmed per side
+    quarantine_limit: int = 3     # outlier flags before a device is barred
+    #                               from selection (DESIGN.md §15.4); 0 = off
+    nan_guard: bool = True        # per-iteration isfinite audit + rollback of
+    #                               poisoned group states when corruption is
+    #                               injected (DESIGN.md §15.3)
 
     def __post_init__(self):
         if self.train_step not in ("grad_avg", "model_avg"):
@@ -108,6 +121,20 @@ class FedGSConfig:
             raise ValueError(
                 f"unknown avail_selection: {self.avail_selection!r} "
                 "(expected 'aware' or 'blind')")
+        sync.check_robust_agg(self.robust_agg)
+        if self.robust_agg != "mean" and self.train_step == "model_avg":
+            raise ValueError(
+                "robust_agg aggregates the per-member gradient stack and "
+                "requires train_step='grad_avg' (model_avg averages models)")
+        if self.robust_clip <= 0:
+            raise ValueError(f"robust_clip must be > 0, "
+                             f"got {self.robust_clip}")
+        if self.robust_trim < 0:
+            raise ValueError(f"robust_trim must be >= 0, "
+                             f"got {self.robust_trim}")
+        if self.quarantine_limit < 0:
+            raise ValueError("quarantine_limit must be >= 0 (0 = off), got "
+                             f"{self.quarantine_limit}")
         dispatch.check_backend(self.kernel_backend)
 
     @property
@@ -306,6 +333,127 @@ def _avail_weights(mask: Array, avail: Array, staleness: Array,
                      stale_mean, stale_max)
 
 
+class RobustStep(NamedTuple):
+    """Per-group outputs of the corruption-exposed train step
+    (DESIGN.md §15); member axes follow the ``top_k`` gather order."""
+    hit: Array        # (L,) injected-corruption ground truth (telemetry)
+    flags: Array      # (L,) observable outliers: non-finite or over-norm
+    residual: Array   # () ‖robust aggregate − finite-masked mean‖₂
+
+
+def _robust_active(cfg: FedGSConfig, corrupt_fn) -> bool:
+    """Does this run need the materialized per-member gradient path?"""
+    return corrupt_fn is not None or cfg.robust_agg != "mean"
+
+
+def _per_group_train_robust(params_m: PyTree, batches_m: PyTree,
+                            loss_fn: LossFn, cfg: FedGSConfig,
+                            weights: Array, t: Array, dev_ids: Array,
+                            corrupt_fn, agg_fn,
+                            stale_sum: Array | None = None,
+                            g_prev: PyTree | None = None):
+    """Corruption-exposed Eq. (4) for one group (DESIGN.md §15).
+
+    Unlike the fused-backward ``grad_avg`` path, the L per-member gradients
+    are *materialized* (vmapped backward) — both the fault injection (a
+    corrupted device emits a corrupted *update*) and the robust aggregators
+    (order statistics over the member stack) need the (L, ...) stack. The
+    price is L·|θ| live gradient state per group, same as the pallas
+    ``grad_avg`` branch.
+
+    With ``stale_sum``/``g_prev`` the §14.3 bounded-async blend composes on
+    top: the robust fresh estimate ĝ carries the surviving fresh mass
+    W = Σ w·[finite] against the stale mass S, g = (W·ĝ + S·ḡ)/(W + S) —
+    at W = Σw (nothing corrupted) this is exactly the §14.3 formula.
+
+    Returns ``(params', mean loss, g_out, RobustStep)``; ``g_out`` is the
+    blended gradient (the next ḡ for bounded_async; ignored otherwise).
+    """
+    losses, grads = jax.vmap(
+        lambda b: sync.local_grads(params_m, b, loss_fn))(batches_m)
+    if corrupt_fn is not None:
+        grads, hit = corrupt_fn(grads, t, dev_ids)
+    else:
+        hit = jnp.zeros(weights.shape, jnp.float32)
+    finite = sync.member_finite(grads).astype(jnp.float32)
+    flags = sync.member_outlier_flags(grads, cfg.robust_clip)
+    g = agg_fn(grads, weights)
+    if cfg.robust_agg == "mean":
+        residual = jnp.float32(0.0)
+    else:
+        gm = sync.weighted_average(sync._sanitize(grads, finite > 0),
+                                   weights * finite)
+        residual = jnp.sqrt(sum(
+            jnp.sum((a.astype(jnp.float32) - b.astype(jnp.float32)) ** 2)
+            for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(gm))))
+    if stale_sum is not None:
+        w_fresh = jnp.sum(weights * finite)
+        denom = jnp.maximum(w_fresh + stale_sum, sync.EPS)
+        g = jax.tree.map(
+            lambda gf, gp: (w_fresh * gf.astype(jnp.float32)
+                            + stale_sum * gp.astype(jnp.float32)) / denom,
+            g, g_prev)
+        g_out = jax.tree.map(lambda gl, gp: gl.astype(gp.dtype), g, g_prev)
+    else:
+        g_out = g
+    return (sync.apply_sgd(params_m, g, cfg.lr), jnp.mean(losses), g_out,
+            RobustStep(hit=hit, flags=flags, residual=residual))
+
+
+def _group_finite(tree: PyTree) -> Array:
+    """(M,) bool — True where every leaf coordinate of the group is finite
+    (leaves carry a leading group axis)."""
+    ok = None
+    for leaf in jax.tree.leaves(tree):
+        f = jnp.all(jnp.isfinite(
+            leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)), axis=1)
+        ok = f if ok is None else ok & f
+    return ok
+
+
+def _where_groups(pred: Array, new: PyTree, old: PyTree) -> PyTree:
+    """Per-group select between two same-structure trees with a leading
+    group axis. ``jnp.where(True, new, old)`` returns ``new`` exactly, so
+    the all-finite case is bit-identical to no guard at all
+    (DESIGN.md §15.3)."""
+    return jax.tree.map(
+        lambda n, o: jnp.where(
+            pred.reshape((-1,) + (1,) * (n.ndim - 1)), n, o), new, old)
+
+
+def make_robust_train_step(loss_fn: LossFn, cfg: FedGSConfig, corrupt_fn, *,
+                           bounded: bool = False):
+    """Jitted robust train step for the two-phase host loop (DESIGN.md §15):
+    ``step(gp, batches, fresh_w, t, dev_ids)`` — or with ``bounded``,
+    ``step(gp, batches, fresh_w, stale_sum, g_prev, t, dev_ids)`` — vmapping
+    :func:`_per_group_train_robust` over groups, with ``t`` a traced scalar
+    so one compilation serves every iteration of the fault trace."""
+    agg_fn = dispatch.robust_agg_fn(cfg.kernel_backend, cfg.robust_agg,
+                                    clip=cfg.robust_clip,
+                                    trim=cfg.robust_trim)
+
+    if bounded:
+        @jax.jit
+        def step_async(group_params, batches, fresh_w, stale_sum, g_prev,
+                       t, dev_ids):
+            return jax.vmap(
+                lambda p, b, w, ss, gpv, di: _per_group_train_robust(
+                    p, b, loss_fn, cfg, w, t, di, corrupt_fn, agg_fn,
+                    stale_sum=ss, g_prev=gpv)
+            )(group_params, batches, fresh_w, stale_sum, g_prev, dev_ids)
+
+        return step_async
+
+    @jax.jit
+    def step(group_params, batches, fresh_w, t, dev_ids):
+        return jax.vmap(
+            lambda p, b, w, di: _per_group_train_robust(
+                p, b, loss_fn, cfg, w, t, di, corrupt_fn, agg_fn)
+        )(group_params, batches, fresh_w, dev_ids)
+
+    return step
+
+
 def make_group_train_step(loss_fn: LossFn, cfg: FedGSConfig, *,
                           availability: bool = False):
     """Train-only half of the iteration (used by the two-phase host loop):
@@ -360,6 +508,7 @@ def run_fedgs(
     cfg: FedGSConfig,
     *,
     avail_fn=None,
+    corrupt_fn=None,
     eval_fn: Callable[[PyTree], tuple[float, float]] | None = None,
     eval_every: int = 10,
     log_fn: Callable[[RoundLog], None] | None = None,
@@ -373,7 +522,11 @@ def run_fedgs(
     selected devices generate/fetch data and take one local SGD step;
     (4) internal sync. External sync every T iterations. ``avail_fn``
     threads an availability schedule through selection and sync — same
-    semantics as the fused body (DESIGN.md §14).
+    semantics as the fused body (DESIGN.md §14). ``corrupt_fn`` injects
+    gradient corruption (``data.streaming.make_corruption_fn``) and —
+    together with ``cfg.robust_agg``/``nan_guard``/``quarantine_limit`` —
+    activates the robustness layer (DESIGN.md §15): per-member gradients,
+    robust Eq. 4, isfinite rollback and selection quarantine.
 
     With ``cfg.engine == 'fused'`` (or ``'sharded'``, which additionally
     shards the group axis over every available device), dispatches to
@@ -384,7 +537,8 @@ def run_fedgs(
         mesh = make_group_mesh(cfg.num_groups) if cfg.engine == "sharded" \
             else None
         return run_fedgs_fused(params, loss_fn, streams, p_real, cfg,
-                               avail_fn=avail_fn, mesh=mesh, eval_fn=eval_fn,
+                               avail_fn=avail_fn, corrupt_fn=corrupt_fn,
+                               mesh=mesh, eval_fn=eval_fn,
                                eval_every=eval_every, log_fn=log_fn)
     if cfg.engine != "host":
         raise ValueError(f"unknown engine: {cfg.engine!r} "
@@ -393,8 +547,18 @@ def run_fedgs(
     if bounded and avail_fn is None:
         raise ValueError("sync='bounded_async' requires an availability "
                          "schedule (avail_fn)")
-    train_step = make_group_train_step(loss_fn, cfg,
-                                       availability=avail_fn is not None)
+    robust = _robust_active(cfg, corrupt_fn)
+    if robust and cfg.train_step != "grad_avg":
+        raise ValueError("corruption injection requires train_step="
+                         "'grad_avg' (the per-member gradient stack)")
+    quarantined = corrupt_fn is not None and cfg.quarantine_limit > 0
+    guard = corrupt_fn is not None and cfg.nan_guard
+    if robust:
+        train_step = make_robust_train_step(loss_fn, cfg, corrupt_fn,
+                                            bounded=bounded)
+    else:
+        train_step = make_group_train_step(
+            loss_fn, cfg, availability=avail_fn is not None)
     gp = replicate_for_groups(params, cfg.num_groups)
     key = jax.random.PRNGKey(cfg.seed)
     p_real = jnp.asarray(p_real, jnp.float32)
@@ -402,14 +566,17 @@ def run_fedgs(
     mask_c, dist_c = sel_state[0], sel_state[1]
     if bounded:
         staleness, g_prev = sel_state[2], sel_state[3]
+    quar = jnp.zeros((cfg.num_groups, cfg.devices_per_group), jnp.int32)
     avail_jit = jax.jit(avail_fn) if avail_fn is not None else None
     flat_ids = jnp.arange(cfg.num_groups * cfg.devices_per_group,
                           dtype=jnp.int32)
+    gids = jnp.arange(cfg.num_groups, dtype=jnp.int32)
     logs: list[RoundLog] = []
     t = 0
     for r in range(cfg.rounds):
         losses, divs, discs, dists = [], [], [], []
         parts, darks, smeans, smaxs = [], [], [], []
+        corrs, clipfs, rbs, resids = [], [], [], []
         resel = 0
         for _ in range(cfg.iters_per_round):
             key, sub = jax.random.split(key)
@@ -423,6 +590,9 @@ def run_fedgs(
                 up, _lat = avail_jit(jnp.int32(t), flat_ids)
                 avail = up.reshape((cfg.num_groups, cfg.devices_per_group))
             sel_avail = avail if cfg.avail_selection == "aware" else None
+            if quarantined:
+                ok = selection.quarantine_mask(quar, cfg.quarantine_limit)
+                sel_avail = ok if sel_avail is None else sel_avail * ok
             do = bool(selection.reselect_predicate(t, cfg.reselect_every))
             if sel_avail is not None and not bounded \
                     and cfg.reselect_every != 1:
@@ -444,7 +614,57 @@ def run_fedgs(
             imgs, labs = streams.fetch_selected(np.asarray(mask_c),
                                                 cfg.num_selected)
             batches = (jnp.asarray(imgs), jnp.asarray(labs))
-            if avail is None:
+            if robust:
+                vals, idx = jax.lax.top_k(mask_c, cfg.num_selected)
+                dev_ids = (gids[:, None] * cfg.devices_per_group
+                           + idx).astype(jnp.int32)
+                if avail is None:
+                    fresh_w = vals
+                elif bounded:
+                    st = _avail_weights(mask_c, avail, staleness, cfg)
+                    fresh_w = st.fresh_w
+                else:
+                    fresh_w = vals * jnp.take_along_axis(avail, idx, axis=-1)
+                gp_old = gp
+                if bounded:
+                    g_prev_old, stale_old = g_prev, staleness
+                    gp, loss, g_prev, rs = train_step(
+                        gp, batches, fresh_w, st.stale_sum, g_prev_old,
+                        jnp.int32(t), dev_ids)
+                    staleness = st.staleness
+                else:
+                    gp, loss, _g, rs = train_step(gp, batches, fresh_w,
+                                                  jnp.int32(t), dev_ids)
+                rollbacks = 0.0
+                if guard:
+                    finite_m = _group_finite(gp)
+                    if bounded:
+                        finite_m = finite_m & _group_finite(g_prev)
+                    gp = _where_groups(finite_m, gp, gp_old)
+                    if bounded:
+                        g_prev = _where_groups(finite_m, g_prev, g_prev_old)
+                        staleness = jnp.where(finite_m[:, None],
+                                              staleness, stale_old)
+                    rollbacks = float(jnp.sum(1.0 - finite_m))
+                if quarantined:
+                    quar = jax.vmap(
+                        lambda q, i, f: q.at[i].add(f.astype(jnp.int32))
+                    )(quar, idx, rs.flags * vals)
+                seated = float(jnp.sum(vals))
+                corrs.append(float(jnp.sum(rs.hit * vals)))
+                clipfs.append(float(jnp.sum(rs.flags * vals))
+                              / max(seated, 1.0))
+                rbs.append(rollbacks)
+                resids.append(float(jnp.mean(rs.residual)))
+                if avail is not None:
+                    parts.append(float(jnp.mean(avail)))
+                    if bounded:
+                        darks.append(float(jnp.sum(st.dark)))
+                        smeans.append(float(jnp.mean(st.stale_mean)))
+                        smaxs.append(float(jnp.max(st.stale_max)))
+                    else:
+                        darks.append(float(jnp.sum(mask_c * (1.0 - avail))))
+            elif avail is None:
                 gp, loss = train_step(gp, batches)
             elif bounded:
                 st = _avail_weights(mask_c, avail, staleness, cfg)
@@ -481,7 +701,14 @@ def run_fedgs(
             dark_selected=float(np.sum(darks)) if darks else float("nan"),
             staleness_mean=float(np.mean(smeans)) if smeans
             else float("nan"),
-            staleness_max=float(np.max(smaxs)) if smaxs else float("nan"))
+            staleness_max=float(np.max(smaxs)) if smaxs else float("nan"),
+            corrupted_selected=float(np.sum(corrs)) if corrs
+            else float("nan"),
+            clipped_fraction=float(np.mean(clipfs)) if clipfs
+            else float("nan"),
+            rollbacks=float(np.sum(rbs)) if rbs else float("nan"),
+            agg_residual=float(np.mean(resids)) if resids
+            else float("nan"))
         logs.append(log)
         if log_fn is not None:
             log_fn(log)
@@ -510,8 +737,8 @@ def make_group_mesh(num_groups: int | None = None):
     return jax.make_mesh((n,), ("groups",))
 
 
-def init_selection_state(cfg: FedGSConfig, params: PyTree | None = None
-                         ) -> tuple:
+def init_selection_state(cfg: FedGSConfig, params: PyTree | None = None,
+                         *, quarantine: bool = False) -> tuple:
     """Initial carried selection state for the round body (DESIGN.md §13):
     ``(mask (M, K), distance (M,))``. All-zero: iteration t=0 always rebuilds
     (``reselect_predicate(0, N)`` is True for every cadence N), so the zeros
@@ -524,7 +751,12 @@ def init_selection_state(cfg: FedGSConfig, params: PyTree | None = None
     (nobody has ever contributed), and the per-group carried gradient
     ``ḡ (M, |θ|)``, initialized at zero so initial stale mass only damps the
     fresh gradient instead of fabricating an update — ``params`` (the
-    zero-template) is required then."""
+    zero-template) is required then.
+
+    With ``quarantine=True`` (corruption injection + ``quarantine_limit`` >
+    0, DESIGN.md §15.4) the per-device outlier-flag counters ``(M, K)
+    int32`` join as the LAST leaf — always last, whatever the ``sync`` mode,
+    so the round body addresses them as ``sel[-1]``."""
     sel = (jnp.zeros((cfg.num_groups, cfg.devices_per_group), jnp.float32),
            jnp.zeros((cfg.num_groups,), jnp.float32))
     if cfg.sync == "bounded_async":
@@ -536,11 +768,15 @@ def init_selection_state(cfg: FedGSConfig, params: PyTree | None = None
         g_prev = replicate_for_groups(
             jax.tree.map(jnp.zeros_like, params), cfg.num_groups)
         sel = sel + (staleness, g_prev)
+    if quarantine:
+        sel = sel + (jnp.zeros((cfg.num_groups, cfg.devices_per_group),
+                               jnp.int32),)
     return sel
 
 
 def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
-                    avail_fn=None, mesh=None, axis_name: str = "groups"):
+                    avail_fn=None, corrupt_fn=None, mesh=None,
+                    axis_name: str = "groups"):
     """Build the PURE one-round body of the device-resident engine.
 
     Returns ``round_body(group_params, key, sel, t0, p_real) ->
@@ -572,6 +808,17 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
     reselection) or contribute their γ^staleness-weighted stale gradient
     (``'bounded_async'``).
 
+    ``corrupt_fn`` is the gradient-corruption schedule (``data.streaming.
+    make_corruption_fn``, DESIGN.md §15.1) — with it (or with
+    ``cfg.robust_agg != 'mean'``) the train step materializes per-member
+    gradients, injects the fault trace, and aggregates via
+    ``cfg.robust_agg``; ``cfg.nan_guard`` audits each iteration's group
+    state with ``jnp.isfinite`` and rolls poisoned groups back to their
+    pre-iteration snapshot (a per-group ``jnp.where``, bit-transparent when
+    everything is finite); ``cfg.quarantine_limit`` > 0 appends per-device
+    outlier counters to the carry (``sel[-1]``) and bars repeat offenders
+    from selection like dark devices (DESIGN.md §15.3–§15.4).
+
     With ``mesh``, the body is written for execution *inside* ``shard_map``
     over ``axis_name``: each shard simulates M/n_shards super nodes,
     selection keys are sliced from the *global* key fan-out (so results are
@@ -587,6 +834,15 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
     if bounded and avail_fn is None:
         raise ValueError("sync='bounded_async' requires an availability "
                          "schedule (avail_fn)")
+    robust = _robust_active(cfg, corrupt_fn)
+    if robust and cfg.train_step != "grad_avg":
+        raise ValueError("corruption injection requires train_step="
+                         "'grad_avg' (the per-member gradient stack)")
+    quarantined = corrupt_fn is not None and cfg.quarantine_limit > 0
+    guard = corrupt_fn is not None and cfg.nan_guard
+    agg_fn = dispatch.robust_agg_fn(
+        cfg.kernel_backend, cfg.robust_agg, clip=cfg.robust_clip,
+        trim=cfg.robust_trim) if robust else None
     n_shards = 1 if mesh is None else _mesh_axis_size(mesh, axis_name)
     if m % n_shards != 0:
         raise ValueError(
@@ -624,6 +880,12 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
                 up, _lat = avail_fn(t, flat_ids)
                 avail = up.reshape((gids.shape[0], k))
             sel_avail = avail if cfg.avail_selection == "aware" else None
+            quar = sel[-1] if quarantined else None
+            if quarantined:
+                # repeat gradient offenders are barred from selection like
+                # dark devices (DESIGN.md §15.4)
+                ok = selection.quarantine_mask(quar, cfg.quarantine_limit)
+                sel_avail = ok if sel_avail is None else sel_avail * ok
             if cfg.reselect_every == 1:
                 res = selection.select_for_groups(
                     keys, counts, p_real, l, cfg.num_presampled,
@@ -651,7 +913,69 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
                 resel = do.astype(jnp.float32)
             imgs, labs = sampler.selected_batch(t, gids, mask, l)
             extra = {}
-            if avail is None:
+            if robust:
+                # corruption-exposed path (DESIGN.md §15): materialized
+                # per-member gradients, injected fault trace, robust Eq. 4,
+                # isfinite rollback, quarantine feedback
+                vals, idx = jax.lax.top_k(mask, l)
+                dev_ids = (gids[:, None] * k + idx).astype(jnp.int32)
+                if avail is None:
+                    fresh_w = vals
+                elif bounded:
+                    st = _avail_weights(mask, avail, sel[2], cfg)
+                    fresh_w = st.fresh_w
+                else:
+                    fresh_w = vals * jnp.take_along_axis(avail, idx, axis=-1)
+                gp_old = gp
+                if bounded:
+                    g_prev_old = sel[3]
+                    gp, losses, g_prev, rs = jax.vmap(
+                        lambda p, b, w, ss, gpv, di: _per_group_train_robust(
+                            p, b, loss_fn, cfg, w, t, di, corrupt_fn, agg_fn,
+                            stale_sum=ss, g_prev=gpv)
+                    )(gp, (imgs, labs), fresh_w, st.stale_sum, g_prev_old,
+                      dev_ids)
+                    staleness = st.staleness
+                else:
+                    gp, losses, _g, rs = jax.vmap(
+                        lambda p, b, w, di: _per_group_train_robust(
+                            p, b, loss_fn, cfg, w, t, di, corrupt_fn,
+                            agg_fn)
+                    )(gp, (imgs, labs), fresh_w, dev_ids)
+                rollbacks = jnp.float32(0.0)
+                if guard:
+                    finite_m = _group_finite(gp)
+                    if bounded:
+                        finite_m = finite_m & _group_finite(g_prev)
+                    gp = _where_groups(finite_m, gp, gp_old)
+                    if bounded:
+                        g_prev = _where_groups(finite_m, g_prev, g_prev_old)
+                        staleness = jnp.where(finite_m[:, None],
+                                              staleness, sel[2])
+                    rollbacks = jnp.sum(1.0 - finite_m.astype(jnp.float32))
+                sel_new = (mask, dist, staleness, g_prev) if bounded \
+                    else (mask, dist)
+                if quarantined:
+                    quar_new = jax.vmap(
+                        lambda q, i, f: q.at[i].add(f.astype(jnp.int32))
+                    )(quar, idx, rs.flags * vals)
+                    sel_new = sel_new + (quar_new,)
+                seated = jnp.sum(vals)
+                extra = {"corrupted_selected": jnp.sum(rs.hit * vals),
+                         "clipped_fraction": (jnp.sum(rs.flags * vals)
+                                              / jnp.maximum(seated, 1.0)),
+                         "rollbacks": rollbacks,
+                         "agg_residual": jnp.mean(rs.residual)}
+                if avail is not None:
+                    extra["participation"] = jnp.mean(avail)
+                    if bounded:
+                        extra["dark_selected"] = jnp.sum(st.dark)
+                        extra["staleness_mean"] = jnp.mean(st.stale_mean)
+                        extra["staleness_max"] = jnp.max(st.stale_max)
+                    else:
+                        extra["dark_selected"] = jnp.sum(
+                            mask * (1.0 - avail))
+            elif avail is None:
                 gp, losses = jax.vmap(
                     lambda p, b: _per_group_train(p, b, loss_fn, cfg)
                 )(gp, (imgs, labs))
@@ -683,12 +1007,14 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
                 div = jax.lax.pmean(div, axis_name)
                 disc = jax.lax.pmean(disc, axis_name)
                 d = jax.lax.pmean(d, axis_name)
-                for name in ("participation", "staleness_mean"):
+                for name in ("participation", "staleness_mean",
+                             "clipped_fraction", "agg_residual"):
                     if name in extra:
                         extra[name] = jax.lax.pmean(extra[name], axis_name)
-                if "dark_selected" in extra:
-                    extra["dark_selected"] = jax.lax.psum(
-                        extra["dark_selected"], axis_name)
+                for name in ("dark_selected", "corrupted_selected",
+                             "rollbacks"):
+                    if name in extra:
+                        extra[name] = jax.lax.psum(extra[name], axis_name)
                 if "staleness_max" in extra:
                     extra["staleness_max"] = jax.lax.pmax(
                         extra["staleness_max"], axis_name)
@@ -712,29 +1038,35 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
 
 
 def _selection_state_spec(cfg: FedGSConfig, params: PyTree | None,
-                          axis_name: str):
+                          axis_name: str, *, quarantine: bool = False):
     """PartitionSpec tree matching :func:`init_selection_state`: every leaf
-    of the carried selection state — mask, distance, and (bounded_async) the
-    staleness clock and group gradient — is sharded over the group axis."""
-    template = init_selection_state(cfg, params)
+    of the carried selection state — mask, distance, (bounded_async) the
+    staleness clock and group gradient, and (corruption) the quarantine
+    counters — is sharded over the group axis."""
+    template = init_selection_state(cfg, params, quarantine=quarantine)
     return jax.tree.map(lambda _: P(axis_name), template)
 
 
 def make_fused_round(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
-                     avail_fn=None, params: PyTree | None = None,
+                     avail_fn=None, corrupt_fn=None,
+                     params: PyTree | None = None,
                      mesh=None, axis_name: str = "groups"):
     """Jitted one-round dispatch over :func:`make_round_body` —
     ``group_params`` buffers are donated, so steady-state rounds allocate
-    nothing new. Call as ``fn(gp, key, init_selection_state(cfg[, params]),
-    t0, p_real)`` and thread the returned selection state into the next
-    round; under ``sync='bounded_async'`` pass the ``params`` template so
-    the sharding spec covers the extended carry. (The chunked multi-round
-    engine wraps the same body via ``make_fedgs_experiment`` instead.)"""
-    fn = make_round_body(loss_fn, cfg, sampler, avail_fn=avail_fn, mesh=mesh,
+    nothing new. Call as ``fn(gp, key, init_selection_state(cfg[, params],
+    quarantine=...), t0, p_real)`` and thread the returned selection state
+    into the next round; under ``sync='bounded_async'`` pass the ``params``
+    template so the sharding spec covers the extended carry. (The chunked
+    multi-round engine wraps the same body via ``make_fedgs_experiment``
+    instead.)"""
+    fn = make_round_body(loss_fn, cfg, sampler, avail_fn=avail_fn,
+                         corrupt_fn=corrupt_fn, mesh=mesh,
                          axis_name=axis_name)
     if mesh is not None:
         from jax.experimental.shard_map import shard_map
-        sel_spec = _selection_state_spec(cfg, params, axis_name)
+        sel_spec = _selection_state_spec(
+            cfg, params, axis_name,
+            quarantine=corrupt_fn is not None and cfg.quarantine_limit > 0)
         fn = shard_map(
             fn, mesh=mesh,
             in_specs=(P(axis_name), P(), sel_spec, P(), P()),
@@ -751,6 +1083,7 @@ def make_fedgs_experiment(
     cfg: FedGSConfig,
     *,
     avail_fn=None,
+    corrupt_fn=None,
     mesh=None,
     axis_name: str = "groups",
     eval_fn: Callable[[PyTree], tuple[Array, Array]] | None = None,
@@ -758,18 +1091,22 @@ def make_fedgs_experiment(
 ) -> engine.Experiment:
     """FEDGS as an ``engine.Experiment`` (DESIGN.md §12): state is
     (group_params (M, ...), PRNG key, carried selection state (mask,
-    distance[, staleness, ḡ] — DESIGN.md §13–§14); one round =
+    distance[, staleness, ḡ][, quarantine] — DESIGN.md §13–§15); one round =
     :func:`make_round_body` at ``t0 = r·T``. ``eval_fn`` must be jittable
     (the engine evaluates inside the round scan — ``models.cnn.
     make_eval_fn``). ``unroll`` controls the engine's rounds-scan unroll
     (0 = auto: full on CPU; 1 = rolled — far cheaper to compile for large
-    chunks)."""
+    chunks). ``corrupt_fn`` threads gradient corruption + the robust
+    aggregation/guard path through every iteration (DESIGN.md §15)."""
     body = make_round_body(loss_fn, cfg, sampler, avail_fn=avail_fn,
-                           mesh=mesh, axis_name=axis_name)
+                           corrupt_fn=corrupt_fn, mesh=mesh,
+                           axis_name=axis_name)
     p_real = jnp.asarray(p_real, jnp.float32)
     gp = replicate_for_groups(params, cfg.num_groups)
+    quarantined = corrupt_fn is not None and cfg.quarantine_limit > 0
+    robust = _robust_active(cfg, corrupt_fn)
     state = (gp, jax.random.PRNGKey(cfg.seed),
-             init_selection_state(cfg, params))
+             init_selection_state(cfg, params, quarantine=quarantined))
     bounded = cfg.sync == "bounded_async"
 
     def round_fn(state, r):
@@ -790,6 +1127,11 @@ def make_fedgs_experiment(
         if bounded:
             out["staleness_mean"] = jnp.mean(mets["staleness_mean"])
             out["staleness_max"] = jnp.max(mets["staleness_max"])
+        if robust:
+            out["corrupted_selected"] = jnp.sum(mets["corrupted_selected"])
+            out["clipped_fraction"] = jnp.mean(mets["clipped_fraction"])
+            out["rollbacks"] = jnp.sum(mets["rollbacks"])
+            out["agg_residual"] = jnp.mean(mets["agg_residual"])
         return (gp, key, sel), out
 
     def params_fn(state):
@@ -798,7 +1140,8 @@ def make_fedgs_experiment(
         return jax.tree.map(lambda leaf: leaf[0], state[0])
 
     state_spec = (jax.tree.map(lambda _: P(axis_name), gp), P(),
-                  _selection_state_spec(cfg, params, axis_name))
+                  _selection_state_spec(cfg, params, axis_name,
+                                        quarantine=quarantined))
     return engine.Experiment(
         name="fedgs" if cfg.selection == "gbp_cs" else "fedgs_random_sel",
         init_state=state, round_fn=round_fn, params_fn=params_fn,
@@ -814,6 +1157,7 @@ def run_fedgs_fused(
     cfg: FedGSConfig,
     *,
     avail_fn=None,
+    corrupt_fn=None,
     mesh=None,
     axis_name: str = "groups",
     eval_fn: Callable[[PyTree], tuple[Array, Array]] | None = None,
@@ -834,11 +1178,13 @@ def run_fedgs_fused(
     rounds-scan unroll (0 = auto: full on CPU — right for chunk=1; pass
     unroll=1 for large CPU chunks, where inlining chunk·T round bodies
     would blow up compile time, DESIGN.md §12.2). ``avail_fn`` threads an
-    availability schedule through selection and sync (DESIGN.md §14).
+    availability schedule through selection and sync (DESIGN.md §14);
+    ``corrupt_fn`` threads gradient corruption + the robust aggregation
+    path through every iteration (DESIGN.md §15).
     """
     exp = make_fedgs_experiment(params, loss_fn, sampler, p_real, cfg,
-                                avail_fn=avail_fn, mesh=mesh,
-                                axis_name=axis_name,
+                                avail_fn=avail_fn, corrupt_fn=corrupt_fn,
+                                mesh=mesh, axis_name=axis_name,
                                 eval_fn=eval_fn, unroll=unroll)
     state, logs = engine.run_experiment(
         exp, cfg.rounds, eval_every=eval_every if eval_fn is not None else 0,

@@ -149,6 +149,21 @@ select_groups_any = functools.partial(
 )(select_for_groups)
 
 
+def quarantine_mask(quarantine: Array, limit: int) -> Array:
+    """Selection eligibility from per-device quarantine counters
+    (DESIGN.md §15.4): a device flagged as a gradient outlier ``limit`` or
+    more times is barred from GBP-CS exactly like a dark device — callers
+    fold the returned 0/1 mask into the ``avail`` argument of the selection
+    functions, so repeat offenders are never seated again (counts zeroed,
+    repair step swaps them out, final mask intersected). ``limit <= 0``
+    disables quarantine (all-ones mask). Shapes pass through: (K,) or
+    (M, K) counters give a same-shaped mask."""
+    q = jnp.asarray(quarantine, jnp.float32)
+    if limit <= 0:
+        return jnp.ones_like(q)
+    return (q < limit).astype(jnp.float32)
+
+
 def reselect_predicate(t: Array, reselect_every: int) -> Array:
     """When does iteration ``t`` rebuild the super nodes (DESIGN.md §13)?
 

@@ -22,6 +22,13 @@ import jax.numpy as jnp
 PyTree = Any
 Array = jax.Array
 
+# Explicit zero-total-denominator guard for every weighted mean in this
+# module: an all-masked / all-stale stack (every weight 0) averages to the
+# zero tree instead of dividing by zero — downstream the zero gradient
+# freezes the group's params, which is the intended fault-tolerance
+# semantics (DESIGN.md §14.3, §15.2).
+EPS = 1e-12
+
 
 def local_step(params: PyTree, batch: Any, loss_fn: Callable[..., Array],
                lr: float) -> tuple[PyTree, Array]:
@@ -50,10 +57,12 @@ def weighted_average(trees: PyTree, weights: Array) -> PyTree:
 
     Args:
       trees: pytree whose leaves have shape (K, ...) — stacked client models.
-      weights: (K,) nonnegative weights (zero for unselected devices).
+      weights: (K,) nonnegative weights (zero for unselected devices). An
+        all-zero stack returns the zero tree (:data:`EPS` guard), never a
+        0/0 NaN.
     """
     w = jnp.asarray(weights, jnp.float32)
-    denom = jnp.maximum(jnp.sum(w), 1e-12)
+    denom = jnp.maximum(jnp.sum(w), EPS)
     wn = w / denom
 
     def avg(leaf):
@@ -121,9 +130,11 @@ def external_sync(group_params: PyTree) -> PyTree:
 def staleness_weights(staleness: Array, gamma: float) -> Array:
     """γ^s contribution weights for stale participants. ``staleness`` is
     kept ≤ max_staleness by :func:`update_staleness`, so weights never decay
-    below γ^max — the *bounded* in bounded_async."""
-    return jnp.asarray(gamma, jnp.float32) ** jnp.asarray(staleness,
-                                                          jnp.float32)
+    below γ^max — the *bounded* in bounded_async. Clocks are clamped to
+    s ≥ 0 first: a (buggy or hand-built) negative clock would otherwise
+    *amplify* the stale gradient (γ^{-s} > 1 for γ < 1)."""
+    s = jnp.maximum(jnp.asarray(staleness, jnp.float32), 0.0)
+    return jnp.asarray(gamma, jnp.float32) ** s
 
 
 def update_staleness(staleness: Array, contributed: Array,
@@ -158,7 +169,7 @@ def bounded_async_sync(grads: PyTree, fresh_w: Array, g_prev: PyTree,
     """
     fw = jnp.asarray(fresh_w, jnp.float32)
     sw_total = jnp.sum(jnp.asarray(stale_w, jnp.float32))
-    denom = jnp.maximum(jnp.sum(fw) + sw_total, 1e-12)
+    denom = jnp.maximum(jnp.sum(fw) + sw_total, EPS)
 
     def blend(gleaf, pleaf):
         wb = fw.reshape((-1,) + (1,) * (gleaf.ndim - 1))
@@ -167,6 +178,168 @@ def bounded_async_sync(grads: PyTree, fresh_w: Array, g_prev: PyTree,
                 / denom).astype(pleaf.dtype)
 
     return jax.tree.map(blend, grads, g_prev)
+
+
+# ---------------------------------------------------------------------------
+# Robust aggregation (DESIGN.md §15.2).
+#
+# Drop-in replacements for the plain weighted mean at the Eq. (4) internal
+# sync: a device emitting NaN/Inf or a scaled/sign-flipped gradient (sensor
+# fault, firmware bug, adversary) must not destroy the super node. All
+# aggregators share one convention: a *member* is one row of the stacked
+# (K, ...) gradient pytree; members whose gradients contain any non-finite
+# value are excluded before arithmetic (NaN·0 = NaN would otherwise leak
+# through a masked mean), and an empty surviving set aggregates to the zero
+# tree — params freeze, matching the all-dark availability semantics.
+# ---------------------------------------------------------------------------
+
+ROBUST_AGGREGATORS = ("mean", "clip_norm", "trimmed_mean", "coord_median")
+
+
+def check_robust_agg(method: str) -> str:
+    if method not in ROBUST_AGGREGATORS:
+        raise ValueError(f"unknown robust_agg: {method!r} "
+                         f"(expected one of {ROBUST_AGGREGATORS})")
+    return method
+
+
+def _bcast(v: Array, leaf: Array) -> Array:
+    """Broadcast a (K,) member vector against a (K, ...) leaf."""
+    return v.reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+
+def member_finite(grads: PyTree) -> Array:
+    """(K,) bool — True where EVERY coordinate of the member's gradient is
+    finite. One NaN/Inf anywhere disqualifies the whole member: a partially
+    poisoned update is not trustworthy coordinate-wise either."""
+    ok = None
+    for leaf in jax.tree.leaves(grads):
+        x = leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)
+        f = jnp.all(jnp.isfinite(x), axis=1)
+        ok = f if ok is None else ok & f
+    return ok
+
+
+def member_norms(grads: PyTree) -> Array:
+    """(K,) global L2 norm per member; non-finite coordinates count as 0
+    (those members are handled by :func:`member_finite`, and NaN here would
+    poison the clip factors of the healthy members via jnp reductions)."""
+    sq = None
+    for leaf in jax.tree.leaves(grads):
+        x = leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)
+        x = jnp.where(jnp.isfinite(x), x, 0.0)
+        s = jnp.sum(x * x, axis=1)
+        sq = s if sq is None else sq + s
+    return jnp.sqrt(sq)
+
+
+def member_outlier_flags(grads: PyTree, clip: float) -> Array:
+    """(K,) 0/1 — the *observable* per-member fault signal fed back into
+    quarantine (DESIGN.md §15.4): non-finite, or global norm above ``clip``.
+    Deliberately independent of the injected ground truth (``hit``) — the
+    engine only sees gradients, like a real BS."""
+    bad = ~member_finite(grads) | (member_norms(grads) > clip)
+    return bad.astype(jnp.float32)
+
+
+def _sanitize(grads: PyTree, finite: Array) -> PyTree:
+    """Zero out every coordinate of non-finite members (f32 leaves)."""
+    return jax.tree.map(
+        lambda g: jnp.where(_bcast(finite, g), g.astype(jnp.float32), 0.0),
+        grads)
+
+
+def clip_norm_agg(grads: PyTree, weights: Array, clip: float) -> PyTree:
+    """Weighted mean with per-member global-norm clipping: member k enters
+    at ``g_k · min(1, clip/‖g_k‖)`` and weight ``w_k·[finite_k]``. Below the
+    threshold the factor is exactly 1.0 and every op is an identity — the
+    no-op property the ``tests/test_robust.py`` property suite pins down."""
+    finite = member_finite(grads)
+    factor = jnp.minimum(1.0, clip / jnp.maximum(member_norms(grads), EPS))
+    clean = jax.tree.map(lambda g: g * _bcast(factor, g),
+                         _sanitize(grads, finite))
+    return weighted_average(clean, jnp.asarray(weights, jnp.float32)
+                            * finite.astype(jnp.float32))
+
+
+def _order_stats(grads: PyTree, weights: Array, reduce_fn) -> PyTree:
+    """Shared scaffolding of the order-statistics aggregators: build the
+    active-member set (positive weight AND finite — the weights act as an
+    inclusion mask only, matching the paper's uniform n^{m,k}), push
+    inactive members to +max so an ascending sort ranks them last, and
+    reduce each coordinate with ``reduce_fn(sorted, n_active)``."""
+    active = (jnp.asarray(weights, jnp.float32) > 0) & member_finite(grads)
+    n = jnp.sum(active.astype(jnp.int32))
+
+    def per_leaf(leaf):
+        x = leaf.astype(jnp.float32)
+        v = jnp.where(_bcast(active, x), x,
+                      jnp.float32(jnp.finfo(jnp.float32).max))
+        out = reduce_fn(jnp.sort(v, axis=0), n)
+        return jnp.where(n > 0, out, 0.0).astype(leaf.dtype)
+
+    return jax.tree.map(per_leaf, grads)
+
+
+def trimmed_mean_agg(grads: PyTree, weights: Array, trim: int) -> PyTree:
+    """Coordinate-wise trimmed mean: per coordinate, drop the ``trim``
+    smallest and ``trim`` largest values among the active members, average
+    the rest. ``trim`` saturates at ⌊(n−1)/2⌋ so at least one value always
+    survives; at that saturation the estimator tolerates ⌊(n−1)/2⌋ arbitrary
+    corruptions (the optimal breakdown point)."""
+
+    def reduce_fn(asc, n):
+        k = asc.shape[0]
+        t_eff = jnp.minimum(jnp.int32(trim), jnp.maximum((n - 1) // 2, 0))
+        idx = _bcast(jnp.arange(k, dtype=jnp.int32), asc)
+        inc = (idx >= t_eff) & (idx < n - t_eff)
+        cnt = jnp.maximum(n - 2 * t_eff, 1).astype(jnp.float32)
+        return jnp.sum(jnp.where(inc, asc, 0.0), axis=0) / cnt
+
+    return _order_stats(grads, weights, reduce_fn)
+
+
+def coord_median_agg(grads: PyTree, weights: Array) -> PyTree:
+    """Coordinate-wise median over the active members (mean of the two
+    middle order statistics for even n) — breakdown point ⌊(n−1)/2⌋, the
+    maximal-robustness / maximal-bias end of the aggregator family."""
+
+    def reduce_fn(asc, n):
+        k = asc.shape[0]
+        lo = jnp.maximum((n - 1) // 2, 0)
+        hi = jnp.minimum(n // 2, k - 1)
+        return (jnp.take(asc, lo, axis=0)
+                + jnp.take(asc, hi, axis=0)) * 0.5
+
+    return _order_stats(grads, weights, reduce_fn)
+
+
+def robust_aggregate(grads: PyTree, weights: Array, method: str, *,
+                     clip: float = 10.0, trim: int = 1) -> PyTree:
+    """Robust Eq. (4) over a stacked (K, ...) gradient pytree
+    (DESIGN.md §15.2).
+
+    ``method``:
+      * ``mean``         — the plain weighted mean (:func:`weighted_average`),
+        bit-identical to the historical path. NOT fault-masked: NaN members
+        propagate, by design — this is the non-robust baseline the engine's
+        NaN guard (DESIGN.md §15.3) must catch.
+      * ``clip_norm``    — finite-masked weighted mean with per-member
+        global-norm clipping at ``clip`` (exact no-op below the threshold).
+      * ``trimmed_mean`` — coordinate-wise ``trim``-trimmed mean.
+      * ``coord_median`` — coordinate-wise median.
+
+    For the order-statistics methods ``weights`` only gate membership
+    (w > 0), matching the paper's uniform per-device batch sizes n^{m,k}.
+    """
+    check_robust_agg(method)
+    if method == "mean":
+        return weighted_average(grads, weights)
+    if method == "clip_norm":
+        return clip_norm_agg(grads, weights, clip)
+    if method == "trimmed_mean":
+        return trimmed_mean_agg(grads, weights, trim)
+    return coord_median_agg(grads, weights)
 
 
 # ---------------------------------------------------------------------------
@@ -184,7 +357,7 @@ def internal_sync_collective(params: PyTree, weight: Array,
 
     def avg(leaf):
         s = jax.lax.psum(leaf.astype(jnp.float32) * w, axis_name)
-        return (s / jnp.maximum(denom, 1e-12)).astype(leaf.dtype)
+        return (s / jnp.maximum(denom, EPS)).astype(leaf.dtype)
 
     return jax.tree.map(avg, params)
 

@@ -3,6 +3,8 @@ from .partition import Partition, PartitionConfig, make_partition  # noqa: F401
 from .streaming import (  # noqa: F401
     AVAILABILITY_SCHEDULES,
     AvailabilityConfig,
+    CORRUPTION_MODES,
+    CorruptionConfig,
     DRIFT_SCHEDULES,
     ClientPool,
     DeviceBackedStreams,
@@ -13,6 +15,7 @@ from .streaming import (  # noqa: F401
     HostClientPool,
     make_availability_fn,
     make_client_pool,
+    make_corruption_fn,
     make_device_sampler,
     make_drift_fn,
 )

@@ -266,12 +266,15 @@ class AvailabilityConfig:
         the exact pre-availability code path).
       * ``bernoulli``     — each device is up with probability ``up_prob``,
         i.i.d. per (device, iteration): fast memoryless flicker.
-      * ``markov``        — on/off churn with persistence: per-device
-        epochs of ``dwell`` iterations (randomly phase-shifted per device so
-        transitions never align globally); the device is up for a whole
-        epoch with probability ``up_prob``. A pure-in-t block-renewal
-        stand-in for a two-state Markov chain with mean sojourn ``dwell``
-        and stationary up-probability ``up_prob``.
+      * ``markov``        — on/off churn with persistence: a true 2-state
+        Markov chain per device, stepped with a carried state bit. The
+        transition probabilities ``P(up→down) = (1−up_prob)/dwell`` and
+        ``P(down→up) = up_prob/dwell`` give stationary up-probability
+        ``up_prob`` and mean sojourn ~``dwell`` iterations; the initial
+        state is Bernoulli(``up_prob``), i.e. the chain starts at
+        stationarity. To stay pure in (t, id) the chain is unrolled once at
+        build time into a ``(horizon, D)`` state table (a ``lax.scan`` over
+        the carried bit); ``avail_fn`` then just indexes ``t % horizon``.
       * ``straggler_tail``— every device is up, but a deterministic
         ``straggler_frac`` tail of devices (hashed from the seed) runs
         ``slow_factor``× slower; draws above ``deadline`` miss the
@@ -283,7 +286,10 @@ class AvailabilityConfig:
     """
     schedule: str = "always"
     up_prob: float = 0.9       # bernoulli / markov stationary up-probability
-    dwell: int = 8             # markov: iterations per on/off epoch
+    dwell: int = 8             # markov: mean sojourn time (iterations)
+    horizon: int = 4096        # markov: precomputed chain length; the trace
+    #                            repeats with period ``horizon`` (keep it
+    #                            >= the run's total internal iterations)
     straggler_frac: float = 0.15  # straggler_tail: fraction of slow devices
     slow_factor: float = 4.0   # straggler_tail: latency multiplier
     deadline: float = 3.0      # latency budget; draws above it are missed
@@ -297,6 +303,8 @@ class AvailabilityConfig:
             raise ValueError(f"up_prob must be in (0, 1], got {self.up_prob}")
         if self.dwell < 1:
             raise ValueError(f"dwell must be >= 1, got {self.dwell}")
+        if self.horizon < 1:
+            raise ValueError(f"horizon must be >= 1, got {self.horizon}")
         if not 0.0 <= self.straggler_frac <= 1.0:
             raise ValueError("straggler_frac must be a probability in "
                              f"[0, 1], got {self.straggler_frac}")
@@ -345,17 +353,36 @@ def make_availability_fn(avail: AvailabilityConfig | None, seed: int,
         return bernoulli
 
     if avail.schedule == "markov":
+        # True 2-state Markov churn via a carried state bit: the chain is
+        # stepped ONCE at build time (a lax.scan carrying the per-device
+        # up/down bit over ``horizon`` iterations) into a (horizon, D) state
+        # table, so avail_fn stays a pure function of (t, ids) — same purity
+        # discipline as every other schedule, and every engine replays the
+        # identical trace. Transition probs (1-p)/dwell and p/dwell keep the
+        # chain at its stationary distribution p = up_prob from t = 0, with
+        # mean sojourn ~dwell in the up state; both probs are <= 1/dwell so
+        # any dwell >= 1 is valid.
         k_m = jax.random.fold_in(base_key, 2)
-        phase = jax.vmap(lambda i: jax.random.randint(
-            jax.random.fold_in(jax.random.fold_in(base_key, 3), i),
-            (), 0, avail.dwell))(all_ids)
+        p_ud = (1.0 - avail.up_prob) / avail.dwell   # P(up -> down)
+        p_du = avail.up_prob / avail.dwell           # P(down -> up)
+        init_up = jax.vmap(lambda i: jax.random.bernoulli(
+            jax.random.fold_in(jax.random.fold_in(k_m, i), 0),
+            avail.up_prob))(all_ids)
+
+        def transition(state, t):
+            u = jax.vmap(lambda i: jax.random.uniform(
+                jax.random.fold_in(jax.random.fold_in(k_m, i), t)))(all_ids)
+            nxt = jnp.where(state, u >= p_ud, u < p_du)
+            return nxt, nxt
+
+        _, rest = jax.lax.scan(transition, init_up,
+                               jnp.arange(1, avail.horizon, dtype=jnp.int32))
+        table = jnp.concatenate([init_up[None], rest], axis=0) \
+            if avail.horizon > 1 else init_up[None]      # (horizon, D) bool
 
         def markov(t, ids):
-            e = (t + phase[ids]) // avail.dwell     # per-device epoch index
-            def per_dev(i, ei):
-                kd = jax.random.fold_in(jax.random.fold_in(k_m, i), ei)
-                return jax.random.bernoulli(kd, avail.up_prob)
-            up = jax.vmap(per_dev)(ids, e).astype(jnp.float32)
+            row = jnp.take(table, t % avail.horizon, axis=0)
+            up = row[ids].astype(jnp.float32)
             lat = base_latency(t, ids)
             return up * (lat <= avail.deadline), lat
 
@@ -372,6 +399,144 @@ def make_availability_fn(avail: AvailabilityConfig | None, seed: int,
         return (lat <= avail.deadline).astype(jnp.float32), lat
 
     return straggler_tail
+
+
+# ---------------------------------------------------------------------------
+# Gradient-corruption schedules (DESIGN.md §15.1).
+#
+# Fault injection for the robustness subsystem, modeled exactly like drift
+# and availability above: a corruption trace is a *pure function of (flat
+# device id, internal-iteration index t, seed)* — which devices are faulty,
+# when each fault fires, and what noise it adds are all derived from
+# fold_in hashes, so the host loop, the fused scan and every shard_map
+# shard replay ONE fault trace and the engines stay comparable under
+# injection. Corruption applies to the per-member gradient stack at the
+# Eq. 4 internal sync (core.fedgs), not to the data: the threat model is a
+# poisoned/faulty *update* (sensor fault, firmware bug, adversary).
+# ---------------------------------------------------------------------------
+
+CORRUPTION_MODES = ("nan_burst", "inf_spike", "scale", "sign_flip",
+                    "gauss_noise")
+
+
+@dataclasses.dataclass(frozen=True)
+class CorruptionConfig:
+    """Parameterized gradient corruption (DESIGN.md §15.1).
+
+    ``mode`` is one of :data:`CORRUPTION_MODES`, or a ``'+'``-joined mix
+    (e.g. ``'scale+nan_burst'``): each faulty device is assigned ONE mode
+    from the mix by a per-device hash, so a mixed schedule exercises several
+    failure families in a single run.
+
+      * ``nan_burst``   — the whole gradient becomes NaN.
+      * ``inf_spike``   — the whole gradient becomes +Inf.
+      * ``scale``       — the gradient is multiplied by ``scale``.
+      * ``sign_flip``   — the gradient is negated (model-poisoning flavor).
+      * ``gauss_noise`` — i.i.d. N(0, ``sigma``²) noise is added.
+
+    A fixed ``frac`` fraction of devices is faulty (hashed membership, like
+    the straggler tail); each faulty device fires i.i.d. with probability
+    ``prob`` per iteration, starting at iteration ``t0``.
+    """
+    mode: str = "nan_burst"
+    frac: float = 0.2          # fraction of devices that are faulty
+    prob: float = 0.5          # per-iteration firing probability
+    t0: int = 0                # first iteration at which faults can fire
+    scale: float = 25.0        # 'scale' mode multiplier
+    sigma: float = 1.0         # 'gauss_noise' mode std deviation
+
+    @property
+    def modes(self) -> tuple:
+        return tuple(s.strip() for s in self.mode.split("+"))
+
+    def __post_init__(self):
+        for m in self.modes:
+            if m not in CORRUPTION_MODES:
+                raise ValueError(
+                    f"unknown corruption mode: {m!r} (expected '+'-joined "
+                    f"names from {CORRUPTION_MODES})")
+        if not 0.0 <= self.frac <= 1.0:
+            raise ValueError(f"frac must be a probability in [0, 1], "
+                             f"got {self.frac}")
+        if not 0.0 < self.prob <= 1.0:
+            raise ValueError(f"prob must be in (0, 1], got {self.prob}")
+        if self.t0 < 0:
+            raise ValueError(f"t0 must be >= 0, got {self.t0}")
+        if self.scale <= 0:
+            raise ValueError(f"scale must be > 0, got {self.scale}")
+        if self.sigma <= 0:
+            raise ValueError(f"sigma must be > 0, got {self.sigma}")
+
+
+def make_corruption_fn(corrupt: CorruptionConfig | None, seed: int,
+                       num_devices: int):
+    """Build ``corrupt_fn(grads, t, ids) -> (grads', hit)`` for one schedule.
+
+    ``grads`` is a stacked per-member gradient pytree (leaves (D, ...)),
+    ``ids`` the (D,) flat device ids those members belong to (gid·K + k),
+    ``t`` the traced iteration index. Returns the corrupted stack and the
+    (D,) float32 ground-truth hit mask (1 where the member's gradient was
+    corrupted this iteration). Pure and jittable — vmappable over groups and
+    scannable over t; faulty-device membership and per-device mode
+    assignment are precomputed once over ``num_devices`` at build time.
+    ``corrupt=None`` returns None (callers keep the exact corruption-free
+    code path, DESIGN.md §15.5 bit-identity).
+    """
+    if corrupt is None:
+        return None
+    modes = corrupt.modes
+    base_key = jax.random.fold_in(jax.random.PRNGKey(seed), 606)
+    all_ids = jnp.arange(num_devices, dtype=jnp.int32)
+    faulty = jax.vmap(lambda i: jax.random.bernoulli(
+        jax.random.fold_in(jax.random.fold_in(base_key, 1), i),
+        corrupt.frac))(all_ids)                            # (D,) bool
+    mode_idx = jax.vmap(lambda i: jax.random.randint(
+        jax.random.fold_in(jax.random.fold_in(base_key, 2), i),
+        (), 0, len(modes)))(all_ids)                       # (D,) int32
+    k_fire = jax.random.fold_in(base_key, 3)
+    k_noise = jax.random.fold_in(base_key, 4)
+
+    def corrupt_fn(grads, t, ids):
+        def fire(i):
+            kd = jax.random.fold_in(jax.random.fold_in(k_fire, i), t)
+            return jax.random.bernoulli(kd, corrupt.prob)
+        hit = (faulty[ids] & jax.vmap(fire)(ids)
+               & (t >= corrupt.t0)).astype(jnp.float32)    # (D,)
+        midx = mode_idx[ids]
+        nkeys = None
+        if "gauss_noise" in modes:
+            nkeys = jax.vmap(lambda i: jax.random.fold_in(
+                jax.random.fold_in(k_noise, i), t))(ids)
+        leaves, treedef = jax.tree.flatten(grads)
+
+        def bc(v, leaf):
+            return v.reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+        out = []
+        for li, leaf in enumerate(leaves):
+            x = leaf.astype(jnp.float32)
+            cands = []
+            for m in modes:
+                if m == "nan_burst":
+                    cands.append(jnp.full_like(x, jnp.nan))
+                elif m == "inf_spike":
+                    cands.append(jnp.full_like(x, jnp.inf))
+                elif m == "scale":
+                    cands.append(corrupt.scale * x)
+                elif m == "sign_flip":
+                    cands.append(-x)
+                else:  # gauss_noise — per (device, t, leaf) keys
+                    noise = jax.vmap(lambda kk, xe: jax.random.normal(
+                        jax.random.fold_in(kk, li), xe.shape))(nkeys, x)
+                    cands.append(x + corrupt.sigma * noise)
+            sel = cands[0]
+            for j in range(1, len(modes)):
+                sel = jnp.where(bc(midx == j, leaf), cands[j], sel)
+            out.append(jnp.where(bc(hit > 0, leaf), sel, x)
+                       .astype(leaf.dtype))
+        return jax.tree.unflatten(treedef, out), hit
+
+    return corrupt_fn
 
 
 # ---------------------------------------------------------------------------

@@ -4,6 +4,8 @@
 - flash_attention: blocked causal/windowed attention (serving + LM training)
 - ssd_scan:        Mamba2 chunked SSD scan (assigned SSM/hybrid archs)
 - agg_weighted:    BS-side weighted model aggregation (Eqs. 4/5)
+- robust_agg:      robust Eq. 4 aggregation — rank-selection trimmed mean /
+                   coordinate median over the member stack (DESIGN.md §15.2)
 
 Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper; auto-interpret on CPU), ref.py (pure-jnp oracle).

@@ -1,0 +1,83 @@
+"""Jit'd wrapper: pytree-level robust aggregation via the Pallas kernels.
+
+Drop-in for ``core.sync.robust_aggregate`` (same contract, DESIGN.md §15.2):
+flattens the stacked member pytree into one (K, P) buffer, computes the
+member finite/active masks and (for ``clip_norm``) the per-member clip
+factors with plain jnp — O(K) scalars, not worth a kernel — then routes the
+O(K·P) reduction through a kernel:
+
+* ``mean`` / ``clip_norm`` are weighted sums after per-member reweighting,
+  so they reuse the existing ``agg_weighted`` matmul kernel with effective
+  weights ``w·finite·min(1, clip/‖g‖) / Σ(w·finite)``.
+* ``trimmed_mean`` / ``coord_median`` need per-coordinate order statistics
+  and run the rank-selection kernel in ``kernel.py``.
+
+Zero-padding the flattened axis is safe for every method: padded coordinates
+are independent columns whose outputs are discarded on unflatten.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..agg_weighted import ops as agg_ops
+from ..common import pad_to, use_interpret
+from . import kernel
+
+PyTree = Any
+
+_EPS = 1e-12
+
+
+def _flatten(trees: PyTree):
+    leaves, treedef = jax.tree.flatten(trees)
+    k = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [l.reshape(k, -1).astype(jnp.float32) for l in leaves], axis=1)
+    return flat, leaves, treedef
+
+
+def _unflatten(out: jax.Array, leaves, treedef) -> PyTree:
+    parts, off = [], 0
+    for leaf in leaves:
+        sz = leaf.size // leaf.shape[0]
+        parts.append(out[off:off + sz].reshape(leaf.shape[1:])
+                     .astype(leaf.dtype))
+        off += sz
+    return jax.tree.unflatten(treedef, parts)
+
+
+def robust_aggregate_tree(grads: PyTree, weights: jax.Array, *,
+                          method: str, clip: float = 10.0, trim: int = 1,
+                          block_p: int = 512,
+                          interpret: bool | None = None) -> PyTree:
+    """Same contract as ``core.sync.robust_aggregate`` (leaves (K, ...))."""
+    if method == "mean":
+        # the historical kernel path, bit-identical to agg_weighted — NaN
+        # members propagate by design (the non-robust baseline)
+        return agg_ops.weighted_average_tree(
+            grads, weights, block_p=block_p, interpret=interpret)
+    flat, leaves, treedef = _flatten(grads)
+    finite = jnp.all(jnp.isfinite(flat), axis=1)
+    w = weights.astype(jnp.float32) * finite.astype(jnp.float32)
+    clean = jnp.where(finite[:, None], flat, 0.0)
+    if method == "clip_norm":
+        # weighted sum at effective weights (w·finite·factor)/Σ(w·finite)
+        # == sync.clip_norm_agg — route through the agg_weighted matmul
+        # kernel on the sanitized stack
+        norms = jnp.sqrt(jnp.sum(clean * clean, axis=1))
+        factor = jnp.minimum(1.0, clip / jnp.maximum(norms, _EPS))
+        eff = w * factor / jnp.maximum(jnp.sum(w), _EPS)
+        out = agg_ops.agg_flat(clean, eff, block_p=block_p,
+                               interpret=interpret)
+        return _unflatten(out, leaves, treedef)
+    k, p = flat.shape
+    pp = pad_to(p, block_p)
+    buf = jnp.pad(flat, ((0, 0), (0, pp - p)))
+    active = (weights.astype(jnp.float32) > 0) & finite
+    out = kernel.robust_agg_kernel(
+        buf, active.astype(jnp.float32), method=method, trim=trim,
+        block_p=block_p, interpret=use_interpret(interpret))
+    return _unflatten(out[:p], leaves, treedef)

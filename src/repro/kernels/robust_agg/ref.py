@@ -1,0 +1,37 @@
+"""Oracle for the order-statistics aggregators over a flat member stack.
+
+Sort-based, mirroring ``core.sync``'s pytree implementations on a (K, P)
+buffer: inactive members are pushed to +max so an ascending sort ranks them
+last, then the trim window / median order statistics are taken per column.
+"""
+import jax.numpy as jnp
+
+_BIG = jnp.float32(jnp.finfo(jnp.float32).max)
+
+
+def _sorted_active(stacked, active):
+    v = jnp.where(active.astype(bool)[:, None], stacked.astype(jnp.float32),
+                  _BIG)
+    return jnp.sort(v, axis=0), jnp.sum(active.astype(jnp.int32))
+
+
+def trimmed_mean_ref(stacked, active, trim):
+    """(K, P) stack, (K,) 0/1 active mask -> (P,) trimmed mean."""
+    asc, n = _sorted_active(stacked, active)
+    k = asc.shape[0]
+    t_eff = jnp.minimum(jnp.int32(trim), jnp.maximum((n - 1) // 2, 0))
+    idx = jnp.arange(k, dtype=jnp.int32)[:, None]
+    inc = (idx >= t_eff) & (idx < n - t_eff)
+    cnt = jnp.maximum(n - 2 * t_eff, 1).astype(jnp.float32)
+    out = jnp.sum(jnp.where(inc, asc, 0.0), axis=0) / cnt
+    return jnp.where(n > 0, out, 0.0)
+
+
+def coord_median_ref(stacked, active):
+    """(K, P) stack, (K,) 0/1 active mask -> (P,) coordinate median."""
+    asc, n = _sorted_active(stacked, active)
+    k = asc.shape[0]
+    lo = jnp.maximum((n - 1) // 2, 0)
+    hi = jnp.minimum(n // 2, k - 1)
+    out = (jnp.take(asc, lo, axis=0) + jnp.take(asc, hi, axis=0)) * 0.5
+    return jnp.where(n > 0, out, 0.0)

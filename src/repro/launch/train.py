@@ -33,6 +33,16 @@ members at γ^staleness weight instead of dropping them:
   PYTHONPATH=src python -m repro.launch.train --engine fused \
       --avail markov --avail-up-prob 0.6 --sync bounded_async \
       --reselect-every 10
+
+Corruption robustness (DESIGN.md §15): ``--corrupt`` injects gradient
+faults (NaN bursts, Inf spikes, scaled/flipped/noisy gradients) into a
+deterministic faulty-device subset; ``--robust-agg`` swaps the Eq. 4
+internal sync for a robust aggregator, and repeat offenders are
+quarantined out of GBP-CS after ``--quarantine-limit`` flags:
+
+  PYTHONPATH=src python -m repro.launch.train --engine fused \
+      --corrupt scale+nan_burst --corrupt-frac 0.2 \
+      --robust-agg trimmed_mean --quarantine-limit 3
 """
 from __future__ import annotations
 
@@ -47,11 +57,14 @@ import jax
 from repro import checkpoint as ckpt_lib
 from repro.configs import femnist_cnn
 from repro.core import baselines, fedgs
+from repro.core import sync as sync_lib
 from repro.data import (AVAILABILITY_SCHEDULES, AvailabilityConfig,
-                        DRIFT_SCHEDULES, DeviceBackedStreams, DeviceStream,
-                        DriftConfig, FactoryStreams, HostClientPool,
-                        PartitionConfig, femnist, make_availability_fn,
-                        make_client_pool, make_device_sampler, make_partition)
+                        CORRUPTION_MODES, CorruptionConfig, DRIFT_SCHEDULES,
+                        DeviceBackedStreams, DeviceStream, DriftConfig,
+                        FactoryStreams, HostClientPool, PartitionConfig,
+                        femnist, make_availability_fn, make_client_pool,
+                        make_corruption_fn, make_device_sampler,
+                        make_partition)
 from repro.launch.mesh import make_group_mesh
 from repro.models import cnn
 
@@ -136,6 +149,36 @@ def main() -> None:
                     default="aware",
                     help="whether GBP-CS sees the up-mask (aware) or "
                          "ignores it (blind — the ablation baseline)")
+    ap.add_argument("--corrupt", default="none",
+                    help="gradient corruption mode(s), '+'-joined from "
+                         f"{CORRUPTION_MODES} (DESIGN.md §15.1; 'none' "
+                         "disables injection; fedgs only)")
+    ap.add_argument("--corrupt-frac", type=float, default=0.2,
+                    help="fraction of devices that are faulty")
+    ap.add_argument("--corrupt-prob", type=float, default=0.5,
+                    help="per-iteration fault firing probability of a "
+                         "faulty device")
+    ap.add_argument("--corrupt-t0", type=int, default=0,
+                    help="first internal iteration faults can fire")
+    ap.add_argument("--corrupt-scale", type=float, default=25.0,
+                    help="scale mode: gradient blow-up factor")
+    ap.add_argument("--corrupt-sigma", type=float, default=1.0,
+                    help="gauss_noise mode: additive noise stddev")
+    ap.add_argument("--robust-agg", choices=sync_lib.ROBUST_AGGREGATORS,
+                    default="mean",
+                    help="Eq. 4 internal aggregator (DESIGN.md §15.2; "
+                         "'mean' is the exact historical path)")
+    ap.add_argument("--robust-clip", type=float, default=10.0,
+                    help="clip_norm: per-member gradient L2 norm cap (also "
+                         "the outlier-flag threshold for quarantine)")
+    ap.add_argument("--robust-trim", type=int, default=1,
+                    help="trimmed_mean: members trimmed per extreme end")
+    ap.add_argument("--quarantine-limit", type=int, default=3,
+                    help="outlier flags before a device is barred from "
+                         "selection (0 disables quarantine)")
+    ap.add_argument("--no-nan-guard", action="store_true",
+                    help="disable the per-iteration NaN/Inf rollback guard "
+                         "(DESIGN.md §15.3)")
     ap.add_argument("--init", choices=("mpinv", "zero", "random"),
                     default="mpinv")
     ap.add_argument("--alpha", type=float, default=0.3, help="Dirichlet skew")
@@ -172,6 +215,10 @@ def main() -> None:
         if not math.isnan(rec.staleness_mean):
             msg += (f" | stale {rec.staleness_mean:.2f}"
                     f"/{rec.staleness_max:.0f}")
+        if not math.isnan(rec.clipped_fraction):
+            msg += (f" | corr {rec.corrupted_selected:.0f}"
+                    f" | clip {rec.clipped_fraction:.2f}"
+                    f" | rb {rec.rollbacks:.0f}")
         if rec.test_accuracy is not None:
             msg += (f" | test acc {rec.test_accuracy:.4f} "
                     f"loss {rec.test_loss:.4f}")
@@ -189,6 +236,12 @@ def main() -> None:
             slow_factor=args.avail_slow_factor,
             deadline=args.avail_deadline),
         args.seed, args.groups * args.devices_per_group)
+    corrupt_fn = None if args.corrupt == "none" else make_corruption_fn(
+        CorruptionConfig(
+            mode=args.corrupt, frac=args.corrupt_frac,
+            prob=args.corrupt_prob, t0=args.corrupt_t0,
+            scale=args.corrupt_scale, sigma=args.corrupt_sigma),
+        args.seed, args.groups * args.devices_per_group)
 
     if args.strategy == "fedgs":
         fcfg = fedgs.FedGSConfig(
@@ -200,7 +253,11 @@ def main() -> None:
             kernel_backend=args.kernel_backend,
             reselect_every=args.reselect_every, sync=args.sync,
             gamma=args.gamma, max_staleness=args.max_staleness,
-            avail_selection=args.avail_selection)
+            avail_selection=args.avail_selection,
+            robust_agg=args.robust_agg, robust_clip=args.robust_clip,
+            robust_trim=args.robust_trim,
+            quarantine_limit=args.quarantine_limit,
+            nan_guard=not args.no_nan_guard)
         if args.engine == "host":
             if drift is None:
                 streams = FactoryStreams(part, batch_size=args.batch_size,
@@ -215,7 +272,7 @@ def main() -> None:
                     drift=drift))
             final, _ = fedgs.run_fedgs(
                 params, cnn.loss_fn, streams, part.p_real, fcfg,
-                avail_fn=avail_fn, eval_fn=eval_fn,
+                avail_fn=avail_fn, corrupt_fn=corrupt_fn, eval_fn=eval_fn,
                 eval_every=args.eval_every, log_fn=log_fn)
         else:
             sampler = make_device_sampler(DeviceStream.from_partition(
@@ -228,13 +285,14 @@ def main() -> None:
             # bodies would blow up compile time (DESIGN.md §12.2)
             final, _ = fedgs.run_fedgs_fused(
                 params, cnn.loss_fn, sampler, part.p_real, fcfg, mesh=mesh,
-                avail_fn=avail_fn, eval_fn=eval_fn,
+                avail_fn=avail_fn, corrupt_fn=corrupt_fn, eval_fn=eval_fn,
                 eval_every=args.eval_every, log_fn=log_fn,
                 chunk=args.eval_chunk,
                 unroll=0 if args.eval_chunk == 1 else 1)
     else:
         for flag in ("train_step", "kernel_backend", "selection", "init",
-                     "reselect_every", "avail", "sync"):
+                     "reselect_every", "avail", "sync", "corrupt",
+                     "robust_agg", "quarantine_limit"):
             if getattr(args, flag) != ap.get_default(flag):
                 print(f"warning: --{flag.replace('_', '-')} applies only to "
                       f"--strategy fedgs; ignored for {args.strategy}",

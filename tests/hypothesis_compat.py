@@ -47,8 +47,11 @@ except ImportError:
             if c not in cases:
                 cases.append(c)
 
+        # parametrize with a single name expects scalars, not 1-tuples
+        flat = [c[0] for c in cases] if len(names) == 1 else cases
+
         def deco(fn):
-            @pytest.mark.parametrize(",".join(names), cases)
+            @pytest.mark.parametrize(",".join(names), flat)
             @functools.wraps(fn)
             def wrapper(*args, **kw):
                 return fn(*args, **kw)

@@ -35,6 +35,7 @@ def test_design_has_sections():
     assert len(secs) >= 14, f"suspiciously few DESIGN.md headings: {secs}"
     assert "13" in secs, "DESIGN.md §13 (dynamic environments) missing"
     assert "14" in secs, "DESIGN.md §14 (device availability) missing"
+    assert "15" in secs, "DESIGN.md §15 (corruption robustness) missing"
 
 
 def test_all_design_references_resolve():
@@ -55,3 +56,14 @@ def test_readme_documents_dynamic_environments():
     layout = readme[readme.index("## Repository layout"):]
     for mod in ("engine.py", "dispatch.py", "streaming.py", "fedgs.py"):
         assert mod in layout, f"README repository layout missing {mod}"
+
+
+def test_readme_documents_robustness():
+    """README's robustness quickstart must mention the corruption/robust
+    flags the CLI actually exposes."""
+    readme = (REPO / "README.md").read_text()
+    for flag in ("--corrupt", "--corrupt-frac", "--robust-agg",
+                 "--robust-clip", "--quarantine-limit"):
+        assert flag in readme, f"README missing {flag} quickstart"
+    for word in ("nan_burst", "clip_norm", "trimmed_mean", "rollback"):
+        assert word in readme, f"README robustness section missing {word}"

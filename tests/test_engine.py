@@ -190,7 +190,9 @@ def test_round_record_typed_log():
     assert set(d) == {"round", "loss", "divergence", "test_loss",
                       "test_accuracy", "strategy", "group_discrepancy",
                       "selection_distance", "reselections", "participation",
-                      "staleness_mean", "staleness_max", "dark_selected"}
+                      "staleness_mean", "staleness_max", "dark_selected",
+                      "corrupted_selected", "clipped_fraction", "rollbacks",
+                      "agg_residual"}
     # NaN telemetry slots (strategies without them) -> None, JSON-safe
     assert d["group_discrepancy"] is None and d["reselections"] is None
     assert d["participation"] is None and d["staleness_max"] is None

@@ -1,0 +1,530 @@
+"""Robustness subsystem (DESIGN.md §15): corruption + robust aggregation.
+
+Covers the ISSUE 7 acceptance surface: host == fused == sharded parity to
+1e-5 under corruption × robust-aggregator combinations; EXACT (0.0)
+bit-identity of the default path (``robust_agg='mean'``, no ``corrupt_fn``)
+with the pre-robustness engine; the NaN guard rolls back poisoned
+iterations and keeps parameters finite; quarantine bars repeat offenders
+from selection. Property-based tests (via the ``hypothesis_compat`` shim)
+check corruption-schedule purity across call/vmap/scan, aggregator
+permutation invariance, the exact breakdown point of the order-statistics
+aggregators, and the bitwise clip_norm no-op below threshold. The eps
+regression tests pin the ``sync.EPS`` guards (zero total weight, negative
+staleness).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+from repro.core import baselines, dispatch, fedgs, selection, sync
+from repro.data import (CORRUPTION_MODES, AvailabilityConfig,
+                        CorruptionConfig, DeviceBackedStreams, DeviceStream,
+                        PartitionConfig, make_availability_fn,
+                        make_corruption_fn, make_device_sampler,
+                        make_partition)
+from repro.kernels.robust_agg import ops as robust_ops
+
+CFG = dict(num_groups=4, devices_per_group=8, num_selected=4,
+           num_presampled=1, iters_per_round=4, rounds=3, lr=0.05,
+           batch_size=8, gbp_max_iters=16)
+N_DEV = CFG["num_groups"] * CFG["devices_per_group"]
+
+_PROBE = baselines.linear_probe_model()
+
+
+def linear_loss(params, batch):
+    x, y = batch
+    return baselines.softmax_xent(_PROBE.apply(params, x), y)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    part = make_partition(PartitionConfig(num_factories=4,
+                                          devices_per_factory=8, seed=0))
+    stream = DeviceStream.from_partition(part, batch_size=8, seed=0)
+    params = _PROBE.init(jax.random.PRNGKey(0))
+    return part, stream, params
+
+
+def _max_diff(a, b):
+    return max(jax.tree.leaves(
+        jax.tree.map(lambda x, y: float(jnp.abs(x - y).max()), a, b)))
+
+
+def _finite(tree) -> bool:
+    return all(bool(np.isfinite(np.asarray(leaf)).all())
+               for leaf in jax.tree.leaves(tree))
+
+
+def _grad_tree(key, k, shapes=((3,), (2, 4))):
+    keys = jax.random.split(key, len(shapes))
+    return tuple(jax.random.normal(kk, (k,) + s)
+                 for kk, s in zip(keys, shapes))
+
+
+# ---------------------------------------------------------------------------
+# Config validation.
+# ---------------------------------------------------------------------------
+
+def test_corruption_config_validates():
+    with pytest.raises(ValueError, match="corruption mode"):
+        CorruptionConfig(mode="meteor_strike")
+    with pytest.raises(ValueError, match="corruption mode"):
+        CorruptionConfig(mode="scale+meteor_strike")
+    with pytest.raises(ValueError, match="frac"):
+        CorruptionConfig(frac=1.5)
+    with pytest.raises(ValueError, match="prob"):
+        CorruptionConfig(prob=0.0)
+    with pytest.raises(ValueError, match="t0"):
+        CorruptionConfig(t0=-1)
+    with pytest.raises(ValueError, match="scale"):
+        CorruptionConfig(scale=0.0)
+    with pytest.raises(ValueError, match="sigma"):
+        CorruptionConfig(sigma=-1.0)
+    assert CorruptionConfig(mode="scale+nan_burst").modes == \
+        ("scale", "nan_burst")
+
+
+def test_fedgs_config_validates_robust():
+    with pytest.raises(ValueError, match="robust_agg"):
+        fedgs.FedGSConfig(**CFG, robust_agg="geometric_median")
+    with pytest.raises(ValueError, match="grad_avg"):
+        fedgs.FedGSConfig(**CFG, robust_agg="coord_median",
+                          train_step="model_avg")
+    with pytest.raises(ValueError, match="robust_clip"):
+        fedgs.FedGSConfig(**CFG, robust_clip=0.0)
+    with pytest.raises(ValueError, match="robust_trim"):
+        fedgs.FedGSConfig(**CFG, robust_trim=-1)
+    with pytest.raises(ValueError, match="quarantine_limit"):
+        fedgs.FedGSConfig(**CFG, quarantine_limit=-2)
+    # 'mean' + model_avg stays legal (the historical path)
+    fedgs.FedGSConfig(**CFG, train_step="model_avg")
+
+
+def test_make_corruption_fn_none_passthrough():
+    assert make_corruption_fn(None, 0, N_DEV) is None
+
+
+# ---------------------------------------------------------------------------
+# Corruption schedule semantics.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", CORRUPTION_MODES)
+def test_corruption_modes_do_what_they_say(mode):
+    """Each mode's hit gradients carry its signature fault; misses are
+    bit-untouched."""
+    cfun = make_corruption_fn(
+        CorruptionConfig(mode=mode, frac=0.5, prob=1.0, scale=7.0),
+        0, N_DEV)
+    ids = jnp.arange(N_DEV, dtype=jnp.int32)
+    grads = _grad_tree(jax.random.PRNGKey(1), N_DEV)
+    out, hit = cfun(grads, jnp.int32(2), ids)
+    hit = np.asarray(hit)
+    assert 0 < hit.sum() < N_DEV          # frac=0.5: some hit, some missed
+    for g, o in zip(grads, out):
+        g, o = np.asarray(g), np.asarray(o)
+        np.testing.assert_array_equal(g[~hit.astype(bool)],
+                                      o[~hit.astype(bool)])
+        bad = o[hit.astype(bool)]
+        ref = g[hit.astype(bool)]
+        if mode == "nan_burst":
+            assert np.isnan(bad).all()
+        elif mode == "inf_spike":
+            assert np.isinf(bad).all()
+        elif mode == "scale":
+            np.testing.assert_allclose(bad, 7.0 * ref, rtol=1e-6)
+        elif mode == "sign_flip":
+            np.testing.assert_array_equal(bad, -ref)
+        else:  # gauss_noise
+            assert np.isfinite(bad).all() and (bad != ref).any()
+
+
+def test_corruption_t0_and_seed_semantics():
+    """No faults before t0; the faulty set is pure in the seed and varies
+    across seeds."""
+    cfg = CorruptionConfig(mode="scale", frac=0.5, prob=1.0, t0=5)
+    cfun = make_corruption_fn(cfg, 0, N_DEV)
+    ids = jnp.arange(N_DEV, dtype=jnp.int32)
+    grads = _grad_tree(jax.random.PRNGKey(1), N_DEV)
+    _, hit_early = cfun(grads, jnp.int32(4), ids)
+    _, hit_late = cfun(grads, jnp.int32(5), ids)
+    assert not np.asarray(hit_early).any()
+    assert np.asarray(hit_late).any()
+    # same seed twice == identical; different seed differs somewhere over t
+    c0 = make_corruption_fn(dataclasses.replace(cfg, t0=0), 0, N_DEV)
+    c0b = make_corruption_fn(dataclasses.replace(cfg, t0=0), 0, N_DEV)
+    c1 = make_corruption_fn(dataclasses.replace(cfg, t0=0), 1, N_DEV)
+    hits0 = np.stack([np.asarray(c0(grads, jnp.int32(t), ids)[1])
+                      for t in range(6)])
+    hits0b = np.stack([np.asarray(c0b(grads, jnp.int32(t), ids)[1])
+                       for t in range(6)])
+    hits1 = np.stack([np.asarray(c1(grads, jnp.int32(t), ids)[1])
+                      for t in range(6)])
+    np.testing.assert_array_equal(hits0, hits0b)
+    assert (hits0 != hits1).any()
+
+
+def test_corruption_mixed_mode_covers_both():
+    """'scale+nan_burst' fires both fault types across the trace."""
+    cfun = make_corruption_fn(
+        CorruptionConfig(mode="scale+nan_burst", frac=0.6, prob=1.0,
+                         scale=9.0), 0, N_DEV)
+    ids = jnp.arange(N_DEV, dtype=jnp.int32)
+    grads = _grad_tree(jax.random.PRNGKey(1), N_DEV)
+    saw_nan = saw_scale = False
+    for t in range(8):
+        out, hit = cfun(grads, jnp.int32(t), ids)
+        h = np.asarray(hit).astype(bool)
+        bad = np.asarray(out[0])[h]
+        ref = np.asarray(grads[0])[h]
+        row_nan = np.isnan(bad).all(axis=-1)
+        saw_nan |= bool(row_nan.any())
+        saw_scale |= bool((np.abs(bad[~row_nan])
+                           > 3 * np.abs(ref[~row_nan])).all())
+    assert saw_nan and saw_scale
+
+
+@settings(deadline=None, max_examples=8)
+@given(seed=st.integers(0, 5), t=st.integers(0, 12))
+def test_property_corruption_purity(seed, t):
+    """The fault trace is a pure function of (flat id, t, seed): direct
+    call, vmap over a singleton axis, and lax.scan replay agree exactly —
+    the property that lets host, fused and sharded engines face the same
+    faults."""
+    cfun = make_corruption_fn(
+        CorruptionConfig(mode="scale+gauss_noise", frac=0.4, prob=0.7),
+        seed, N_DEV)
+    ids = jnp.arange(N_DEV, dtype=jnp.int32)
+    grads = _grad_tree(jax.random.PRNGKey(seed), N_DEV)
+    direct, hit_d = cfun(grads, jnp.int32(t), ids)
+    vm_out, hit_v = jax.vmap(lambda g, tt: cfun(g, tt, ids))(
+        jax.tree.map(lambda x: x[None], grads), jnp.int32(t)[None])
+    _, (sc_out, hit_s) = jax.lax.scan(
+        lambda c, tt: (c, cfun(grads, tt, ids)),
+        0, jnp.arange(t + 1, dtype=jnp.int32))
+    assert _max_diff(jnp.nan_to_num(direct[0]),
+                     jnp.nan_to_num(vm_out[0][0])) == 0.0
+    # the scan replay compiles the noise math fused differently than the
+    # eager call (1-ULP drift on gauss_noise); the HIT trace below is the
+    # exact cross-engine contract, values match to f32 resolution
+    assert _max_diff(jnp.nan_to_num(direct[0]),
+                     jnp.nan_to_num(jax.tree.map(lambda x: x[t], sc_out)[0])
+                     ) < 1e-6
+    np.testing.assert_array_equal(np.asarray(hit_d), np.asarray(hit_v[0]))
+    np.testing.assert_array_equal(np.asarray(hit_d), np.asarray(hit_s[t]))
+
+
+# ---------------------------------------------------------------------------
+# Robust aggregators (sync.py reference semantics).
+# ---------------------------------------------------------------------------
+
+def test_robust_aggregate_validates():
+    with pytest.raises(ValueError, match="robust_agg"):
+        sync.check_robust_agg("winsorized")
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(0, 10), k=st.integers(3, 9))
+def test_property_permutation_invariance(seed, k):
+    """Order-statistics aggregators don't care who speaks first: permuting
+    (members, weights) together leaves the aggregate unchanged (up to f32
+    reduction order)."""
+    key = jax.random.PRNGKey(seed)
+    grads = _grad_tree(key, k)
+    w = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (k,))) + 0.1
+    perm = jax.random.permutation(jax.random.fold_in(key, 2), k)
+    pg = jax.tree.map(lambda x: x[perm], grads)
+    for method in ("trimmed_mean", "coord_median"):
+        a = sync.robust_aggregate(grads, w, method, trim=1)
+        b = sync.robust_aggregate(pg, w[perm], method, trim=1)
+        assert _max_diff(a, b) < 1e-6, method
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(0, 10), n_bad=st.integers(0, 3))
+def test_property_breakdown_point(seed, n_bad):
+    """EXACT breakdown point: with k=8 identical clean members and up to
+    ⌊(k-1)/2⌋=3 arbitrarily corrupted ones, trimmed_mean (trim=3) and
+    coord_median recover the clean value to 0.0 — the order statistics
+    land entirely inside the clean mass."""
+    k = 8
+    key = jax.random.PRNGKey(seed)
+    clean = _grad_tree(key, 1)
+    stacked = jax.tree.map(lambda x: jnp.repeat(x, k, axis=0), clean)
+    poison = jax.random.choice(jax.random.fold_in(key, 1),
+                               jnp.array([jnp.nan, jnp.inf, 1e30, -1e30]),
+                               (n_bad,))
+    bad = jax.tree.map(
+        lambda x: x.at[:n_bad].set(poison.reshape(
+            (n_bad,) + (1,) * (x.ndim - 1))), stacked)
+    w = jnp.ones((k,), jnp.float32)
+    want = jax.tree.map(lambda x: x[0], clean)
+    for method, kw in (("trimmed_mean", dict(trim=3)),
+                       ("coord_median", {})):
+        got = sync.robust_aggregate(bad, w, method, **kw)
+        assert _max_diff(got, want) == 0.0, (method, n_bad)
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(0, 10))
+def test_property_clip_norm_noop_below_threshold(seed):
+    """clip_norm with every member under the threshold is BITWISE the plain
+    weighted average: the clip factor is exactly 1.0 and x*1.0 is exact."""
+    k = 6
+    key = jax.random.PRNGKey(seed)
+    grads = _grad_tree(key, k)
+    w = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (k,))) + 0.1
+    norms = sync.member_norms(grads)
+    clip = float(jnp.max(norms)) * 2.0
+    got = sync.robust_aggregate(grads, w, "clip_norm", clip=clip)
+    want = sync.weighted_average(grads, w)
+    assert _max_diff(got, want) == 0.0
+
+
+def test_clip_norm_caps_outliers():
+    """A blown-up member is scaled back to the clip sphere; honest members
+    are untouched."""
+    k = 4
+    grads = _grad_tree(jax.random.PRNGKey(0), k)
+    big = jax.tree.map(lambda x: x.at[0].mul(1e4), grads)
+    w = jnp.ones((k,), jnp.float32)
+    norms = sync.member_norms(grads)
+    clip = float(jnp.max(norms)) * 1.5     # honest members fit, row 0 not
+    got = sync.robust_aggregate(big, w, "clip_norm", clip=clip)
+    assert _finite(got)
+    # the clipped aggregate stays within the all-honest envelope
+    honest = sync.weighted_average(grads, w)
+    bound = clip / k + _max_diff(honest, jax.tree.map(jnp.zeros_like, honest))
+    assert _max_diff(got, jax.tree.map(jnp.zeros_like, got)) <= bound + 1e-5
+
+
+def test_nonfinite_members_excluded_and_flagged():
+    """member_finite/member_outlier_flags spot NaN/Inf rows; every robust
+    aggregator (and the sanitized mean) returns finite output, and an
+    all-poisoned stack degrades to the zero tree (params freeze)."""
+    k = 5
+    grads = _grad_tree(jax.random.PRNGKey(0), k)
+    bad = jax.tree.map(lambda x: x.at[1].set(jnp.nan).at[3].set(jnp.inf),
+                       grads)
+    fin = np.asarray(sync.member_finite(bad))
+    np.testing.assert_array_equal(fin, [True, False, True, False, True])
+    flags = np.asarray(sync.member_outlier_flags(bad, clip=1e9))
+    np.testing.assert_array_equal(flags, [0.0, 1.0, 0.0, 1.0, 0.0])
+    w = jnp.ones((k,), jnp.float32)
+    for method in ("clip_norm", "trimmed_mean", "coord_median"):
+        assert _finite(sync.robust_aggregate(bad, w, method)), method
+    allbad = jax.tree.map(lambda x: x * jnp.nan, grads)
+    for method in ("clip_norm", "trimmed_mean", "coord_median"):
+        z = sync.robust_aggregate(allbad, w, method)
+        assert _max_diff(z, jax.tree.map(jnp.zeros_like, z)) == 0.0, method
+
+
+# ---------------------------------------------------------------------------
+# eps-guard regressions (sync.EPS).
+# ---------------------------------------------------------------------------
+
+def test_weighted_average_zero_total_weight_is_finite():
+    """Σw = 0 returns finite zeros, not 0/0 NaNs — the regression the EPS
+    denominator guard pins (an all-dark or all-quarantined committee)."""
+    grads = _grad_tree(jax.random.PRNGKey(0), 4)
+    out = sync.weighted_average(grads, jnp.zeros((4,), jnp.float32))
+    assert _finite(out)
+    assert _max_diff(out, jax.tree.map(jnp.zeros_like, out)) == 0.0
+
+
+def test_staleness_weights_clamp_negative():
+    """γ^s is clamped at s=0: a (buggy or adversarial) negative staleness
+    must not AMPLIFY a gradient (γ<1 ⇒ γ^{-s} > 1)."""
+    w = sync.staleness_weights(jnp.array([-3.0, -1.0, 0.0, 2.0]), 0.5)
+    np.testing.assert_allclose(np.asarray(w), [1.0, 1.0, 1.0, 0.25])
+    assert float(jnp.max(w)) <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Kernel backend parity (jnp vs pallas-interpret).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ("mean", "clip_norm", "trimmed_mean",
+                                    "coord_median"))
+def test_kernel_matches_sync_reference(method):
+    """dispatch.robust_agg_fn('pallas', m) == robust_agg_fn('jnp', m) on
+    clean and poisoned stacks (order statistics match exactly; the matmul
+    paths to f32 tolerance)."""
+    k = 7
+    grads = _grad_tree(jax.random.PRNGKey(3), k, shapes=((33,), (5, 11)))
+    bad = jax.tree.map(lambda x: x.at[2].set(jnp.nan).at[5].mul(1e4), grads)
+    w = jnp.abs(jax.random.normal(jax.random.PRNGKey(4), (k,))) + 0.1
+    fj = dispatch.robust_agg_fn("jnp", method, clip=3.0, trim=2)
+    fp = dispatch.robust_agg_fn("pallas", method, clip=3.0, trim=2)
+    for stack in (grads, bad):
+        a, b = fj(stack, w), fp(stack, w)
+        if stack is bad and method == "mean":
+            # the plain mean propagates the NaN in BOTH backends (that's
+            # the point of the robust methods) — the backends must agree
+            # on where, and everywhere else
+            for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+                np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                           atol=1e-6, equal_nan=True)
+            continue
+        assert _max_diff(a, b) < 1e-6, method
+        if stack is bad:
+            assert _finite(b), method
+
+
+def test_kernel_tree_roundtrip_ragged_sizes():
+    """The flatten/pad/unflatten wrapper is exact for leaf sizes that don't
+    divide block_p."""
+    k = 5
+    grads = _grad_tree(jax.random.PRNGKey(5), k, shapes=((7,), (3, 5), (1,)))
+    w = jnp.ones((k,), jnp.float32)
+    a = sync.robust_aggregate(grads, w, "coord_median")
+    b = robust_ops.robust_aggregate_tree(grads, w, method="coord_median",
+                                         block_p=16)
+    assert _max_diff(a, b) == 0.0
+    assert jax.tree.structure(a) == jax.tree.structure(b)
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: bit-identity, parity, rollback, quarantine.
+# ---------------------------------------------------------------------------
+
+def test_default_path_bit_identical(setup):
+    """ISSUE 7 acceptance: robust_agg='mean' with corruption disabled is
+    EXACTLY (0.0) the pre-robustness engine on host and fused alike — the
+    robust machinery must be invisible when off."""
+    part, stream, params = setup
+    sampler = make_device_sampler(stream)
+    cfg = fedgs.FedGSConfig(**CFG)
+    host0, logs0 = fedgs.run_fedgs(
+        params, linear_loss, DeviceBackedStreams(sampler), part.p_real, cfg)
+    host1, _ = fedgs.run_fedgs(
+        params, linear_loss, DeviceBackedStreams(sampler), part.p_real, cfg,
+        corrupt_fn=None)
+    fused0, flogs0 = fedgs.run_fedgs_fused(params, linear_loss, sampler,
+                                           part.p_real, cfg)
+    fused1, _ = fedgs.run_fedgs_fused(params, linear_loss, sampler,
+                                      part.p_real, cfg, corrupt_fn=None)
+    assert _max_diff(host0, host1) == 0.0
+    assert _max_diff(fused0, fused1) == 0.0
+    # and the robustness telemetry reads "off"
+    assert logs0[0].to_dict()["corrupted_selected"] is None
+    assert flogs0[0].to_dict()["rollbacks"] is None
+
+
+@pytest.mark.parametrize("mode,method", [
+    ("scale", "clip_norm"),
+    ("nan_burst", "trimmed_mean"),
+    ("sign_flip+gauss_noise", "coord_median"),
+    ("inf_spike", "mean")])
+def test_host_fused_sharded_parity_under_corruption(mode, method, setup):
+    """ISSUE 7 acceptance: host == fused == sharded to 1e-5 on params under
+    corruption × aggregator combos (each mode paired with one aggregator to
+    keep the matrix affordable), with matching telemetry."""
+    part, stream, params = setup
+    sampler = make_device_sampler(stream)
+    cfun = make_corruption_fn(
+        CorruptionConfig(mode=mode, frac=0.3, prob=0.6), 0, N_DEV)
+    cfg = fedgs.FedGSConfig(**CFG, robust_agg=method, robust_clip=5.0)
+    host, host_logs = fedgs.run_fedgs(
+        params, linear_loss, DeviceBackedStreams(sampler), part.p_real,
+        cfg, corrupt_fn=cfun)
+    fused, fused_logs = fedgs.run_fedgs_fused(
+        params, linear_loss, sampler, part.p_real, cfg, corrupt_fn=cfun)
+    mesh = jax.make_mesh((1,), ("groups",))
+    sharded, _ = fedgs.run_fedgs_fused(
+        params, linear_loss, sampler, part.p_real, cfg, corrupt_fn=cfun,
+        mesh=mesh, chunk=2)
+    assert _max_diff(host, fused) < 1e-5
+    assert _max_diff(fused, sharded) < 1e-5
+    if method != "mean":
+        assert _finite(fused)
+    for field in ("loss", "corrupted_selected", "clipped_fraction",
+                  "rollbacks", "agg_residual"):
+        np.testing.assert_allclose(
+            [getattr(l, field) for l in host_logs],
+            [getattr(l, field) for l in fused_logs], atol=1e-4,
+            err_msg=field)
+
+
+def test_nan_guard_rolls_back_and_recovers(setup):
+    """NaN bursts under the plain mean: the guard fires (rollbacks > 0),
+    parameters stay finite, and training still progresses on clean
+    iterations. With the guard disabled the same trace destroys the run —
+    the counterfactual that proves the guard is load-bearing."""
+    part, stream, params = setup
+    sampler = make_device_sampler(stream)
+    cfun = make_corruption_fn(
+        CorruptionConfig(mode="nan_burst", frac=0.3, prob=0.5), 0, N_DEV)
+    cfg = fedgs.FedGSConfig(**CFG, quarantine_limit=0)
+    final, logs = fedgs.run_fedgs_fused(params, linear_loss, sampler,
+                                        part.p_real, cfg, corrupt_fn=cfun)
+    assert sum(l.rollbacks for l in logs) >= 1
+    assert _finite(final)
+    assert all(np.isfinite(l.loss) for l in logs)
+    cfg_off = fedgs.FedGSConfig(**CFG, quarantine_limit=0, nan_guard=False)
+    wrecked, _ = fedgs.run_fedgs_fused(params, linear_loss, sampler,
+                                       part.p_real, cfg_off,
+                                       corrupt_fn=cfun)
+    assert not _finite(wrecked), "without the guard the NaNs must spread"
+
+
+def test_quarantine_excludes_repeat_offenders(setup):
+    """Always-firing scale faults + clip flags: offenders hit the
+    quarantine limit and stop being seated — corrupted_selected decays to
+    zero while an unquarantined run keeps seating them."""
+    part, stream, params = setup
+    sampler = make_device_sampler(stream)
+    cfun = make_corruption_fn(
+        CorruptionConfig(mode="scale", frac=0.25, prob=1.0, scale=50.0),
+        1, N_DEV)
+    base = dict(CFG, robust_agg="clip_norm", robust_clip=2.0)
+    cfg_q = fedgs.FedGSConfig(**base, quarantine_limit=2)
+    _, logs_q = fedgs.run_fedgs_fused(params, linear_loss, sampler,
+                                      part.p_real, cfg_q, corrupt_fn=cfun)
+    corr_q = [l.corrupted_selected for l in logs_q]
+    assert corr_q[-1] < corr_q[0]
+    assert corr_q[-1] == 0.0
+    cfg_n = fedgs.FedGSConfig(**base, quarantine_limit=0)
+    _, logs_n = fedgs.run_fedgs_fused(params, linear_loss, sampler,
+                                      part.p_real, cfg_n, corrupt_fn=cfun)
+    assert sum(l.corrupted_selected for l in logs_n) > sum(corr_q)
+
+
+def test_quarantine_mask_semantics():
+    q = jnp.array([[0, 1, 2], [3, 0, 5]], jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(selection.quarantine_mask(q, 2)),
+        [[1.0, 1.0, 0.0], [0.0, 1.0, 0.0]])
+    np.testing.assert_array_equal(
+        np.asarray(selection.quarantine_mask(q, 0)), np.ones((2, 3)))
+
+
+def test_corruption_composes_with_availability(setup):
+    """Corruption + Markov churn + bounded_async staleness all at once:
+    host == fused to 1e-5 and the run stays finite — the three fault
+    subsystems share one carry without fighting."""
+    part, stream, params = setup
+    sampler = make_device_sampler(stream)
+    cfun = make_corruption_fn(
+        CorruptionConfig(mode="scale+nan_burst", frac=0.3, prob=0.6),
+        0, N_DEV)
+    afn = make_availability_fn(
+        AvailabilityConfig(schedule="markov", up_prob=0.6, dwell=3),
+        0, N_DEV)
+    cfg = fedgs.FedGSConfig(**dict(CFG, reselect_every=2),
+                            sync="bounded_async", gamma=0.5,
+                            max_staleness=3, robust_agg="coord_median")
+    host, _ = fedgs.run_fedgs(
+        params, linear_loss, DeviceBackedStreams(sampler), part.p_real,
+        cfg, avail_fn=afn, corrupt_fn=cfun)
+    fused, logs = fedgs.run_fedgs_fused(
+        params, linear_loss, sampler, part.p_real, cfg, avail_fn=afn,
+        corrupt_fn=cfun)
+    assert _max_diff(host, fused) < 1e-5
+    assert _finite(fused)
+    assert all(not np.isnan(l.participation) for l in logs)
+    assert all(not np.isnan(l.clipped_fraction) for l in logs)
