@@ -17,8 +17,15 @@ On top of the engine comparison (run with the default config:
 
 * the ``train_step`` × ``kernel_backend`` **matrix** of the fused engine
   (DESIGN.md §11) — gradient-space vs model-averaging internal sync, jnp vs
-  Pallas kernels (interpret mode on CPU, so the 'pallas' column measures
-  kernel-dispatch overhead there, not TPU speed);
+  Pallas kernels. Every matrix cell records the compiled-aware dispatch
+  modes (``core.dispatch.op_modes``, DESIGN.md §16.2): on CPU the heavy
+  kernel ops route to jnp instead of interpret mode, so the 'pallas'
+  column now measures the *routed* path, with the per-op routing decision
+  written next to the number;
+* the CNN legs additionally run the §16.1 **all-groups superbatch** train
+  step (``models.cnn.make_group_loss_fn``): the per-group (L, n) backward
+  flattened to ONE (M·L·n) conv dispatch per layer
+  (``fused_grouped_iters_per_sec`` / ``grouped_speedup_vs_host_device``);
 * the **buffer check**: HLO shape scan of the compiled fused round
   (``launch.hlo_analysis.param_replica_bytes``) proving the gradient-space
   step's live parameter tensors scale with M while model averaging
@@ -42,7 +49,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import femnist_cnn
-from repro.core import baselines, fedgs
+from repro.core import baselines, dispatch, fedgs
 from repro.data import (DeviceBackedStreams, DeviceStream, FactoryStreams,
                         PartitionConfig, make_device_sampler, make_partition)
 from repro.launch import hlo_analysis
@@ -121,7 +128,9 @@ def _make_cfg(p: dict, seed: int, rounds: int | None = None,
 
 def measure_engines(p: dict, model: str = "linear", seed: int = 0) -> dict:
     """host_numpy / host_device / fused with the default config
-    (train_step='grad_avg', kernel_backend='jnp')."""
+    (train_step='grad_avg', kernel_backend='jnp'). For the CNN a fourth
+    leg runs the fused engine on the §16.1 all-groups superbatch backward
+    (one (M·L·n) conv dispatch per layer instead of a per-group vmap)."""
     part, sampler = _setup(p, seed)
     params, loss_fn = _model(model, seed)
     cfg = _make_cfg(p, seed, rounds=_rounds(p, model))
@@ -137,7 +146,7 @@ def measure_engines(p: dict, model: str = "linear", seed: int = 0) -> dict:
         log_fn=lf))
     fused = ips(lambda lf: fedgs.run_fedgs_fused(
         params, loss_fn, sampler, part.p_real, cfg, log_fn=lf))
-    return {
+    out = {
         "model": model,
         "host_numpy_iters_per_sec": round(host_numpy, 2),
         "host_device_iters_per_sec": round(host_device, 2),
@@ -145,13 +154,28 @@ def measure_engines(p: dict, model: str = "linear", seed: int = 0) -> dict:
         "speedup_vs_host": round(fused / host_numpy, 2),
         "speedup_vs_host_device": round(fused / host_device, 2),
     }
+    if model == "cnn":
+        grouped = ips(lambda lf: fedgs.run_fedgs_fused(
+            params, loss_fn, sampler, part.p_real, cfg,
+            group_loss_fn=cnn.make_group_loss_fn("jnp"), log_fn=lf))
+        out["fused_grouped_iters_per_sec"] = round(grouped, 2)
+        out["grouped_speedup_vs_host_device"] = round(grouped / host_device,
+                                                      2)
+    return out
 
 
 def measure_matrix(p: dict, model: str, seed: int = 0, *,
                    grad_avg_jnp: float | None = None) -> dict:
     """Fused-engine train_step × kernel_backend matrix (DESIGN.md §11).
 
-    ``grad_avg_jnp`` fills that cell from a prior measurement —
+    Each cell is ``{"iters_per_sec", "op_modes"}`` — ``op_modes`` is the
+    compiled-aware dispatch snapshot (DESIGN.md §16.2): which kernel ops ran
+    compiled, pinned interpret, or auto-routed to jnp during the cell's
+    trace. The jnp column never touches a kernel, so its snapshot is empty.
+    CNN grad_avg cells run the §16.1 superbatch step with the cell's
+    backend, so 'pallas' exercises the conv_fused routing too.
+
+    ``grad_avg_jnp`` fills that cell's throughput from a prior measurement —
     measure_engines already times the identical default config, so
     re-benchmarking it would just record the same number with fresh noise.
     """
@@ -160,16 +184,22 @@ def measure_matrix(p: dict, model: str, seed: int = 0, *,
     out = {}
     for ts in TRAIN_STEPS:
         for kb in BACKENDS:
+            glf = cnn.make_group_loss_fn(kb) \
+                if model == "cnn" and ts == "grad_avg" else None
             if (ts, kb) == ("grad_avg", "jnp") and grad_avg_jnp is not None:
-                out[f"{ts}/{kb}"] = grad_avg_jnp
+                out[f"{ts}/{kb}"] = {"iters_per_sec": grad_avg_jnp,
+                                     "op_modes": {}}
                 continue
             cfg = _make_cfg(p, seed, rounds=_rounds(p, model),
                             train_step=ts, kernel_backend=kb)
+            dispatch.reset_op_modes()
             ips = _iters_per_sec(
                 lambda lf: fedgs.run_fedgs_fused(
-                    params, loss_fn, sampler, part.p_real, cfg, log_fn=lf),
+                    params, loss_fn, sampler, part.p_real, cfg,
+                    group_loss_fn=glf, log_fn=lf),
                 cfg.rounds, cfg.iters_per_round)
-            out[f"{ts}/{kb}"] = round(ips, 2)
+            out[f"{ts}/{kb}"] = {"iters_per_sec": round(ips, 2),
+                                 "op_modes": dispatch.op_modes()}
     return out
 
 
@@ -212,16 +242,28 @@ def run(quick: bool = True, json_path: str = "BENCH_fedgs_fused.json") -> None:
         emit(f"fedgs_fused.{model}.fused_scan",
              1e6 / r["fused_iters_per_sec"],
              f"iters_per_sec={r['fused_iters_per_sec']}")
+        if "fused_grouped_iters_per_sec" in r:
+            emit(f"fedgs_fused.{model}.fused_scan_grouped",
+                 1e6 / r["fused_grouped_iters_per_sec"],
+                 f"iters_per_sec={r['fused_grouped_iters_per_sec']}")
         emit(f"fedgs_fused.{model}.speedup", 0.0,
              f"x={r['speedup_vs_host']}")
+        # the cnn grad_avg cells run the grouped superbatch step, so the
+        # pre-measured fill must be the grouped number, not the vmapped one
         mat = measure_matrix(p, model,
-                             grad_avg_jnp=r["fused_iters_per_sec"])
+                             grad_avg_jnp=r.get(
+                                 "fused_grouped_iters_per_sec",
+                                 r["fused_iters_per_sec"]))
         out["matrix"][model] = mat
-        for combo, ips in mat.items():
-            emit(f"fedgs_fused.{model}.matrix.{combo}", 1e6 / ips,
-                 f"iters_per_sec={ips}")
+        for combo, cell in mat.items():
+            modes = ",".join(f"{k}:{v}" for k, v in
+                             sorted(cell["op_modes"].items())) or "-"
+            emit(f"fedgs_fused.{model}.matrix.{combo}",
+                 1e6 / cell["iters_per_sec"],
+                 f"iters_per_sec={cell['iters_per_sec']};modes={modes}")
         out[model]["grad_avg_speedup_vs_model_avg"] = round(
-            mat["grad_avg/jnp"] / mat["model_avg/jnp"], 2)
+            mat["grad_avg/jnp"]["iters_per_sec"]
+            / mat["model_avg/jnp"]["iters_per_sec"], 2)
     out["buffer_check"] = buffer_check(p)
     for ts in TRAIN_STEPS:
         bc = out["buffer_check"][ts]

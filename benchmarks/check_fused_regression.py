@@ -6,11 +6,12 @@ committed numbers.
   python benchmarks/check_fused_regression.py --drift BASELINE.json NEW.json
   python benchmarks/check_fused_regression.py --availability B.json NEW.json
   python benchmarks/check_fused_regression.py --robust B.json NEW.json
+  python benchmarks/check_fused_regression.py --kernels B.json NEW.json
 
-A missing BASELINE file is tolerated in ``--drift``, ``--availability`` and
-``--robust`` modes only (first-run tolerance: those gates check the NEW
-json's invariant and report "no committed baseline", so a suite can be
-introduced before its JSON lands on the branch). The fused/table2 modes
+A missing BASELINE file is tolerated in ``--drift``, ``--availability``,
+``--robust`` and ``--kernels`` modes only (first-run tolerance: those gates
+check the NEW json's invariant and report "no committed baseline", so a
+suite can be introduced before its JSON lands on the branch). The fused/table2 modes
 keep failing loudly on a missing baseline — their committed JSONs exist, so
 a missing file there means a broken path, and exiting 0 would silently
 disarm the regression gates.
@@ -43,6 +44,15 @@ and stable, while the linear probe's engine-bound number swings with CPU
 contention even with min-over-rounds timing, so it is reported but not
 enforced. Host-loop numbers and the Pallas matrix entries (interpret-mode
 dispatch, not a hot path) never gate.
+
+``--kernels`` gates ``BENCH_kernels.json`` (DESIGN.md §16): the copied-in
+``cnn_speedup_vs_host_device`` headline must hold ≥ 1.0 (the fused engine
+must *win* the CNN round, not merely not regress — the point of the §16
+superbatch work), and every kernel's kernel-route time must stay within the
+same 20% throughput floor vs the committed numbers. Jnp-reference columns,
+rooflines and env stamps are reported only. Kernel-route times are compared
+only when baseline and new ran in the same ``kernel_mode`` (interpret
+numbers vs compiled numbers would be meaningless).
 
 ``--table2`` compares ``BENCH_table2.json``: every strategy's CNN
 ``fused_rounds_per_sec`` must hold ≥80% of the committed floor (compute-
@@ -206,6 +216,52 @@ def check_robust(baseline: dict | None, new: dict) -> int:
     return rc
 
 
+def check_kernels(baseline: dict | None, new: dict) -> int:
+    rc = 0
+    speedup = new.get("cnn_speedup_vs_host_device")
+    if speedup is None:
+        print("FAIL: BENCH_kernels.json has no cnn_speedup_vs_host_device "
+              "(BENCH_fedgs_fused.json was missing when the suite ran) — "
+              "the §16 win gate cannot be evaluated", file=sys.stderr)
+        rc = 1
+    elif speedup < 1.0:
+        print(f"FAIL: cnn fused speedup_vs_host_device = {speedup} < 1.0 — "
+              "the fused engine must win the CNN round (DESIGN.md §16)",
+              file=sys.stderr)
+        rc = 1
+    else:
+        print(f"OK: cnn fused speedup_vs_host_device = {speedup} >= 1.0"
+              + (f" (grouped {new['cnn_grouped_speedup_vs_host_device']})"
+                 if new.get("cnn_grouped_speedup_vs_host_device") else ""))
+    if baseline is None:
+        return rc
+    if baseline.get("kernel_mode") != new.get("kernel_mode"):
+        print(f"note: kernel_mode changed ({baseline.get('kernel_mode')} -> "
+              f"{new.get('kernel_mode')}) — per-kernel times not comparable,"
+              " floor skipped")
+        return rc
+    key = f"{new['kernel_mode']}_us"
+    failures = []
+    for name, old in baseline.get("kernels", {}).items():
+        tkey = key if key in old else ("us" if "us" in old else None)
+        newk = new.get("kernels", {}).get(name)
+        if tkey is None or newk is None or tkey not in newk:
+            print(f"{name}: no comparable {key} in baseline+new, skipped")
+            continue
+        old_us, new_us = old[tkey], newk[tkey]
+        # time budget: >25% slower == throughput below the 80% floor
+        ok = new_us <= old_us / TOLERANCE
+        print(f"{name}: {tkey} {old_us} -> {new_us} "
+              f"({old_us / new_us:.2f}x) {'OK' if ok else 'REGRESSED'}")
+        if not ok:
+            failures.append(name)
+    if failures:
+        print("FAIL: kernel-route throughput fell below the 80% floor "
+              f"for {failures}", file=sys.stderr)
+        rc = 1
+    return rc
+
+
 def _load(path: str, *, required: bool) -> dict | None:
     try:
         with open(path) as f:
@@ -223,14 +279,17 @@ def main(argv: list[str]) -> int:
     drift = "--drift" in argv
     availability = "--availability" in argv
     robust = "--robust" in argv
+    kernels = "--kernels" in argv
     paths = [a for a in argv
              if a not in ("--table2", "--drift", "--availability",
-                          "--robust")]
-    if len(paths) != 2 or (table2 + drift + availability + robust) > 1:
+                          "--robust", "--kernels")]
+    if len(paths) != 2 or (table2 + drift + availability + robust
+                           + kernels) > 1:
         print(__doc__, file=sys.stderr)
         return 2
     baseline = _load(paths[0],
-                     required=not (drift or availability or robust))
+                     required=not (drift or availability or robust
+                                   or kernels))
     new = _load(paths[1], required=True)
     if drift:
         return check_drift(baseline, new)
@@ -238,6 +297,8 @@ def main(argv: list[str]) -> int:
         return check_availability(baseline, new)
     if robust:
         return check_robust(baseline, new)
+    if kernels:
+        return check_kernels(baseline, new)
     return (check_table2 if table2 else check_fused)(baseline, new)
 
 

@@ -1,6 +1,7 @@
-"""Kernel-backend dispatch (``FedGSConfig.kernel_backend``, DESIGN.md §11.3).
+"""Kernel-backend dispatch (``FedGSConfig.kernel_backend``, DESIGN.md §11.3,
+§16.2).
 
-Routes the three aggregation/selection primitives of the FEDGS hot path to
+Routes the aggregation/selection/conv primitives of the FEDGS hot path to
 either plain jnp reductions or the repo's Pallas kernels:
 
 | primitive | ``'jnp'`` | ``'pallas'`` |
@@ -9,11 +10,15 @@ either plain jnp reductions or the repo's Pallas kernels:
 | external average (Eq. 5) | `sync.external_sync` | `kernels.agg_weighted.weighted_average_tree` (uniform) |
 | GBP-CS permutation step | `gbp_cs._default_step` (None) | `kernels.gbp_cs.ops.fused_step` |
 | robust Eq. 4 (DESIGN.md §15.2) | `sync.robust_aggregate` | `kernels.robust_agg.ops.robust_aggregate_tree` |
+| conv superbatch block (§16.1) | `kernels.conv_fused` im2col+einsum | `kernels.conv_fused.ops.conv_block_grouped` |
 
-The Pallas ops fall back to interpret mode on CPU automatically
-(`kernels.common.use_interpret`), so `'pallas'` is runnable — if slow —
-everywhere; compiled kernels need a real TPU. Kernel imports are lazy so the
-default `'jnp'` path never touches `jax.experimental.pallas`.
+The dispatch layer is *compiled-aware* (DESIGN.md §16.2): every kernel op
+records whether it ran compiled, interpret, or fell back to jnp
+(``kernels.common.op_modes`` / :func:`op_modes` here), and on a CPU backend
+heavy ops auto-route to jnp instead of silently eating the ~28× interpret
+penalty — ``force_interpret=True`` (CLI ``--force-interpret``) pins the
+interpret kernels so tests still exercise them. Kernel imports are lazy so
+the default `'jnp'` path never touches `jax.experimental.pallas`.
 """
 from __future__ import annotations
 
@@ -37,17 +42,33 @@ def check_backend(backend: str) -> str:
     return backend
 
 
-def internal_avg_fn(backend: str) -> Callable[[PyTree, jax.Array], PyTree]:
+def op_modes() -> dict[str, str]:
+    """How each kernel op last ran: {'op': 'compiled'|'interpret'|'jnp'}
+    (DESIGN.md §16.2). Filled at trace time; empty until a pallas-backend
+    function has been traced. Benchmarks snapshot this per matrix cell."""
+    from repro.kernels import common as kcommon
+    return kcommon.op_modes()
+
+
+def reset_op_modes() -> None:
+    from repro.kernels import common as kcommon
+    kcommon.reset_modes()
+
+
+def internal_avg_fn(backend: str, *, force_interpret: bool = False
+                    ) -> Callable[[PyTree, jax.Array], PyTree]:
     """Weighted average over a leading client axis (Eq. 4) — applies to
     stacked models (`train_step='model_avg'`) and stacked gradients
     (`train_step='grad_avg'`) alike."""
     if check_backend(backend) == "pallas":
         from repro.kernels.agg_weighted import ops as agg_ops
-        return agg_ops.weighted_average_tree
+        return functools.partial(agg_ops.weighted_average_tree,
+                                 force_interpret=force_interpret)
     return sync.weighted_average
 
 
-def external_avg_fn(backend: str) -> Callable[[PyTree], PyTree]:
+def external_avg_fn(backend: str, *, force_interpret: bool = False
+                    ) -> Callable[[PyTree], PyTree]:
     """Uniform mean over a leading group/pod axis (Eq. 5)."""
     if check_backend(backend) == "pallas":
         from repro.kernels.agg_weighted import ops as agg_ops
@@ -55,14 +76,16 @@ def external_avg_fn(backend: str) -> Callable[[PyTree], PyTree]:
         def mean_tree(group_params: PyTree) -> PyTree:
             m = jax.tree.leaves(group_params)[0].shape[0]
             return agg_ops.weighted_average_tree(
-                group_params, jnp.ones((m,), jnp.float32))
+                group_params, jnp.ones((m,), jnp.float32),
+                force_interpret=force_interpret)
 
         return mean_tree
     return sync.external_sync
 
 
 def robust_agg_fn(backend: str, method: str, *, clip: float = 10.0,
-                  trim: int = 1) -> Callable[[PyTree, jax.Array], PyTree]:
+                  trim: int = 1, force_interpret: bool = False
+                  ) -> Callable[[PyTree, jax.Array], PyTree]:
     """Robust internal aggregation over a stacked member axis (Eq. 4,
     DESIGN.md §15.2): ``fn(grads, weights) -> aggregate``. ``method='mean'``
     returns the plain Eq. 4 weighted average — the same callable as
@@ -71,10 +94,12 @@ def robust_agg_fn(backend: str, method: str, *, clip: float = 10.0,
     if check_backend(backend) == "pallas":
         if method == "mean":
             from repro.kernels.agg_weighted import ops as agg_ops
-            return agg_ops.weighted_average_tree
+            return functools.partial(agg_ops.weighted_average_tree,
+                                     force_interpret=force_interpret)
         from repro.kernels.robust_agg import ops as robust_ops
         return functools.partial(robust_ops.robust_aggregate_tree,
-                                 method=method, clip=clip, trim=trim)
+                                 method=method, clip=clip, trim=trim,
+                                 force_interpret=force_interpret)
     if method == "mean":
         return sync.weighted_average
     return functools.partial(sync.robust_aggregate, method=method,
@@ -88,3 +113,34 @@ def gbp_step_fn(backend: str):
         from repro.kernels.gbp_cs import ops as kops
         return kops.fused_step
     return None
+
+
+def conv_stack_fn(backend: str, *, force_interpret: bool = False
+                  ) -> Callable[..., jax.Array]:
+    """Grouped fused conv block (DESIGN.md §16.1): ``fn(x (G, B, H, W,
+    Cin), w (G, kh, kw, Cin, Cout), b (G, Cout)) -> (G, B, H/2, W/2,
+    Cout)`` — conv(SAME)+bias+ReLU+2×2 maxpool with per-group weights, the
+    (M·L·n) conv superbatch in one dispatch.
+
+    ``'pallas'`` is the ``custom_vjp`` kernel op (Pallas im2col matmul when
+    compiled; jnp einsum fallback on CPU unless ``force_interpret``, with a
+    hand-written matmul backward either way). ``'jnp'`` is the identical-
+    math pure-jnp im2col+einsum under plain autodiff — both replace the
+    transposed-conv VJP (the dominant cost of the CNN round on XLA:CPU)
+    with batched matmuls."""
+    from repro.kernels.conv_fused import ops as conv_ops
+    if check_backend(backend) == "pallas":
+        return functools.partial(conv_ops.conv_block_grouped,
+                                 force_interpret=force_interpret)
+
+    def conv_block_jnp(x, w, b):
+        g, bsz, h, w_img, cin = x.shape
+        kh, kw, cout = w.shape[1], w.shape[2], w.shape[-1]
+        pat = conv_ops.im2col(x.astype(jnp.float32), (kh, kw))
+        wm = w.reshape(g, kh * kw * cin, cout).astype(jnp.float32)
+        y = jnp.einsum("grq,gqc->grc", pat, wm) + b[:, None, :]
+        a = jax.nn.relu(y).reshape(g, bsz, h, w_img, cout)
+        return jnp.max(a.reshape(g, bsz, h // 2, 2, w_img // 2, 2, cout),
+                       axis=(3, 5))
+
+    return conv_block_jnp

@@ -64,6 +64,10 @@ class FedGSConfig:
     train_step: str = "grad_avg"  # 'grad_avg' (Eq. 4 in gradient space) |
     #                               'model_avg' (oracle: L one-step models)
     kernel_backend: str = "jnp"   # 'jnp' | 'pallas' (core.dispatch)
+    force_interpret: bool = False  # pin Pallas interpret mode for heavy ops
+    #                               instead of the compiled-aware jnp
+    #                               fallback (DESIGN.md §16.2) — parity/CI
+    #                               use only; it is ~28× slower on CPU
     reselect_every: int = 1       # GBP-CS cadence in internal iterations:
     #                               1 = every iteration (historical default),
     #                               N = every N iters, 0 = static super nodes
@@ -193,11 +197,13 @@ def make_fedgs_iteration(loss_fn: LossFn, cfg: FedGSConfig):
     return iteration
 
 
-@functools.partial(jax.jit, static_argnames=("backend",))
+@functools.partial(jax.jit, static_argnames=("backend", "force_interpret"))
 def external_sync_and_broadcast(group_params: PyTree,
-                                backend: str = "jnp") -> PyTree:
+                                backend: str = "jnp",
+                                force_interpret: bool = False) -> PyTree:
     """Alg. 1 line 10 (Eq. 5): ω_t = mean_m ω_t^m, then ω_t^m ← ω_t."""
-    global_params = dispatch.external_avg_fn(backend)(group_params)
+    global_params = dispatch.external_avg_fn(
+        backend, force_interpret=force_interpret)(group_params)
     m = jax.tree.leaves(group_params)[0].shape[0]
     broadcast = jax.tree.map(
         lambda leaf: jnp.broadcast_to(leaf[None], (m,) + leaf.shape),
@@ -243,7 +249,8 @@ def _per_group_train(params_m: PyTree, batches_m: PyTree, loss_fn: LossFn,
     if cfg.train_step == "model_avg":
         dev_step = lambda b: sync.local_step(params_m, b, loss_fn, cfg.lr)
         new_params, losses = jax.vmap(dev_step)(batches_m)
-        synced = dispatch.internal_avg_fn(cfg.kernel_backend)(
+        synced = dispatch.internal_avg_fn(
+            cfg.kernel_backend, force_interpret=cfg.force_interpret)(
             new_params, weights)
         # fault tolerance (DESIGN.md §14.3): a group whose whole committee
         # went dark (all weights 0) keeps its params instead of averaging
@@ -255,7 +262,8 @@ def _per_group_train(params_m: PyTree, batches_m: PyTree, loss_fn: LossFn,
     if cfg.kernel_backend == "pallas":
         losses, grads = jax.vmap(
             lambda b: sync.local_grads(params_m, b, loss_fn))(batches_m)
-        g = dispatch.internal_avg_fn("pallas")(grads, weights)
+        g = dispatch.internal_avg_fn(
+            "pallas", force_interpret=cfg.force_interpret)(grads, weights)
         return sync.apply_sgd(params_m, g, cfg.lr), jnp.mean(losses)
     wn = weights / jnp.maximum(jnp.sum(weights), 1e-12)
 
@@ -298,6 +306,69 @@ def _per_group_train_avail(params_m: PyTree, batches_m: PyTree,
                      g_f, g_prev)
     g_out = jax.tree.map(lambda gl, gp: gl.astype(gp.dtype), g, g_prev)
     return sync.apply_sgd(params_m, g, cfg.lr), jnp.mean(losses), g_out
+
+
+def _train_all_groups(gp: PyTree, batches: PyTree, group_loss_fn, cfg:
+                      FedGSConfig, weights: Array | None = None,
+                      stale_sum: Array | None = None,
+                      g_prev: PyTree | None = None):
+    """All-groups superbatch form of the ``grad_avg`` train step
+    (DESIGN.md §16.1): ONE backward over a loss summed across every group
+    replaces the per-group ``jax.vmap`` of :func:`_per_group_train`.
+
+    ``group_loss_fn(gp, batches) -> (M, L)`` computes every selected
+    device's loss with the model's conv/matmul stack flattened over the
+    (M·L·n) superbatch in a single dispatch per layer (e.g.
+    ``models.cnn.make_group_loss_fn``). Because group g's loss terms depend
+    only on ``gp[g]``, the gradient of the summed weighted loss w.r.t. the
+    stacked params IS the stack of per-group Eq. (4) gradients — identical
+    math to the vmapped path, but XLA:CPU (which single-threads small vmap
+    bodies) sees M·L-times-larger ops it can actually parallelize.
+
+    ``weights`` (M, L) are the internal-sync weights (uniform if None);
+    with ``stale_sum`` (M,)/``g_prev`` the §14.3 bounded-async blend
+    composes exactly as in :func:`_per_group_train_avail`, returning
+    ``(gp', (M,) mean loss, ḡ')`` instead of ``(gp', loss)``.
+    """
+    m = jax.tree.leaves(gp)[0].shape[0]
+    if weights is None:
+        weights = jnp.ones((m, cfg.num_selected), jnp.float32)
+    denom = weights.sum(-1) + (stale_sum if stale_sum is not None else 0.0)
+    denom = jnp.maximum(denom, 1e-12)
+    wn = weights / denom[:, None]
+
+    def weighted_loss(p):
+        losses = group_loss_fn(p, batches)        # (M, L)
+        return jnp.sum(losses * wn), losses
+
+    (_, losses), g = jax.value_and_grad(weighted_loss, has_aux=True)(gp)
+    if stale_sum is None:
+        return sync.apply_sgd(gp, g, cfg.lr), jnp.mean(losses, axis=-1)
+    frac = stale_sum / denom                      # (M,)
+    g = jax.tree.map(
+        lambda gf, gpv: gf + frac.reshape((m,) + (1,) * (gf.ndim - 1))
+        * gpv.astype(jnp.float32), g, g_prev)
+    g_out = jax.tree.map(lambda gl, gpv: gl.astype(gpv.dtype), g, g_prev)
+    return sync.apply_sgd(gp, g, cfg.lr), jnp.mean(losses, axis=-1), g_out
+
+
+def _check_group_loss_fn(group_loss_fn, cfg: FedGSConfig, robust: bool
+                         ) -> bool:
+    """Is the §16.1 all-groups path active? Raises on incompatible modes:
+    ``model_avg`` has no single backward to fuse, and the robust layer
+    needs the materialized per-member gradient stack."""
+    if group_loss_fn is None:
+        return False
+    if cfg.train_step != "grad_avg":
+        raise ValueError("group_loss_fn requires train_step='grad_avg' "
+                         "(one fused backward; model_avg averages models)")
+    if robust:
+        raise ValueError(
+            "group_loss_fn is incompatible with corruption injection / "
+            "robust_agg != 'mean': the robust path needs the per-member "
+            "gradient stack (DESIGN.md §15), which the fused all-groups "
+            "backward never materializes")
+    return True
 
 
 class AvailStep(NamedTuple):
@@ -430,7 +501,8 @@ def make_robust_train_step(loss_fn: LossFn, cfg: FedGSConfig, corrupt_fn, *,
     so one compilation serves every iteration of the fault trace."""
     agg_fn = dispatch.robust_agg_fn(cfg.kernel_backend, cfg.robust_agg,
                                     clip=cfg.robust_clip,
-                                    trim=cfg.robust_trim)
+                                    trim=cfg.robust_trim,
+                                    force_interpret=cfg.force_interpret)
 
     if bounded:
         @jax.jit
@@ -455,19 +527,29 @@ def make_robust_train_step(loss_fn: LossFn, cfg: FedGSConfig, corrupt_fn, *,
 
 
 def make_group_train_step(loss_fn: LossFn, cfg: FedGSConfig, *,
-                          availability: bool = False):
+                          availability: bool = False, group_loss_fn=None):
     """Train-only half of the iteration (used by the two-phase host loop):
     selected batches (M, L, n, ...) -> internally-synced group params.
 
     ``availability=True`` returns the weighted form (DESIGN.md §14): for
     ``cfg.sync='sync'`` it is ``step(gp, batches, fresh_w)`` — missed
     devices at weight 0; for ``'bounded_async'`` it is ``step(gp, batches,
-    fresh_w, stale_sum, g_prev) -> (gp', loss, g_prev')``."""
+    fresh_w, stale_sum, g_prev) -> (gp', loss, g_prev')``.
+
+    ``group_loss_fn`` (requires ``train_step='grad_avg'``) switches every
+    variant to the §16.1 all-groups superbatch backward
+    (:func:`_train_all_groups`) — same signatures, same math, one fused
+    dispatch instead of a vmap of per-group backwards."""
+    grouped = _check_group_loss_fn(group_loss_fn, cfg, False)
 
     if availability and cfg.sync == "bounded_async":
         @jax.jit
         def step_async(group_params: PyTree, batches: PyTree, fresh_w: Array,
                        stale_sum: Array, g_prev: PyTree):
+            if grouped:
+                return _train_all_groups(group_params, batches,
+                                         group_loss_fn, cfg, weights=fresh_w,
+                                         stale_sum=stale_sum, g_prev=g_prev)
             return jax.vmap(
                 lambda p, b, fw, ss, gp: _per_group_train_avail(
                     p, b, loss_fn, cfg, fw, ss, gp)
@@ -479,6 +561,9 @@ def make_group_train_step(loss_fn: LossFn, cfg: FedGSConfig, *,
         @jax.jit
         def step_weighted(group_params: PyTree, batches: PyTree,
                           fresh_w: Array):
+            if grouped:
+                return _train_all_groups(group_params, batches,
+                                         group_loss_fn, cfg, weights=fresh_w)
             return jax.vmap(
                 lambda p, b, w: _per_group_train(p, b, loss_fn, cfg, w)
             )(group_params, batches, fresh_w)
@@ -487,6 +572,9 @@ def make_group_train_step(loss_fn: LossFn, cfg: FedGSConfig, *,
 
     @jax.jit
     def step(group_params: PyTree, batches: PyTree):
+        if grouped:
+            return _train_all_groups(group_params, batches, group_loss_fn,
+                                     cfg)
         return jax.vmap(
             lambda p, b: _per_group_train(p, b, loss_fn, cfg)
         )(group_params, batches)
@@ -509,6 +597,7 @@ def run_fedgs(
     *,
     avail_fn=None,
     corrupt_fn=None,
+    group_loss_fn=None,
     eval_fn: Callable[[PyTree], tuple[float, float]] | None = None,
     eval_every: int = 10,
     log_fn: Callable[[RoundLog], None] | None = None,
@@ -527,6 +616,9 @@ def run_fedgs(
     together with ``cfg.robust_agg``/``nan_guard``/``quarantine_limit`` —
     activates the robustness layer (DESIGN.md §15): per-member gradients,
     robust Eq. 4, isfinite rollback and selection quarantine.
+    ``group_loss_fn`` switches the grad_avg train step to the §16.1
+    all-groups superbatch backward (``models.cnn.make_group_loss_fn``) —
+    identical math, one fused dispatch per layer across all M·L members.
 
     With ``cfg.engine == 'fused'`` (or ``'sharded'``, which additionally
     shards the group axis over every available device), dispatches to
@@ -538,6 +630,7 @@ def run_fedgs(
             else None
         return run_fedgs_fused(params, loss_fn, streams, p_real, cfg,
                                avail_fn=avail_fn, corrupt_fn=corrupt_fn,
+                               group_loss_fn=group_loss_fn,
                                mesh=mesh, eval_fn=eval_fn,
                                eval_every=eval_every, log_fn=log_fn)
     if cfg.engine != "host":
@@ -551,6 +644,7 @@ def run_fedgs(
     if robust and cfg.train_step != "grad_avg":
         raise ValueError("corruption injection requires train_step="
                          "'grad_avg' (the per-member gradient stack)")
+    _check_group_loss_fn(group_loss_fn, cfg, robust)
     quarantined = corrupt_fn is not None and cfg.quarantine_limit > 0
     guard = corrupt_fn is not None and cfg.nan_guard
     if robust:
@@ -558,7 +652,8 @@ def run_fedgs(
                                             bounded=bounded)
     else:
         train_step = make_group_train_step(
-            loss_fn, cfg, availability=avail_fn is not None)
+            loss_fn, cfg, availability=avail_fn is not None,
+            group_loss_fn=group_loss_fn)
     gp = replicate_for_groups(params, cfg.num_groups)
     key = jax.random.PRNGKey(cfg.seed)
     p_real = jnp.asarray(p_real, jnp.float32)
@@ -685,7 +780,8 @@ def run_fedgs(
             divs.append(float(jnp.mean(div)))
             dists.append(float(jnp.mean(dist_c)))
             t += 1
-        gp = external_sync_and_broadcast(gp, backend=cfg.kernel_backend)
+        gp = external_sync_and_broadcast(gp, backend=cfg.kernel_backend,
+                                         force_interpret=cfg.force_interpret)
         tl = ta = None
         if eval_fn is not None and (r + 1) % eval_every == 0:
             tl, ta = eval_fn(global_params(gp))
@@ -775,8 +871,8 @@ def init_selection_state(cfg: FedGSConfig, params: PyTree | None = None,
 
 
 def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
-                    avail_fn=None, corrupt_fn=None, mesh=None,
-                    axis_name: str = "groups"):
+                    avail_fn=None, corrupt_fn=None, group_loss_fn=None,
+                    mesh=None, axis_name: str = "groups"):
     """Build the PURE one-round body of the device-resident engine.
 
     Returns ``round_body(group_params, key, sel, t0, p_real) ->
@@ -819,6 +915,13 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
     outlier counters to the carry (``sel[-1]``) and bars repeat offenders
     from selection like dark devices (DESIGN.md §15.3–§15.4).
 
+    ``group_loss_fn`` (grad_avg only, incompatible with the robust path)
+    switches local training to the §16.1 all-groups superbatch backward
+    (:func:`_train_all_groups`): one fused (M·L·n) dispatch per layer
+    instead of a vmap of per-group backwards — the restructuring that makes
+    the CNN round win on XLA:CPU. Under ``shard_map`` the same fn sees the
+    shard-local M/n_shards groups; the math is per-group either way.
+
     With ``mesh``, the body is written for execution *inside* ``shard_map``
     over ``axis_name``: each shard simulates M/n_shards super nodes,
     selection keys are sliced from the *global* key fan-out (so results are
@@ -838,11 +941,13 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
     if robust and cfg.train_step != "grad_avg":
         raise ValueError("corruption injection requires train_step="
                          "'grad_avg' (the per-member gradient stack)")
+    grouped = _check_group_loss_fn(group_loss_fn, cfg, robust)
     quarantined = corrupt_fn is not None and cfg.quarantine_limit > 0
     guard = corrupt_fn is not None and cfg.nan_guard
     agg_fn = dispatch.robust_agg_fn(
         cfg.kernel_backend, cfg.robust_agg, clip=cfg.robust_clip,
-        trim=cfg.robust_trim) if robust else None
+        trim=cfg.robust_trim,
+        force_interpret=cfg.force_interpret) if robust else None
     n_shards = 1 if mesh is None else _mesh_axis_size(mesh, axis_name)
     if m % n_shards != 0:
         raise ValueError(
@@ -976,16 +1081,26 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
                         extra["dark_selected"] = jnp.sum(
                             mask * (1.0 - avail))
             elif avail is None:
-                gp, losses = jax.vmap(
-                    lambda p, b: _per_group_train(p, b, loss_fn, cfg)
-                )(gp, (imgs, labs))
+                if grouped:
+                    gp, losses = _train_all_groups(gp, (imgs, labs),
+                                                   group_loss_fn, cfg)
+                else:
+                    gp, losses = jax.vmap(
+                        lambda p, b: _per_group_train(p, b, loss_fn, cfg)
+                    )(gp, (imgs, labs))
                 sel_new = (mask, dist)
             elif bounded:
                 st = _avail_weights(mask, avail, sel[2], cfg)
-                gp, losses, g_prev = jax.vmap(
-                    lambda p, b, fw, ss, gpv: _per_group_train_avail(
-                        p, b, loss_fn, cfg, fw, ss, gpv)
-                )(gp, (imgs, labs), st.fresh_w, st.stale_sum, sel[3])
+                if grouped:
+                    gp, losses, g_prev = _train_all_groups(
+                        gp, (imgs, labs), group_loss_fn, cfg,
+                        weights=st.fresh_w, stale_sum=st.stale_sum,
+                        g_prev=sel[3])
+                else:
+                    gp, losses, g_prev = jax.vmap(
+                        lambda p, b, fw, ss, gpv: _per_group_train_avail(
+                            p, b, loss_fn, cfg, fw, ss, gpv)
+                    )(gp, (imgs, labs), st.fresh_w, st.stale_sum, sel[3])
                 sel_new = (mask, dist, st.staleness, g_prev)
                 extra = {"participation": jnp.mean(avail),
                          "dark_selected": jnp.sum(st.dark),
@@ -994,9 +1109,15 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
             else:
                 vals, idx = jax.lax.top_k(mask, l)
                 fresh_w = vals * jnp.take_along_axis(avail, idx, axis=-1)
-                gp, losses = jax.vmap(
-                    lambda p, b, w: _per_group_train(p, b, loss_fn, cfg, w)
-                )(gp, (imgs, labs), fresh_w)
+                if grouped:
+                    gp, losses = _train_all_groups(gp, (imgs, labs),
+                                                   group_loss_fn, cfg,
+                                                   weights=fresh_w)
+                else:
+                    gp, losses = jax.vmap(
+                        lambda p, b, w: _per_group_train(p, b, loss_fn,
+                                                         cfg, w)
+                    )(gp, (imgs, labs), fresh_w)
                 sel_new = (mask, dist)
                 extra = {"participation": jnp.mean(avail),
                          "dark_selected": jnp.sum(mask * (1.0 - avail))}
@@ -1028,7 +1149,8 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
         # epilogue: external sync (Eq. 5) + broadcast back to the group axis
         g = sync.external_sync_grouped(
             gp, axis_name if mesh is not None else None,
-            mean_fn=dispatch.external_avg_fn(cfg.kernel_backend))
+            mean_fn=dispatch.external_avg_fn(
+                cfg.kernel_backend, force_interpret=cfg.force_interpret))
         gp = jax.tree.map(
             lambda leaf: jnp.broadcast_to(leaf[None],
                                           (m_local,) + leaf.shape), g)
@@ -1048,7 +1170,7 @@ def _selection_state_spec(cfg: FedGSConfig, params: PyTree | None,
 
 
 def make_fused_round(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
-                     avail_fn=None, corrupt_fn=None,
+                     avail_fn=None, corrupt_fn=None, group_loss_fn=None,
                      params: PyTree | None = None,
                      mesh=None, axis_name: str = "groups"):
     """Jitted one-round dispatch over :func:`make_round_body` —
@@ -1060,8 +1182,8 @@ def make_fused_round(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
     multi-round engine wraps the same body via ``make_fedgs_experiment``
     instead.)"""
     fn = make_round_body(loss_fn, cfg, sampler, avail_fn=avail_fn,
-                         corrupt_fn=corrupt_fn, mesh=mesh,
-                         axis_name=axis_name)
+                         corrupt_fn=corrupt_fn, group_loss_fn=group_loss_fn,
+                         mesh=mesh, axis_name=axis_name)
     if mesh is not None:
         from jax.experimental.shard_map import shard_map
         sel_spec = _selection_state_spec(
@@ -1084,6 +1206,7 @@ def make_fedgs_experiment(
     *,
     avail_fn=None,
     corrupt_fn=None,
+    group_loss_fn=None,
     mesh=None,
     axis_name: str = "groups",
     eval_fn: Callable[[PyTree], tuple[Array, Array]] | None = None,
@@ -1099,8 +1222,8 @@ def make_fedgs_experiment(
     chunks). ``corrupt_fn`` threads gradient corruption + the robust
     aggregation/guard path through every iteration (DESIGN.md §15)."""
     body = make_round_body(loss_fn, cfg, sampler, avail_fn=avail_fn,
-                           corrupt_fn=corrupt_fn, mesh=mesh,
-                           axis_name=axis_name)
+                           corrupt_fn=corrupt_fn, group_loss_fn=group_loss_fn,
+                           mesh=mesh, axis_name=axis_name)
     p_real = jnp.asarray(p_real, jnp.float32)
     gp = replicate_for_groups(params, cfg.num_groups)
     quarantined = corrupt_fn is not None and cfg.quarantine_limit > 0
@@ -1158,6 +1281,7 @@ def run_fedgs_fused(
     *,
     avail_fn=None,
     corrupt_fn=None,
+    group_loss_fn=None,
     mesh=None,
     axis_name: str = "groups",
     eval_fn: Callable[[PyTree], tuple[Array, Array]] | None = None,
@@ -1184,6 +1308,7 @@ def run_fedgs_fused(
     """
     exp = make_fedgs_experiment(params, loss_fn, sampler, p_real, cfg,
                                 avail_fn=avail_fn, corrupt_fn=corrupt_fn,
+                                group_loss_fn=group_loss_fn,
                                 mesh=mesh, axis_name=axis_name,
                                 eval_fn=eval_fn, unroll=unroll)
     state, logs = engine.run_experiment(

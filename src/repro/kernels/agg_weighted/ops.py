@@ -2,6 +2,17 @@
 
 Drop-in for core.sync.weighted_average — flattens the stacked client pytree
 into one (K, P) buffer, runs the blocked kernel, unflattens.
+
+The flatten/pad layout is hoisted (DESIGN.md §16.3): the leaf sizes,
+offsets and padded width are computed once per trace, and the pad tail is
+a zero block folded into the SAME ``concatenate`` that builds the flat
+buffer — the scan body materializes exactly one (K, P_pad) tensor, not a
+(K, P) concat followed by a second (K, P_pad) ``pad`` copy (verified
+against the compiled HLO in tests/test_kernels.py).
+
+Routing is compiled-aware (``kernels.common.route_op``): on CPU a heavy
+aggregation falls back to ``sync.weighted_average`` instead of interpret
+mode, unless ``force_interpret`` pins the kernel (DESIGN.md §16.2).
 """
 from __future__ import annotations
 
@@ -11,10 +22,13 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from .. import common
 from ..common import pad_to, use_interpret
 from . import kernel
 
 PyTree = Any
+
+OP_NAME = "agg_weighted"
 
 
 @functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
@@ -31,19 +45,33 @@ def agg_flat(stacked: jax.Array, weights: jax.Array, *, block_p: int = 512,
 
 def weighted_average_tree(trees: PyTree, weights: jax.Array, *,
                           block_p: int = 512,
-                          interpret: bool | None = None) -> PyTree:
+                          interpret: bool | None = None,
+                          force_interpret: bool = False) -> PyTree:
     """Same contract as core.sync.weighted_average (leaves (K, ...))."""
-    w = weights.astype(jnp.float32)
-    wn = w / jnp.maximum(jnp.sum(w), 1e-12)
     leaves, treedef = jax.tree.flatten(trees)
     k = leaves[0].shape[0]
-    sizes = [l.size // k for l in leaves]
-    flat = jnp.concatenate(
-        [l.reshape(k, -1).astype(jnp.float32) for l in leaves], axis=1)
-    out = agg_flat(flat, wn, block_p=block_p, interpret=interpret)
-    parts, off = [], 0
+    # layout, once per trace: per-leaf flat sizes + the padded total
+    sizes = [leaf.size // k for leaf in leaves]
+    p = sum(sizes)
+    pp = pad_to(p, block_p)
+    route = common.route_op(OP_NAME, k * p, interpret=interpret,
+                            force_interpret=force_interpret)
+    if route == "jnp":
+        from repro.core import sync
+        return sync.weighted_average(trees, weights)
+    w = weights.astype(jnp.float32)
+    wn = w / jnp.maximum(jnp.sum(w), 1e-12)
+    # one concatenate builds the already-padded (K, PP) buffer: the zero
+    # tail is just another concat operand, not a second full-size pad copy
+    parts = [leaf.reshape(k, -1).astype(jnp.float32) for leaf in leaves]
+    if pp > p:
+        parts.append(jnp.zeros((k, pp - p), jnp.float32))
+    flat = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    out = kernel.agg_weighted_kernel(flat, wn, block_p=block_p,
+                                     interpret=use_interpret(interpret))
+    parts_out, off = [], 0
     for leaf, sz in zip(leaves, sizes):
-        parts.append(out[off:off + sz].reshape(leaf.shape[1:])
-                     .astype(leaf.dtype))
+        parts_out.append(out[off:off + sz].reshape(leaf.shape[1:])
+                         .astype(leaf.dtype))
         off += sz
-    return jax.tree.unflatten(treedef, parts)
+    return jax.tree.unflatten(treedef, parts_out)

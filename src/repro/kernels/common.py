@@ -1,7 +1,32 @@
-"""Shared kernel utilities."""
+"""Shared kernel utilities: interpret-mode detection, padding, and the
+compiled-aware dispatch bookkeeping (DESIGN.md §16.2).
+
+Every kernel op *reports* how it actually ran — ``'compiled'`` (real Pallas
+lowering on an accelerator), ``'interpret'`` (the Python-grid emulation used
+on CPU), or ``'jnp'`` (the op routed to its jnp reference because interpret
+mode would eat a ~28× penalty on a heavy op — the footgun measured in
+``BENCH_fedgs_fused.json``'s pallas matrix column). The registry is filled
+at trace time (shapes are static), so one jit call is enough to know how a
+whole round executes; benchmarks snapshot it per cell via :func:`op_modes`.
+"""
 from __future__ import annotations
 
+import warnings
+
 import jax
+
+# Interpret-mode Pallas executes the grid in Python: fine for correctness
+# tests and small ops, catastrophic for per-iteration training math. Ops
+# whose element count exceeds this threshold are "heavy" and route to their
+# jnp reference instead (unless force_interpret pins them). 2^16 keeps the
+# quick-scale selection kernels and the parity-test aggregations on the
+# interpret path while the conv superbatch and the CNN-sized gradient
+# aggregations fall through.
+HEAVY_INTERPRET_ELEMS = 1 << 16
+
+# op name -> 'compiled' | 'interpret' | 'jnp' (latest routing decision)
+_MODES: dict[str, str] = {}
+_WARNED: set[str] = set()
 
 
 def use_interpret(override: bool | None = None) -> bool:
@@ -14,3 +39,48 @@ def use_interpret(override: bool | None = None) -> bool:
 
 def pad_to(n: int, mult: int) -> int:
     return ((n + mult - 1) // mult) * mult
+
+
+def note_mode(op: str, mode: str) -> None:
+    """Record how ``op`` last ran ('compiled' | 'interpret' | 'jnp')."""
+    _MODES[op] = mode
+
+
+def op_modes() -> dict[str, str]:
+    """Snapshot of the per-op execution-mode registry (DESIGN.md §16.2)."""
+    return dict(_MODES)
+
+
+def reset_modes() -> None:
+    _MODES.clear()
+
+
+def warn_once(key: str, msg: str) -> None:
+    if key not in _WARNED:
+        _WARNED.add(key)
+        warnings.warn(msg, RuntimeWarning, stacklevel=3)
+
+
+def route_op(op: str, n_elems: int, *, interpret: bool | None = None,
+             force_interpret: bool = False) -> str:
+    """Compiled-aware routing for one kernel op (DESIGN.md §16.2).
+
+    Returns ``'compiled'`` on a real accelerator, ``'interpret'`` when the
+    op is small enough (or ``force_interpret`` pins it — the tests' escape
+    hatch), and ``'jnp'`` when interpret mode would silently eat the heavy-op
+    penalty — warning once per op, and recording the decision in the mode
+    registry either way. ``n_elems`` is the number of elements the op
+    touches (static at trace time)."""
+    if not use_interpret(interpret):
+        note_mode(op, "compiled")
+        return "compiled"
+    if force_interpret or n_elems <= HEAVY_INTERPRET_ELEMS:
+        note_mode(op, "interpret")
+        return "interpret"
+    warn_once(op, f"kernels.{op}: Pallas would run in interpret mode on the "
+                  f"'{jax.default_backend()}' backend and this op touches "
+                  f"{n_elems} elements (> {HEAVY_INTERPRET_ELEMS}); routing "
+                  "to the jnp reference instead. Pass force_interpret=True "
+                  "(--force-interpret) to pin the interpret-mode kernel.")
+    note_mode(op, "jnp")
+    return "jnp"

@@ -1,0 +1,2 @@
+"""Fused conv→bias→ReLU→maxpool block as an im2col + tiled-matmul Pallas
+kernel with a matmul-only custom_vjp backward (DESIGN.md §16)."""

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: fused im2col-matmul conv block (DESIGN.md §16.1).
+
+One grid step computes a (block_r × Qp)·(Qp × Cp) tile of the im2col matmul
+on the MXU and applies the whole epilogue — bias add, ReLU, and the
+non-overlapping 2×2 maxpool — on the VPU before anything returns to HBM:
+the pre-activation tile ``y`` (the backward's ReLU/pool mask residual) and
+the pooled block output are the only writes. Rows are ordered (image,
+row, col), so a row block that is a multiple of 2·W covers whole image
+row-pairs and the pool never straddles a block boundary; the second grid
+axis walks row blocks, the first walks groups (per-group weights — this is
+the (M·L·n) conv superbatch of the FEDGS round collapsed into ONE kernel
+launch).
+
+Qp (im2col features, k²·Cin) and Cp (output channels) are padded to the
+128-lane MXU width by the ops wrapper; zero feature columns and zero weight
+rows contribute nothing to the matmul, and padded output channels are
+sliced off outside.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_fused_kernel(x_ref, w_ref, b_ref, o_ref, y_ref, *,
+                       block_r: int, w_img: int, pool: bool):
+    x = x_ref[0]                                   # (block_r, Qp)
+    w = w_ref[0]                                   # (Qp, Cp)
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b_ref[0]
+    y_ref[0] = y.astype(y_ref.dtype)
+    a = jnp.maximum(y, 0.0)                        # fused ReLU
+    if pool:
+        c = a.shape[-1]
+        pairs = block_r // (2 * w_img)             # image row-pairs in block
+        a = a.reshape(pairs, 2, w_img // 2, 2, c)
+        o_ref[0] = jnp.max(jnp.max(a, axis=3), axis=1).reshape(
+            block_r // 4, c).astype(o_ref.dtype)
+    else:
+        o_ref[0] = a.astype(o_ref.dtype)
+
+
+def conv_fused_kernel(patches: jax.Array, w: jax.Array, bias: jax.Array, *,
+                      w_img: int, block_r: int, pool: bool = True,
+                      interpret: bool = True
+                      ) -> tuple[jax.Array, jax.Array]:
+    """patches (G, Rp, Qp) — im2col rows in (image, row, col) order; w
+    (G, Qp, Cp); bias (G, 1, Cp). Returns ``(out, y)`` with ``y`` the
+    (G, Rp, Cp) pre-activation (backward residual) and ``out`` the block
+    output — (G, Rp/4, Cp) pooled, or (G, Rp, Cp) with ``pool=False``.
+    Rp must divide by block_r; with ``pool``, block_r by 2·w_img."""
+    g, rp, qp = patches.shape
+    cp = w.shape[-1]
+    assert rp % block_r == 0, (rp, block_r)
+    if pool:
+        assert block_r % (2 * w_img) == 0 and w_img % 2 == 0, (block_r, w_img)
+    out_r = rp // 4 if pool else rp
+    out_block = block_r // 4 if pool else block_r
+
+    kernel = functools.partial(_conv_fused_kernel, block_r=block_r,
+                               w_img=w_img, pool=pool)
+    return pl.pallas_call(
+        kernel,
+        grid=(g, rp // block_r),
+        in_specs=[
+            pl.BlockSpec((1, block_r, qp), lambda ig, ir: (ig, ir, 0)),
+            pl.BlockSpec((1, qp, cp), lambda ig, ir: (ig, 0, 0)),
+            pl.BlockSpec((1, 1, cp), lambda ig, ir: (ig, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, out_block, cp), lambda ig, ir: (ig, ir, 0)),
+            pl.BlockSpec((1, block_r, cp), lambda ig, ir: (ig, ir, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, out_r, cp), jnp.float32),
+            jax.ShapeDtypeStruct((g, rp, cp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(patches, w, bias)

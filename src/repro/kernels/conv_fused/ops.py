@@ -1,0 +1,177 @@
+"""Fused conv block: grouped im2col + matmul with a matmul-only backward.
+
+The public op is :func:`conv_block_grouped` — x (G, B, H, W, Cin) with
+per-group weights (G, kh, kw, Cin, Cout) → pooled (G, B, H/2, W/2, Cout) —
+the whole (M·L·n) conv superbatch of a FEDGS round in ONE dispatch
+(DESIGN.md §16.1). Three pieces:
+
+* **im2col by shifted slices** — k² static slices of the zero-padded input
+  concatenated on the feature axis (order (kh, kw, cin), matching
+  ``w.reshape(k²·Cin, Cout)``). Unlike ``conv_general_dilated_patches``
+  (itself a k²C-channel conv) this is pure data movement, and its transpose
+  (:func:`_col2im`) is k² pad-and-add slices.
+* **compiled-aware routing** (``kernels.common.route_op``) — on a real
+  accelerator the matmul+epilogue runs as the Pallas kernel (kernel.py); on
+  CPU the op is heavy, so it routes to the identical-math jnp einsum
+  instead of eating the interpret penalty (``force_interpret=True`` pins
+  the interpret kernel for parity tests).
+* **``jax.custom_vjp`` backward that reuses the im2col buffer** — the
+  forward saves (patches, pre-activation y); the backward is two batched
+  matmuls (dW = patchesᵀ·dy, dpatches = dy·wᵀ) plus elementwise ReLU/pool
+  masks and the cheap col2im adds. No transposed convolution ever runs —
+  on XLA:CPU the conv VJP is the single most expensive op in the CNN round
+  (BENCH_fedgs_fused.json pre-§16).
+
+Tile sizing for the kernel route comes from the §Roofline analytic model
+(``launch/roofline_model.conv_tile_rows``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .. import common
+from . import kernel, ref
+
+__all__ = ["conv_block_grouped", "conv_block", "im2col", "conv_roofline"]
+
+
+def im2col(x: jax.Array, ksz: tuple[int, int]) -> jax.Array:
+    """x (G, B, H, W, C) → patches (G, B·H·W, kh·kw·C), rows in (image,
+    row, col) order, features in (kh, kw, c) order (SAME padding)."""
+    g, b, h, w, c = x.shape
+    kh, kw = ksz
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (0, 0), (ph, ph), (pw, pw), (0, 0)))
+    cols = [xp[:, :, i:i + h, j:j + w, :]
+            for i in range(kh) for j in range(kw)]
+    return jnp.concatenate(cols, axis=-1).reshape(g, b * h * w, kh * kw * c)
+
+
+def _col2im(dpat: jax.Array, ksz: tuple[int, int],
+            shape: tuple[int, ...]) -> jax.Array:
+    """Transpose of :func:`im2col`: scatter-add the k² patch slabs back
+    onto the (padded) image grid — static-slice adds, no conv."""
+    g, b, h, w, c = shape
+    kh, kw = ksz
+    ph, pw = kh // 2, kw // 2
+    d = dpat.reshape(g, b, h, w, kh * kw, c)
+    dxp = jnp.zeros((g, b, h + 2 * ph, w + 2 * pw, c), dpat.dtype)
+    for n, (i, j) in enumerate((i, j) for i in range(kh) for j in range(kw)):
+        dxp = dxp.at[:, :, i:i + h, j:j + w, :].add(d[:, :, :, :, n, :])
+    return dxp[:, :, ph:ph + h, pw:pw + w, :]
+
+
+def conv_roofline(g: int, r: int, q: int, cout: int) -> dict:
+    """Analytic roofline terms for one fused conv-block dispatch
+    (§Roofline; recorded next to measured numbers in BENCH_kernels.json)."""
+    flops = 2.0 * g * r * q * cout
+    # one HBM pass each: patches, weights, y residual, pooled out (r/4)
+    hbm = 4.0 * g * (r * q + q * cout + r * cout + r * cout / 4.0)
+    return {"flops": flops, "hbm_bytes": hbm, "intensity": flops / hbm}
+
+
+def _forward(x, w, b, pool, interpret, force_interpret, block_r):
+    """Shared forward: returns (out, patches, y) with ``patches``
+    (G, R, Q) and ``y`` (G, R, Cout) the backward residuals."""
+    g, bsz, h, w_img, cin = x.shape
+    kh, kw, cout = w.shape[1], w.shape[2], w.shape[-1]
+    if pool:
+        assert h % 2 == 0 and w_img % 2 == 0, (
+            f"pool=True needs even spatial dims, got {(h, w_img)}")
+    q, r = kh * kw * cin, bsz * h * w_img
+    pat = im2col(x.astype(jnp.float32), (kh, kw))
+    wm = w.reshape(g, q, cout).astype(jnp.float32)
+    route = common.route_op("conv_fused", g * r * q, interpret=interpret,
+                            force_interpret=force_interpret)
+    if route == "jnp":
+        y = jnp.einsum("grq,gqc->grc", pat, wm) + b[:, None, :]
+        a = jax.nn.relu(y).reshape(g, bsz, h, w_img, cout)
+        out = jax.vmap(ref.maxpool2x2)(a) if pool else a
+        return out, pat, y
+    from repro.launch import roofline_model
+    qp = common.pad_to(q, 128)
+    cp = common.pad_to(cout, 128)
+    br = block_r or roofline_model.conv_tile_rows(w_img, qp, cp)
+    rp = common.pad_to(r, br)
+    patp = jnp.pad(pat, ((0, 0), (0, rp - r), (0, qp - q)))
+    wp = jnp.pad(wm, ((0, 0), (0, qp - q), (0, cp - cout)))
+    bp = jnp.pad(b.astype(jnp.float32), ((0, 0), (0, cp - cout)))[:, None, :]
+    out_k, y_k = kernel.conv_fused_kernel(
+        patp, wp, bp, w_img=w_img, block_r=br, pool=pool,
+        interpret=common.use_interpret(interpret))
+    y = y_k[:, :r, :cout]
+    if pool:
+        out = out_k[:, :r // 4, :cout].reshape(
+            g, bsz, h // 2, w_img // 2, cout)
+    else:
+        out = out_k[:, :r, :cout].reshape(g, bsz, h, w_img, cout)
+    return out, pat, y
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _conv_block(x, w, b, pool, interpret, force_interpret, block_r, spatial):
+    out, _, _ = _forward(x, w, b, pool, interpret, force_interpret, block_r)
+    return out
+
+
+def _conv_block_fwd(x, w, b, pool, interpret, force_interpret, block_r,
+                    spatial):
+    out, pat, y = _forward(x, w, b, pool, interpret, force_interpret,
+                           block_r)
+    return out, (pat, y, w)
+
+
+def _conv_block_bwd(pool, interpret, force_interpret, block_r, spatial,
+                    res, gout):
+    pat, y, w = res                       # pat (G,R,Q) — the reused buffer
+    h, w_img = spatial
+    g, r, q = pat.shape
+    kh, kw, cin, cout = w.shape[1:]
+    bsz = r // (h * w_img)
+    a = jax.nn.relu(y)
+    if pool:
+        a5 = a.reshape(g, bsz, h // 2, 2, w_img // 2, 2, cout)
+        pooled = jnp.max(a5, axis=(3, 5))
+        eq = (a5 == pooled[:, :, :, None, :, None, :]).astype(jnp.float32)
+        ties = jnp.sum(eq, axis=(3, 5), keepdims=True)
+        # ties split the max subgradient evenly — jnp.max's convention,
+        # matching the ref oracle and models.cnn._maxpool
+        da = (eq * (gout[:, :, :, None, :, None, :] / ties)
+              ).reshape(g, r, cout)
+    else:
+        da = gout.reshape(g, r, cout)
+    dy = da * (y > 0)                     # ReLU mask (grad 0 at y == 0)
+    wm = w.reshape(g, q, cout).astype(jnp.float32)
+    dw = jnp.einsum("grq,grc->gqc", pat, dy).reshape(w.shape)
+    db = jnp.sum(dy, axis=1)
+    dpat = jnp.einsum("grc,gqc->grq", dy, wm)
+    dx = _col2im(dpat, (kh, kw), (g, bsz, h, w_img, cin))
+    return dx, dw.astype(w.dtype), db
+
+
+_conv_block.defvjp(_conv_block_fwd, _conv_block_bwd)
+
+
+def conv_block_grouped(x: jax.Array, w: jax.Array, b: jax.Array, *,
+                       pool: bool = True, interpret: bool | None = None,
+                       force_interpret: bool = False,
+                       block_r: int = 0) -> jax.Array:
+    """Fused grouped conv block (same contract as ``ref.conv_block_grouped``
+    to 1e-5): x (G, B, H, W, Cin), per-group w (G, kh, kw, Cin, Cout) and
+    b (G, Cout) → (G, B, H/2, W/2, Cout) (``pool=False``: (G, B, H, W,
+    Cout)). ``block_r`` overrides the roofline row-tile choice."""
+    return _conv_block(x, w, b, pool, interpret, force_interpret, block_r,
+                       (x.shape[2], x.shape[3]))
+
+
+def conv_block(x: jax.Array, w: jax.Array, b: jax.Array, *,
+               pool: bool = True, interpret: bool | None = None,
+               force_interpret: bool = False, block_r: int = 0) -> jax.Array:
+    """Ungrouped convenience wrapper: x (B, H, W, Cin), w (kh, kw, Cin,
+    Cout), b (Cout,) — one group."""
+    return conv_block_grouped(
+        x[None], w[None], b[None], pool=pool, interpret=interpret,
+        force_interpret=force_interpret, block_r=block_r)[0]

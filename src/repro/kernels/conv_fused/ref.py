@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the fused conv block (DESIGN.md §16.1).
+
+``conv_block(x, w, b)`` = 2×2-maxpool(ReLU(conv_SAME(x, w) + b)) built from
+``lax.conv_general_dilated`` + the reshape-max pool — exactly the layer the
+FEMNIST CNN (models/cnn.py) applies twice per forward. The grouped variant
+vmaps it over a leading group axis with per-group weights: the independent
+oracle the im2col kernel (kernel.py/ops.py) is pinned against in
+tests/test_conv_fused.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def maxpool2x2(x: jax.Array) -> jax.Array:
+    """Non-overlapping 2×2 max as reshape+max (same subgradient convention
+    as models.cnn._maxpool: ties split evenly)."""
+    b, h, w, c = x.shape
+    assert h % 2 == 0 and w % 2 == 0, (
+        f"maxpool2x2 needs even spatial dims, got {(h, w)}")
+    return jnp.max(x.reshape(b, h // 2, 2, w // 2, 2, c), axis=(2, 4))
+
+
+def conv_block(x: jax.Array, w: jax.Array, b: jax.Array, *,
+               pool: bool = True) -> jax.Array:
+    """x (B, H, W, Cin), w (kh, kw, Cin, Cout), b (Cout,) →
+    (B, H/2, W/2, Cout) with ``pool`` (H, W even), else (B, H, W, Cout)."""
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + b
+    a = jax.nn.relu(y)
+    return maxpool2x2(a) if pool else a
+
+
+def conv_block_grouped(x: jax.Array, w: jax.Array, b: jax.Array, *,
+                       pool: bool = True) -> jax.Array:
+    """Grouped oracle: x (G, B, H, W, Cin), w (G, kh, kw, Cin, Cout),
+    b (G, Cout) — per-group weights, vmapped ``lax.conv``."""
+    return jax.vmap(lambda xg, wg, bg: conv_block(xg, wg, bg, pool=pool))(
+        x, w, b)

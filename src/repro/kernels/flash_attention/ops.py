@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .. import common
 from ..common import use_interpret
 from . import kernel
 
@@ -18,6 +19,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     interpret: bool | None = None) -> jax.Array:
     """Model layout q (B,S,H,D), k/v (B,S,KV,D/Dv) -> (B,S,H,Dv)."""
     interp = use_interpret(interpret)
+    common.note_mode("flash_attention", "interpret" if interp else "compiled")
     qt = jnp.moveaxis(q, 2, 1)          # (B,H,S,D)
     kt = jnp.moveaxis(k, 2, 1)
     vt = jnp.moveaxis(v, 2, 1)

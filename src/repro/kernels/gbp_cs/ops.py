@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .. import common
 from ..common import pad_to, use_interpret
 from . import kernel
 
@@ -30,6 +31,9 @@ def fused_step(A: jax.Array, x: jax.Array, y: jax.Array, *, bk: int = LANE,
     so ``gbp_cs_minimize(..., step_fn=fused_step)`` swaps it in.
     """
     interp = use_interpret(interpret)
+    # selection instances are tiny (F×K counts), so the kernel always runs —
+    # no heavy-op jnp fallback; the registry still reports the mode (§16.2)
+    common.note_mode("gbp_cs", "interpret" if interp else "compiled")
     Ap, xp, yp, k = _pad_inputs(A.astype(jnp.float32), x.astype(jnp.float32),
                                 y.astype(jnp.float32), bk)
     r, _ = kernel.residual(Ap, xp, yp, bk=bk, interpret=interp)

@@ -22,11 +22,14 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from .. import common
 from ..agg_weighted import ops as agg_ops
 from ..common import pad_to, use_interpret
 from . import kernel
 
 PyTree = Any
+
+OP_NAME = "robust_agg"
 
 _EPS = 1e-12
 
@@ -52,13 +55,27 @@ def _unflatten(out: jax.Array, leaves, treedef) -> PyTree:
 def robust_aggregate_tree(grads: PyTree, weights: jax.Array, *,
                           method: str, clip: float = 10.0, trim: int = 1,
                           block_p: int = 512,
-                          interpret: bool | None = None) -> PyTree:
-    """Same contract as ``core.sync.robust_aggregate`` (leaves (K, ...))."""
+                          interpret: bool | None = None,
+                          force_interpret: bool = False) -> PyTree:
+    """Same contract as ``core.sync.robust_aggregate`` (leaves (K, ...)).
+
+    Compiled-aware (DESIGN.md §16.2): on CPU a heavy aggregation routes to
+    ``sync.robust_aggregate`` (≤1e-5 of the rank kernel) instead of the
+    interpret penalty, unless ``force_interpret`` pins the kernel."""
     if method == "mean":
         # the historical kernel path, bit-identical to agg_weighted — NaN
         # members propagate by design (the non-robust baseline)
         return agg_ops.weighted_average_tree(
-            grads, weights, block_p=block_p, interpret=interpret)
+            grads, weights, block_p=block_p, interpret=interpret,
+            force_interpret=force_interpret)
+    leaves0 = jax.tree.leaves(grads)
+    n_elems = sum(leaf.size for leaf in leaves0)
+    route = common.route_op(OP_NAME, n_elems, interpret=interpret,
+                            force_interpret=force_interpret)
+    if route == "jnp":
+        from repro.core import sync
+        return sync.robust_aggregate(grads, weights, method, clip=clip,
+                                     trim=trim)
     flat, leaves, treedef = _flatten(grads)
     finite = jnp.all(jnp.isfinite(flat), axis=1)
     w = weights.astype(jnp.float32) * finite.astype(jnp.float32)

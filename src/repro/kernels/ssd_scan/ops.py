@@ -5,6 +5,7 @@ import functools
 
 import jax
 
+from .. import common
 from ..common import use_interpret
 from . import kernel
 
@@ -15,6 +16,7 @@ def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
              interpret: bool | None = None) -> jax.Array:
     """Drop-in for models.ssm.ssd_chunked (returns y only; zero init state)."""
     interp = use_interpret(interpret)
+    common.note_mode("ssd_scan", "interpret" if interp else "compiled")
     chunk = min(chunk, x.shape[1])
     return kernel.ssd_scan_kernel(x, dt, A, B, C, chunk=chunk,
                                   interpret=interp)

@@ -170,6 +170,25 @@ def step_bytes(cfg: ArchConfig, shape: InputShape, *, grad_accum: int = 1,
             "weights_ideal": w_ideal}
 
 
+def conv_tile_rows(w_img: int, qp: int, cp: int, *,
+                   vmem_bytes: int = 4 << 20, max_rows: int = 1024) -> int:
+    """Row-block size for the fused im2col conv kernel (DESIGN.md §16.1).
+
+    VMEM per grid step holds the (rows × qp) patch tile, the (qp × cp)
+    weight tile and two (rows × cp) outputs (pre-activation + block out) in
+    f32; solve for the largest ``rows`` under the budget, then round down
+    to the pool/sublane granularity — a multiple of 2·w_img (so the 2×2
+    pool never straddles a block) that is also a multiple of the 8-row f32
+    sublane. The floor is one such granule: correctness never depends on
+    the budget, only utilization does."""
+    gran = 2 * w_img
+    while gran % 8:
+        gran *= 2
+    budget = max(vmem_bytes // FP32 - qp * cp, gran * (qp + 2 * cp))
+    rows = budget // (qp + 2 * cp)
+    return int(max(gran, min(rows, max_rows) // gran * gran))
+
+
 @dataclasses.dataclass
 class AnalyticRoofline:
     flops_ideal: float

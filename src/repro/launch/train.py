@@ -103,8 +103,14 @@ def main() -> None:
                          "the paper's literal L one-step models (oracle)")
     ap.add_argument("--kernel-backend", choices=("jnp", "pallas"),
                     default="jnp",
-                    help="route aggregation + GBP-CS steps through jnp or "
-                         "the Pallas kernels (interpret-mode on CPU)")
+                    help="route aggregation, GBP-CS steps and the conv "
+                         "superbatch through jnp or the Pallas kernels "
+                         "(compiled-aware: on CPU heavy kernel ops fall "
+                         "back to jnp, DESIGN.md §16.2)")
+    ap.add_argument("--force-interpret", action="store_true",
+                    help="pin Pallas interpret mode for heavy ops instead "
+                         "of the compiled-aware jnp fallback (parity/debug "
+                         "only — ~28x slower on CPU; DESIGN.md §16.2)")
     ap.add_argument("--drift", choices=DRIFT_SCHEDULES, default="static",
                     help="dynamic environment: drift schedule of the "
                          "per-device class distributions (DESIGN.md §13)")
@@ -251,6 +257,7 @@ def main() -> None:
             batch_size=args.batch_size, selection=args.selection,
             init=args.init, seed=args.seed, train_step=args.train_step,
             kernel_backend=args.kernel_backend,
+            force_interpret=args.force_interpret,
             reselect_every=args.reselect_every, sync=args.sync,
             gamma=args.gamma, max_staleness=args.max_staleness,
             avail_selection=args.avail_selection,
@@ -258,6 +265,15 @@ def main() -> None:
             robust_trim=args.robust_trim,
             quarantine_limit=args.quarantine_limit,
             nan_guard=not args.no_nan_guard)
+        # §16.1 all-groups superbatch CNN backward: one fused conv dispatch
+        # per layer across all M·L members. grad_avg-only, and the robust
+        # path needs per-member gradients, so it falls back there.
+        grouped_ok = (args.train_step == "grad_avg"
+                      and args.corrupt == "none"
+                      and args.robust_agg == "mean")
+        group_loss_fn = cnn.make_group_loss_fn(
+            args.kernel_backend, force_interpret=args.force_interpret) \
+            if grouped_ok else None
         if args.engine == "host":
             if drift is None:
                 streams = FactoryStreams(part, batch_size=args.batch_size,
@@ -272,7 +288,8 @@ def main() -> None:
                     drift=drift))
             final, _ = fedgs.run_fedgs(
                 params, cnn.loss_fn, streams, part.p_real, fcfg,
-                avail_fn=avail_fn, corrupt_fn=corrupt_fn, eval_fn=eval_fn,
+                avail_fn=avail_fn, corrupt_fn=corrupt_fn,
+                group_loss_fn=group_loss_fn, eval_fn=eval_fn,
                 eval_every=args.eval_every, log_fn=log_fn)
         else:
             sampler = make_device_sampler(DeviceStream.from_partition(
@@ -285,14 +302,15 @@ def main() -> None:
             # bodies would blow up compile time (DESIGN.md §12.2)
             final, _ = fedgs.run_fedgs_fused(
                 params, cnn.loss_fn, sampler, part.p_real, fcfg, mesh=mesh,
-                avail_fn=avail_fn, corrupt_fn=corrupt_fn, eval_fn=eval_fn,
+                avail_fn=avail_fn, corrupt_fn=corrupt_fn,
+                group_loss_fn=group_loss_fn, eval_fn=eval_fn,
                 eval_every=args.eval_every, log_fn=log_fn,
                 chunk=args.eval_chunk,
                 unroll=0 if args.eval_chunk == 1 else 1)
     else:
-        for flag in ("train_step", "kernel_backend", "selection", "init",
-                     "reselect_every", "avail", "sync", "corrupt",
-                     "robust_agg", "quarantine_limit"):
+        for flag in ("train_step", "kernel_backend", "force_interpret",
+                     "selection", "init", "reselect_every", "avail", "sync",
+                     "corrupt", "robust_agg", "quarantine_limit"):
             if getattr(args, flag) != ap.get_default(flag):
                 print(f"warning: --{flag.replace('_', '-')} applies only to "
                       f"--strategy fedgs; ignored for {args.strategy}",

@@ -82,6 +82,45 @@ def loss_fn(params: PyTree, batch: tuple) -> Array:
     return -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
 
 
+def make_group_loss_fn(backend: str = "jnp", *,
+                       force_interpret: bool = False):
+    """Grouped CNN loss for the all-groups superbatch train step
+    (DESIGN.md §16.1): ``group_loss(group_params, batch) -> (M, L)``.
+
+    ``group_params`` leaves carry a leading group axis (M, ...); ``batch``
+    is ``(x (M, L, n, 28, 28[, 1]), y (M, L, n))``. Per (group, device)
+    entry the value is *identical math* to :func:`loss_fn` on that batch —
+    but the conv stack runs as ONE flattened (M·L·n) dispatch per layer
+    through ``core.dispatch.conv_stack_fn`` (im2col + batched matmul with a
+    matmul-only backward) and the dense layers as batched einsums, instead
+    of M·L small convs whose transposed-conv VJP dominates the CNN round on
+    XLA:CPU. Feed it to the ``group_loss_fn`` parameter of the FEDGS
+    engines; ``backend``/``force_interpret`` mirror
+    ``FedGSConfig.kernel_backend``/``force_interpret``."""
+    from repro.core import dispatch
+    conv = dispatch.conv_stack_fn(backend, force_interpret=force_interpret)
+
+    def group_loss(gp: PyTree, batch: tuple) -> Array:
+        x, y = batch
+        m, l, n = y.shape
+        if x.ndim == 5:
+            x = x[..., None]
+        x = x.reshape((m, l * n) + x.shape[3:])
+        h = conv(x, gp["conv1"]["w"], gp["conv1"]["b"])
+        h = conv(h, gp["conv2"]["w"], gp["conv2"]["b"])
+        h = h.reshape(m, l * n, -1)
+        h = jax.nn.relu(jnp.einsum("gbf,gfh->gbh", h, gp["fc1"]["w"])
+                        + gp["fc1"]["b"][:, None, :])
+        logits = jnp.einsum("gbh,ghf->gbf", h, gp["fc2"]["w"]) \
+            + gp["fc2"]["b"][:, None, :]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(
+            logp, y.reshape(m, l * n)[..., None], axis=-1)[..., 0]
+        return nll.reshape(m, l, n).mean(-1)
+
+    return group_loss
+
+
 def make_model_api(cfg) -> ModelAPI:
     return ModelAPI(
         init=lambda key: init_cnn(key, cfg),

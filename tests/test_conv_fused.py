@@ -1,0 +1,241 @@
+"""kernels/conv_fused: Pallas (interpret) vs ref.py oracle, custom_vjp
+gradients vs jax.grad of the jnp reference, and the compiled-aware routing
+contract (DESIGN.md §16.1–16.2).
+
+Gradient tolerances are *scaled*: the forward is bit-identical on every
+route (same im2col + matmul contraction order), but the backward pits the
+hand-written matmul-only VJP against XLA's autodiff of the reference, and
+at CNN-scale shapes f32 accumulation-order noise reaches ~3e-4 relative —
+so gradients are compared as ``atol + rtol·scale``, not flat 1e-5.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.kernels import common
+from repro.kernels.conv_fused import ops, ref
+
+
+def _rand(seed, *shapes):
+    ks = jax.random.split(jax.random.PRNGKey(seed), len(shapes))
+    return [jax.random.normal(k, s, jnp.float32) * 0.5
+            for k, s in zip(ks, shapes)]
+
+
+def _grad_close(gk, gr, *, rtol=5e-4, atol=1e-5):
+    for a, b in zip(jax.tree.leaves(gk), jax.tree.leaves(gr)):
+        scale = float(jnp.abs(b).max())
+        err = float(jnp.abs(a - b).max())
+        assert err <= atol + rtol * scale, (err, scale)
+
+
+# ---------------------------------------------------------------------------
+# forward parity: interpret-mode kernel vs jnp reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pool", [True, False])
+@pytest.mark.parametrize("g,b,h,w,cin,cout,k", [
+    (2, 2, 6, 6, 3, 5, 3),     # even dims, k3
+    (1, 3, 4, 8, 2, 7, 5),     # non-square, k5
+    (1, 2, 10, 10, 1, 8, 5),   # single input channel
+    (1, 5, 6, 6, 2, 3, 3),     # batch not a multiple of any block row tile
+])
+def test_forward_parity_interpret(g, b, h, w, cin, cout, k, pool):
+    x, wt, bias = _rand(g * 100 + h, (g, b, h, w, cin),
+                        (g, k, k, cin, cout), (g, cout))
+    out = ops.conv_block_grouped(x, wt, bias, pool=pool,
+                                 force_interpret=True)
+    want = ref.conv_block_grouped(x, wt, bias, pool=pool)
+    assert out.shape == want.shape
+    assert float(jnp.abs(out - want).max()) <= 1e-5
+
+
+def test_forward_parity_odd_dims_nopool():
+    """Odd spatial dims are legal with pool=False (pool=True asserts)."""
+    x, wt, bias = _rand(7, (2, 1, 7, 7, 3), (2, 3, 3, 3, 4), (2, 4))
+    out = ops.conv_block_grouped(x, wt, bias, pool=False,
+                                 force_interpret=True)
+    want = ref.conv_block_grouped(x, wt, bias, pool=False)
+    assert float(jnp.abs(out - want).max()) <= 1e-5
+    with pytest.raises(AssertionError, match="even spatial"):
+        ops.conv_block_grouped(x, wt, bias, pool=True, force_interpret=True)
+
+
+def test_ungrouped_wrapper_matches_lax_conv():
+    """conv_block == relu(lax.conv + b) → maxpool, the models.cnn stack."""
+    from repro.models import cnn
+    x, wt = _rand(3, (4, 8, 8, 3), (5, 5, 3, 6))
+    bias = _rand(4, (6,))[0]
+    out = ops.conv_block(x, wt, bias, force_interpret=True)
+    want = cnn._maxpool(jax.nn.relu(
+        cnn._conv({"w": wt, "b": bias}, x)))
+    assert float(jnp.abs(out - want).max()) <= 1e-4
+
+
+@settings(max_examples=10, deadline=None)
+@given(hh=st.integers(2, 5), b=st.integers(1, 4), cin=st.integers(1, 3),
+       cout=st.integers(1, 6), seed=st.integers(0, 99))
+def test_forward_and_grad_property(hh, b, cin, cout, seed):
+    """Property: parity + custom_vjp grads hold for arbitrary small shapes
+    through the interpret-mode kernel."""
+    h = 2 * hh
+    x, wt, bias = _rand(seed, (1, b, h, h, cin),
+                        (1, 3, 3, cin, cout), (1, cout))
+    out = ops.conv_block_grouped(x, wt, bias, force_interpret=True)
+    want = ref.conv_block_grouped(x, wt, bias)
+    assert float(jnp.abs(out - want).max()) <= 1e-5
+
+    def lk(*a):
+        return jnp.sum(jnp.sin(ops.conv_block_grouped(
+            *a, force_interpret=True)))
+
+    def lr(*a):
+        return jnp.sum(jnp.sin(ref.conv_block_grouped(*a)))
+
+    gk = jax.grad(lk, argnums=(0, 1, 2))(x, wt, bias)
+    gr = jax.grad(lr, argnums=(0, 1, 2))(x, wt, bias)
+    _grad_close(gk, gr)
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp backward vs jax.grad of the reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pool", [True, False])
+def test_custom_vjp_grads_jnp_route(pool):
+    """The heavy-op jnp route still goes through the custom matmul-only
+    backward (the custom_vjp wraps routing) — grads must match autodiff of
+    the reference to f32 accumulation noise."""
+    g, b, h, w, cin, cout, k = 2, 8, 28, 28, 8, 16, 5
+    x, wt, bias = _rand(11, (g, b, h, w, cin), (g, k, k, cin, cout),
+                        (g, cout))
+    assert g * (b * h * w) * (k * k * cin) > common.HEAVY_INTERPRET_ELEMS
+
+    def lk(*a):
+        return jnp.sum(jnp.sin(ops.conv_block_grouped(*a, pool=pool)))
+
+    def lr(*a):
+        return jnp.sum(jnp.sin(ref.conv_block_grouped(*a, pool=pool)))
+
+    gk = jax.grad(lk, argnums=(0, 1, 2))(x, wt, bias)
+    gr = jax.grad(lr, argnums=(0, 1, 2))(x, wt, bias)
+    _grad_close(gk, gr)
+
+
+def test_grads_under_jit_and_vmap_compose():
+    """custom_vjp must survive the transforms the engines apply."""
+    x, wt, bias = _rand(13, (2, 2, 6, 6, 2), (2, 3, 3, 2, 4), (2, 4))
+
+    @jax.jit
+    def g(xx):
+        return jax.grad(lambda a: jnp.sum(
+            ops.conv_block_grouped(a, wt, bias, force_interpret=True)))(xx)
+
+    gr = jax.grad(lambda a: jnp.sum(
+        ref.conv_block_grouped(a, wt, bias)))(x)
+    _grad_close([g(x)], [gr])
+
+
+# ---------------------------------------------------------------------------
+# compiled-aware routing (DESIGN.md §16.2)
+# ---------------------------------------------------------------------------
+
+def test_route_op_contract():
+    common.reset_modes()
+    assert common.route_op("t_op", 10 ** 9, interpret=False) == "compiled"
+    assert common.route_op("t_op", 16, interpret=True) == "interpret"
+    assert common.route_op("t_op", 16, interpret=True,
+                           force_interpret=True) == "interpret"
+    common._WARNED.discard("t_op")
+    with pytest.warns(RuntimeWarning, match="routing to the jnp reference"):
+        assert common.route_op(
+            "t_op", common.HEAVY_INTERPRET_ELEMS + 1,
+            interpret=True) == "jnp"
+    assert common.op_modes()["t_op"] == "jnp"
+    # force_interpret pins the kernel even on heavy ops, silently
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert common.route_op(
+            "t_op", common.HEAVY_INTERPRET_ELEMS + 1, interpret=True,
+            force_interpret=True) == "interpret"
+
+
+def test_conv_modes_recorded_per_route():
+    x, wt, bias = _rand(17, (1, 2, 6, 6, 2), (1, 3, 3, 2, 4), (1, 4))
+    common.reset_modes()
+    ops.conv_block_grouped(x, wt, bias, interpret=True)  # small → kernel
+    assert common.op_modes()["conv_fused"] == "interpret"
+    common.reset_modes()
+    xl, wl, bl = _rand(19, (4, 16, 28, 28, 4), (4, 5, 5, 4, 8), (4, 8))
+    common._WARNED.discard("conv_fused")
+    with pytest.warns(RuntimeWarning):
+        out = ops.conv_block_grouped(xl, wl, bl, interpret=True)
+    assert common.op_modes()["conv_fused"] == "jnp"
+    want = ref.conv_block_grouped(xl, wl, bl)
+    assert float(jnp.abs(out - want).max()) <= 1e-5  # fallback is exact
+
+
+def test_dispatch_conv_stack_fn_backends():
+    """core.dispatch.conv_stack_fn: jnp and pallas backends agree; the
+    pallas stack reports its routing decision."""
+    from repro.core import dispatch
+    x, wt, bias = _rand(23, (2, 3, 8, 8, 2), (2, 3, 3, 2, 4), (2, 4))
+    out_j = dispatch.conv_stack_fn("jnp")(x, wt, bias)
+    common.reset_modes()
+    out_p = dispatch.conv_stack_fn("pallas")(x, wt, bias)
+    assert common.op_modes().get("conv_fused") in ("interpret", "jnp",
+                                                   "compiled")
+    assert float(jnp.abs(out_j - out_p).max()) <= 1e-5
+    with pytest.raises(ValueError, match="backend"):
+        dispatch.conv_stack_fn("nope")
+
+
+# ---------------------------------------------------------------------------
+# grouped CNN loss (the superbatch restructure, DESIGN.md §16.1)
+# ---------------------------------------------------------------------------
+
+def test_group_loss_matches_per_device_loss_fn():
+    """make_group_loss_fn == loss_fn per (group, device) cell: the ONE
+    flattened (M·L·n) dispatch changes the schedule, not the math."""
+    from repro.configs import femnist_cnn
+    from repro.models import cnn
+    m, l, n = 2, 3, 4
+    params = cnn.init_cnn(jax.random.PRNGKey(0), femnist_cnn.smoke_config())
+    gp = jax.tree.map(
+        lambda a: jnp.stack([a * (1 + 0.1 * i) for i in range(m)]), params)
+    kx, ky = jax.random.split(jax.random.PRNGKey(1))
+    x = jax.random.normal(kx, (m, l, n, 28, 28), jnp.float32)
+    y = jax.random.randint(ky, (m, l, n), 0, 62)
+    got = cnn.make_group_loss_fn("jnp")(gp, (x, y))
+    assert got.shape == (m, l)
+    for mi in range(m):
+        p_i = jax.tree.map(lambda a: a[mi], gp)
+        for li in range(l):
+            want = cnn.loss_fn(p_i, (x[mi, li], y[mi, li]))
+            assert abs(float(got[mi, li]) - float(want)) <= 1e-5
+
+
+def test_group_loss_grads_match_vmapped_loss_fn():
+    """Gradients of the superbatch loss == vmapped per-group grads of
+    loss_fn (what _train_all_groups relies on: disjoint per-group losses)."""
+    from repro.configs import femnist_cnn
+    from repro.models import cnn
+    m, l, n = 2, 2, 3
+    params = cnn.init_cnn(jax.random.PRNGKey(2), femnist_cnn.smoke_config())
+    gp = jax.tree.map(lambda a: jnp.stack([a] * m), params)
+    kx, ky = jax.random.split(jax.random.PRNGKey(3))
+    x = jax.random.normal(kx, (m, l, n, 28, 28), jnp.float32)
+    y = jax.random.randint(ky, (m, l, n), 0, 62)
+    glf = cnn.make_group_loss_fn("jnp")
+    g_sup = jax.grad(lambda p: jnp.mean(glf(p, (x, y))) * m)(gp)
+
+    def per_group(p_i, x_i, y_i):
+        return jnp.mean(jax.vmap(
+            lambda xd, yd: cnn.loss_fn(p_i, (xd, yd)))(x_i, y_i))
+
+    g_vm = jax.vmap(jax.grad(per_group))(gp, x, y)
+    _grad_close(jax.tree.leaves(g_sup), jax.tree.leaves(g_vm))

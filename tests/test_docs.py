@@ -36,6 +36,9 @@ def test_design_has_sections():
     assert "13" in secs, "DESIGN.md §13 (dynamic environments) missing"
     assert "14" in secs, "DESIGN.md §14 (device availability) missing"
     assert "15" in secs, "DESIGN.md §15 (corruption robustness) missing"
+    assert "16" in secs, "DESIGN.md §16 (conv fusion + dispatch) missing"
+    for sub in ("16.1", "16.2", "16.3", "16.4"):
+        assert sub in secs, f"DESIGN.md §{sub} missing"
 
 
 def test_all_design_references_resolve():
@@ -56,6 +59,19 @@ def test_readme_documents_dynamic_environments():
     layout = readme[readme.index("## Repository layout"):]
     for mod in ("engine.py", "dispatch.py", "streaming.py", "fedgs.py"):
         assert mod in layout, f"README repository layout missing {mod}"
+
+
+def test_readme_documents_kernel_dispatch():
+    """README must document the compiled-aware dispatch surface (§16): the
+    pin flag, the per-op routing table, and the kernels bench artifact."""
+    readme = (REPO / "README.md").read_text()
+    assert "--force-interpret" in readme, "README missing --force-interpret"
+    for word in ("op_modes", "conv_fused", "agg_weighted",
+                 "BENCH_kernels.json", "cnn_speedup_vs_host_device"):
+        assert word in readme, f"README kernel-dispatch section missing {word}"
+    design = DESIGN.read_text()
+    for claim in ("custom_vjp", "im2col", "route_op", "roofline"):
+        assert claim.lower() in design.lower(), f"DESIGN.md §16 missing {claim}"
 
 
 def test_readme_documents_robustness():

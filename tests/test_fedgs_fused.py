@@ -12,8 +12,10 @@ import pytest
 
 from repro.configs import femnist_cnn
 from repro.core import fedgs
-from repro.data import (DeviceBackedStreams, DeviceStream, PartitionConfig,
-                        make_device_sampler, make_partition)
+from repro.data import (AvailabilityConfig, DeviceBackedStreams,
+                        DeviceStream, PartitionConfig,
+                        make_availability_fn, make_device_sampler,
+                        make_partition)
 from repro.models import cnn
 
 # the small acceptance config: M=4, K=8, L=4, T=5, R=3
@@ -72,6 +74,78 @@ def test_fused_scan_equals_host_loop(setup):
                                [l.loss for l in fused_logs], atol=1e-5)
     np.testing.assert_allclose([l.divergence for l in host_logs],
                                [l.divergence for l in fused_logs], atol=1e-5)
+
+
+def test_grouped_superbatch_matches_vmapped(setup):
+    """§16.1 acceptance: the all-groups conv-superbatch train step
+    (``group_loss_fn``) reproduces the vmapped per-group path on BOTH
+    engines — one (M·L·n) dispatch per layer changes the schedule, never
+    the trained parameters (beyond f32 contraction-order noise)."""
+    part, sampler, params = setup
+    cfg = fedgs.FedGSConfig(**{**CFG, "rounds": 2})
+    glf = cnn.make_group_loss_fn("jnp")
+    vmapped, _ = fedgs.run_fedgs_fused(
+        params, cnn.loss_fn, sampler, part.p_real, cfg)
+    grouped, _ = fedgs.run_fedgs_fused(
+        params, cnn.loss_fn, sampler, part.p_real, cfg, group_loss_fn=glf)
+    assert _max_diff(vmapped, grouped) < 1e-5
+    host_grouped, _ = fedgs.run_fedgs(
+        params, cnn.loss_fn, DeviceBackedStreams(sampler), part.p_real,
+        cfg, group_loss_fn=glf)
+    assert _max_diff(host_grouped, grouped) < 1e-5
+
+
+def test_grouped_superbatch_pallas_backend(setup):
+    """The pallas conv stack (custom_vjp, §16.1) under the grouped step
+    stays within f32 noise of the jnp stack, and the compiled-aware router
+    reports how the conv actually ran (jnp fallback at CNN scale on CPU)."""
+    from repro.core import dispatch
+    part, sampler, params = setup
+    cfg = fedgs.FedGSConfig(**{**CFG, "rounds": 2})
+    ref_, _ = fedgs.run_fedgs_fused(
+        params, cnn.loss_fn, sampler, part.p_real, cfg,
+        group_loss_fn=cnn.make_group_loss_fn("jnp"))
+    dispatch.reset_op_modes()
+    pal, _ = fedgs.run_fedgs_fused(
+        params, cnn.loss_fn, sampler, part.p_real, cfg,
+        group_loss_fn=cnn.make_group_loss_fn("pallas"))
+    assert dispatch.op_modes().get("conv_fused") in ("jnp", "compiled")
+    assert _max_diff(ref_, pal) < 1e-3   # custom-VJP contraction noise
+
+
+def test_grouped_superbatch_bounded_async(setup):
+    """The grouped step's staleness blend (one weighted backward + g_prev
+    carry) matches the vmapped _per_group_train_avail path under Markov
+    churn with sync='bounded_async'."""
+    part, sampler, params = setup
+    cfg = fedgs.FedGSConfig(**{**CFG, "rounds": 2}, sync="bounded_async",
+                            gamma=0.5, max_staleness=3)
+    avail_fn = make_availability_fn(
+        AvailabilityConfig(schedule="markov", up_prob=0.6, dwell=3), 0,
+        CFG["num_groups"] * CFG["devices_per_group"])
+    vmapped, _ = fedgs.run_fedgs_fused(
+        params, cnn.loss_fn, sampler, part.p_real, cfg, avail_fn=avail_fn)
+    grouped, _ = fedgs.run_fedgs_fused(
+        params, cnn.loss_fn, sampler, part.p_real, cfg, avail_fn=avail_fn,
+        group_loss_fn=cnn.make_group_loss_fn("jnp"))
+    assert _max_diff(vmapped, grouped) < 1e-5
+
+
+def test_grouped_rejects_model_avg_and_robust(setup):
+    """group_loss_fn is a grad_avg-only contract: model_avg runs per-device
+    epochs and the robust path needs per-device gradients to clip/trim."""
+    part, sampler, params = setup
+    glf = cnn.make_group_loss_fn("jnp")
+    with pytest.raises(ValueError, match="grad_avg"):
+        fedgs.run_fedgs_fused(
+            params, cnn.loss_fn, sampler, part.p_real,
+            fedgs.FedGSConfig(**{**CFG, "train_step": "model_avg"}),
+            group_loss_fn=glf)
+    with pytest.raises(ValueError, match="robust"):
+        fedgs.run_fedgs_fused(
+            params, cnn.loss_fn, sampler, part.p_real,
+            fedgs.FedGSConfig(**{**CFG, "robust_agg": "clip_norm"}),
+            group_loss_fn=glf)
 
 
 def test_engine_config_dispatch(setup):
@@ -160,18 +234,30 @@ def test_fused_round_param_buffers_scale_with_m_not_ml(setup):
     key = jax.random.PRNGKey(0)
     p_real = jnp.asarray(part.p_real, jnp.float32)
     footprints = {}
-    for ts in ("grad_avg", "model_avg"):
+    legs = (("grad_avg", {}, None),
+            ("model_avg", {}, None),
+            # §16.1+§16.3: the grouped superbatch under the pallas backend
+            # (hoisted agg layout + conv_fused stack) — ONE backward over
+            # (M, θ), so the (M, L, θ) grad stack must not exist even as an
+            # intermediate. (The *vmapped* pallas round does materialize it
+            # on XLA:CPU — fusion stops eliminating the per-device stack —
+            # which is exactly why the grouped path is the pallas default.)
+            ("grad_avg_grouped_pallas", {"kernel_backend": "pallas"},
+             cnn.make_group_loss_fn("pallas")))
+    for name, extra, glf in legs:
         cfg = fedgs.FedGSConfig(
-            **{**CFG, "iters_per_round": 2, "train_step": ts,
-               "scan_unroll": 1})
-        text = fedgs.make_fused_round(cnn.loss_fn, cfg, sampler).lower(
+            **{**CFG, "iters_per_round": 2, "scan_unroll": 1,
+               "train_step": name.split("_")[0] + "_avg", **extra})
+        text = fedgs.make_fused_round(
+            cnn.loss_fn, cfg, sampler, group_loss_fn=glf).lower(
             gp, key, fedgs.init_selection_state(cfg), jnp.int32(0),
             p_real).compile().as_text()
-        footprints[ts] = hlo_analysis.param_replica_bytes(
+        footprints[name] = hlo_analysis.param_replica_bytes(
             text, weight_shapes, CFG["num_groups"], CFG["num_selected"])
     assert footprints["grad_avg"]["ml_count"] == 0, footprints
     assert footprints["model_avg"]["ml_count"] > 0, footprints
     assert footprints["grad_avg"]["m_count"] > 0, footprints
+    assert footprints["grad_avg_grouped_pallas"]["ml_count"] == 0, footprints
 
 
 def test_sharded_single_device_fallback(setup):

@@ -1,4 +1,6 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracle."""
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -131,6 +133,26 @@ def test_agg_weighted_property(k, p, seed):
     o_k = ops.agg_flat(stacked, w)
     np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_ref),
                                rtol=1e-5, atol=1e-5)
+
+
+def test_agg_tree_layout_is_hoisted():
+    """DESIGN.md §16.3: the flatten/pad layout builds ONE already-padded
+    (K, PP) buffer — the zero tail is a concat operand, so the compiled HLO
+    must contain no intermediate un-padded (K, P) flat tensor (the old
+    concat-then-pad layout materialized both)."""
+    from repro.kernels.agg_weighted import ops
+    k = 6
+    tree = {"a": jnp.ones((k, 3, 5)), "b": {"c": jnp.ones((k, 17))}}
+    w = jnp.ones((k,))
+    p, pp = 3 * 5 + 17, 512                     # default block_p
+    text = jax.jit(functools.partial(
+        ops.weighted_average_tree, force_interpret=True)).lower(
+            tree, w).compile().as_text()
+    assert f"f32[{k},{pp}]" in text, "padded agg buffer missing from HLO"
+    assert f"f32[{k},{p}]" not in text, (
+        "un-padded (K, P) flat buffer found: the pad tail is being "
+        "materialized as a second full-size copy instead of folding into "
+        "the layout concatenate")
 
 
 def test_agg_tree_matches_sync_weighted_average():
