@@ -1,0 +1,228 @@
+"""Population-scale sweep: M×K to ≥1e6 devices with flat memory.
+
+The lazy population (DESIGN.md §17) makes the device universe a pure
+function of the flat device id, so nothing about a round's cost or memory
+should depend on D = M·K_pop — only on the resident slots M·K. This suite
+*proves* that the way PR 2 proved the grad_avg buffer claim: each leg runs
+in its OWN subprocess and reports
+
+* ``peak_rss_kb`` — true per-leg peak host memory
+  (``common.peak_rss_kb``): the flat-memory headline. Gate:
+  the 1e6-device leg must stay within 2× of the 1e4-device leg.
+* ``fused_iters_per_sec`` — min-over-round-deltas throughput: per-round
+  time must scale with the *selected* devices, not the population. Gate:
+  the 1e6-device leg holds ≥50% of the 1e4-device leg's rate.
+* ``parity_max_abs`` — host == fused == sharded final params at the leg's
+  scale (≤ 1e-5), with a Markov availability schedule threaded through so
+  the per-resident-id chain evaluation is exercised at every D.
+* ``param_replica_bytes`` — HLO shape scan of the compiled fused round
+  (``launch.hlo_analysis.param_replica_bytes``): live parameter state
+  scales with M, and no (·, D)-shaped tensor can hide in the compiled
+  round because the HLO never sees D.
+
+Legs: a population sweep at fixed M=8 factories (K_pop = 1 250 → 125 000,
+D = 1e4 → 1e6) plus a sharded factory-axis leg (M=1024 factories ·
+K_pop=1024, D = 1 048 576) driving the ``P('groups')`` shard_map engine.
+Writes ``BENCH_scale.json``; gated by ``check_fused_regression.py --scale``
+(first-run tolerant — the gate checks this json's invariant booleans).
+
+  PYTHONPATH=src python -m benchmarks.run --only scale
+  PYTHONPATH=src python -m benchmarks.bench_scale --scale quick
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+PARITY_TOL = 1e-5
+RSS_RATIO_LIMIT = 2.0   # peak RSS of the 1e6 leg vs the 1e4 leg
+IPS_RATIO_FLOOR = 0.5   # throughput of the 1e6 leg vs the 1e4 leg
+
+_SWEEP = dict(k=16, l=4, l_rnd=1, t=5, rounds=4, n=16, engine="fused")
+
+
+def legs_for(quick: bool) -> dict[str, dict]:
+    legs = {
+        "pop_1e4": dict(m=8, k_pop=1_250, **_SWEEP),
+        "pop_1e6": dict(m=8, k_pop=125_000, **_SWEEP),
+        # factory axis in the thousands, sharded over the group mesh
+        "factory_axis_1e6": dict(m=1024, k_pop=1024, k=8, l=2, l_rnd=1,
+                                 t=2, rounds=3, n=8, engine="sharded"),
+    }
+    if not quick:
+        legs["pop_1e5"] = dict(m=8, k_pop=12_500, **_SWEEP)
+    return legs
+
+
+def _build(leg: dict, seed: int):
+    """Population + sampler + schedule for one leg (child process only)."""
+    import jax.numpy as jnp
+    from repro.data import (AvailabilityConfig, LazyPopulation,
+                            PopulationConfig, make_availability_fn,
+                            make_device_sampler)
+    pop = LazyPopulation(PopulationConfig(
+        num_factories=leg["m"], devices_per_factory=leg["k_pop"],
+        batch_size=leg["n"], seed=seed))
+    sampler = make_device_sampler(
+        pop, candidates=leg["k"] if leg["k_pop"] > leg["k"] else None,
+        candidate_every=5)
+    avail_fn = make_availability_fn(
+        AvailabilityConfig("markov", up_prob=0.8, dwell=4, horizon=8),
+        seed, pop.config.total_devices)
+    return pop, sampler, avail_fn, jnp.asarray(pop.p_real)
+
+
+def _cfg(leg: dict, seed: int, **overrides):
+    from repro.core import fedgs
+    kw = dict(num_groups=leg["m"], devices_per_group=leg["k"],
+              num_selected=leg["l"], num_presampled=leg["l_rnd"],
+              iters_per_round=leg["t"], rounds=leg["rounds"], lr=0.05,
+              batch_size=leg["n"], seed=seed, reselect_every=5,
+              engine=leg["engine"])
+    kw.update(overrides)
+    return fedgs.FedGSConfig(**kw)
+
+
+def run_leg(leg: dict, seed: int = 0) -> dict:
+    """Executed in a child process: parity triangle, throughput, HLO scan,
+    then the process-wide peak RSS (valid because nothing else ran here)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import baselines, fedgs
+    from repro.data import DeviceBackedStreams
+    from repro.launch import hlo_analysis
+
+    from benchmarks import common
+
+    probe = baselines.linear_probe_model()
+    params = probe.init(jax.random.PRNGKey(seed))
+
+    def loss_fn(p, batch):
+        x, y = batch
+        return baselines.softmax_xent(probe.apply(p, x), y)
+
+    pop, sampler, avail_fn, p_real = _build(leg, seed)
+
+    # -- parity triangle at this scale (short run: 2 rounds × 2 iters)
+    pcfg = dict(rounds=2, iters_per_round=2)
+    runs = {}
+    for eng in ("host", "fused", "sharded"):
+        cfg = _cfg(leg, seed, engine=eng, **pcfg)
+        streams = DeviceBackedStreams(sampler) if eng == "host" else sampler
+        final, _ = fedgs.run_fedgs(params, loss_fn, streams, p_real, cfg,
+                                   avail_fn=avail_fn)
+        runs[eng] = final
+    parity = max(
+        float(jnp.max(jnp.abs(a - b)))
+        for ref in ("fused",)
+        for other in ("host", "sharded")
+        for a, b in zip(jax.tree.leaves(runs[ref]),
+                        jax.tree.leaves(runs[other])))
+
+    # -- throughput of the leg's engine (min-over-round-deltas)
+    cfg = _cfg(leg, seed)
+    stamps: list[float] = []
+    fedgs.run_fedgs(params, loss_fn, sampler, p_real, cfg,
+                    avail_fn=avail_fn,
+                    log_fn=lambda _r: stamps.append(time.perf_counter()))
+    ips = common.min_delta_rate(stamps, cfg.iters_per_round)
+
+    # -- HLO buffer scan of the compiled round: parameter state ~ M, and
+    #    the compiled round cannot reference D at all
+    mesh = fedgs.make_group_mesh(leg["m"]) if leg["engine"] == "sharded" \
+        else None
+    round_fn = fedgs.make_fused_round(loss_fn, _cfg(leg, seed, scan_unroll=1),
+                                      sampler, avail_fn=avail_fn, mesh=mesh)
+    gp = fedgs.replicate_for_groups(params, leg["m"])
+    text = round_fn.lower(
+        gp, jax.random.PRNGKey(seed), fedgs.init_selection_state(cfg),
+        jnp.int32(0), p_real).compile().as_text()
+    weight_shapes = [leaf.shape for leaf in jax.tree.leaves(params)
+                     if leaf.ndim >= 2]
+    replicas = hlo_analysis.param_replica_bytes(text, weight_shapes,
+                                               leg["m"], leg["l"])
+    return {
+        "devices": pop.config.total_devices,
+        "engine": leg["engine"],
+        "config": {k: leg[k] for k in sorted(leg) if k != "engine"},
+        "parity_max_abs": parity,
+        "parity_ok": bool(parity <= PARITY_TOL),
+        "fused_iters_per_sec": round(ips, 2),
+        "param_replica_bytes": replicas,
+        "peak_rss_kb": common.peak_rss_kb(),
+    }
+
+
+def _spawn_leg(name: str, quick: bool) -> dict:
+    """Run one leg in a fresh interpreter so peak_rss_kb is per-leg truth."""
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_scale", "--leg", name,
+         "--scale", "quick" if quick else "full"],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    if proc.returncode != 0:
+        raise RuntimeError(f"leg {name} failed:\n{proc.stderr[-2000:]}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def run(quick: bool = True, json_path: str = "BENCH_scale.json") -> None:
+    from . import common
+    from .common import emit
+    legs = legs_for(quick)
+    out = {"scale": "quick" if quick else "full", "env": common.env_info(),
+           "legs": {}}
+    for name in legs:
+        rec = _spawn_leg(name, quick)
+        out["legs"][name] = rec
+        emit(f"scale.{name}", 1e6 / max(rec["fused_iters_per_sec"], 1e-9),
+             f"devices={rec['devices']};iters_per_sec="
+             f"{rec['fused_iters_per_sec']};peak_rss_kb={rec['peak_rss_kb']};"
+             f"parity={rec['parity_max_abs']:.2e}")
+    lo, hi = out["legs"]["pop_1e4"], out["legs"]["pop_1e6"]
+    out["max_devices"] = max(r["devices"] for r in out["legs"].values())
+    out["rss_ratio_1e6_vs_1e4"] = round(
+        hi["peak_rss_kb"] / lo["peak_rss_kb"], 3)
+    out["ips_ratio_1e6_vs_1e4"] = round(
+        hi["fused_iters_per_sec"] / lo["fused_iters_per_sec"], 3)
+    out["invariant_reaches_1e6_devices"] = out["max_devices"] >= 1_000_000
+    out["invariant_flat_memory"] = \
+        out["rss_ratio_1e6_vs_1e4"] <= RSS_RATIO_LIMIT
+    out["invariant_flat_time"] = \
+        out["ips_ratio_1e6_vs_1e4"] >= IPS_RATIO_FLOOR
+    out["invariant_parity"] = all(r["parity_ok"]
+                                  for r in out["legs"].values())
+    emit("scale.summary", 0.0,
+         f"max_devices={out['max_devices']};"
+         f"rss_ratio={out['rss_ratio_1e6_vs_1e4']};"
+         f"ips_ratio={out['ips_ratio_1e6_vs_1e4']}")
+    with open(json_path, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", choices=("quick", "full"), default="quick")
+    ap.add_argument("--json", default="BENCH_scale.json")
+    ap.add_argument("--leg", default=None,
+                    help="(internal) run ONE leg in-process and print its "
+                         "record as a JSON line — the per-leg subprocess "
+                         "entry point")
+    args = ap.parse_args()
+    if args.leg is not None:
+        rec = run_leg(legs_for(args.scale == "quick")[args.leg])
+        print(json.dumps(rec))
+        return
+    run(quick=args.scale == "quick", json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

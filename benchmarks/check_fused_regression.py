@@ -7,9 +7,10 @@ committed numbers.
   python benchmarks/check_fused_regression.py --availability B.json NEW.json
   python benchmarks/check_fused_regression.py --robust B.json NEW.json
   python benchmarks/check_fused_regression.py --kernels B.json NEW.json
+  python benchmarks/check_fused_regression.py --scale B.json NEW.json
 
 A missing BASELINE file is tolerated in ``--drift``, ``--availability``,
-``--robust`` and ``--kernels`` modes only (first-run tolerance: those gates
+``--robust``, ``--kernels`` and ``--scale`` modes only (first-run tolerance: those gates
 check the NEW json's invariant and report "no committed baseline", so a
 suite can be introduced before its JSON lands on the branch). The fused/table2 modes
 keep failing loudly on a missing baseline — their committed JSONs exist, so
@@ -53,6 +54,13 @@ same 20% throughput floor vs the committed numbers. Jnp-reference columns,
 rooflines and env stamps are reported only. Kernel-route times are compared
 only when baseline and new ran in the same ``kernel_mode`` (interpret
 numbers vs compiled numbers would be meaningless).
+
+``--scale`` gates ``BENCH_scale.json`` (DESIGN.md §17) on the lazy-
+population invariant booleans the suite computes: the M×K sweep reaches
+≥1e6 devices, the 1e6-device leg's peak RSS stays within 2× of the
+1e4-device leg, its throughput holds ≥50% of the 1e4 leg, and the
+host==fused==sharded parity triangle (≤1e-5) holds at every swept scale.
+Per-leg throughput vs the committed numbers is reported only.
 
 ``--table2`` compares ``BENCH_table2.json``: every strategy's CNN
 ``fused_rounds_per_sec`` must hold ≥80% of the committed floor (compute-
@@ -262,6 +270,58 @@ def check_kernels(baseline: dict | None, new: dict) -> int:
     return rc
 
 
+def check_scale(baseline: dict | None, new: dict) -> int:
+    """Gate BENCH_scale.json on the DESIGN.md §17 flat-scale invariants:
+    the sweep must reach ≥1e6 devices; the 1e6-device leg's peak RSS must
+    stay within 2× of the 1e4-device leg (memory flat in D); its
+    throughput must hold ≥50% of the 1e4 leg (per-round time scales with
+    selected devices, not population); and the host==fused==sharded parity
+    triangle (≤1e-5) must hold at every swept scale. Committed per-leg
+    throughput is compared informationally only (the legs are linear-probe
+    engine-bound, the number that swings with CPU contention)."""
+    for leg, rec in new["legs"].items():
+        row = (f"{leg}: D={rec['devices']} engine={rec['engine']} "
+               f"ips={rec['fused_iters_per_sec']} "
+               f"rss_kb={rec['peak_rss_kb']} "
+               f"parity={rec['parity_max_abs']:.2e}")
+        old = (baseline or {}).get("legs", {}).get(leg)
+        if old:
+            row += (f" (committed ips {old['fused_iters_per_sec']}, "
+                    f"rss_kb {old['peak_rss_kb']})")
+        print(row)
+    rc = 0
+    if not new.get("invariant_reaches_1e6_devices", False):
+        print(f"FAIL: sweep tops out at {new.get('max_devices')} devices "
+              "(< 1e6) — the scale headline (DESIGN.md §17) is gone",
+              file=sys.stderr)
+        rc = 1
+    if not new.get("invariant_flat_memory", False):
+        print("FAIL: peak RSS of the 1e6-device leg is "
+              f"{new.get('rss_ratio_1e6_vs_1e4')}x the 1e4-device leg "
+              "(> 2x) — population memory is no longer flat in D "
+              "(DESIGN.md §17)", file=sys.stderr)
+        rc = 1
+    if not new.get("invariant_flat_time", False):
+        print("FAIL: the 1e6-device leg runs at "
+              f"{new.get('ips_ratio_1e6_vs_1e4')}x the 1e4-device leg's "
+              "throughput (< 0.5x) — per-round time is scaling with the "
+              "population, not the selected devices (DESIGN.md §17)",
+              file=sys.stderr)
+        rc = 1
+    if not new.get("invariant_parity", False):
+        bad = [leg for leg, rec in new["legs"].items()
+               if not rec.get("parity_ok")]
+        print("FAIL: host==fused==sharded parity (≤1e-5) broke at "
+              f"{bad}", file=sys.stderr)
+        rc = 1
+    if rc == 0:
+        print(f"OK: {new['max_devices']} devices, rss ratio "
+              f"{new['rss_ratio_1e6_vs_1e4']} <= 2.0, ips ratio "
+              f"{new['ips_ratio_1e6_vs_1e4']} >= 0.5, parity holds at "
+              "every scale")
+    return rc
+
+
 def _load(path: str, *, required: bool) -> dict | None:
     try:
         with open(path) as f:
@@ -280,16 +340,17 @@ def main(argv: list[str]) -> int:
     availability = "--availability" in argv
     robust = "--robust" in argv
     kernels = "--kernels" in argv
+    scale = "--scale" in argv
     paths = [a for a in argv
              if a not in ("--table2", "--drift", "--availability",
-                          "--robust", "--kernels")]
+                          "--robust", "--kernels", "--scale")]
     if len(paths) != 2 or (table2 + drift + availability + robust
-                           + kernels) > 1:
+                           + kernels + scale) > 1:
         print(__doc__, file=sys.stderr)
         return 2
     baseline = _load(paths[0],
                      required=not (drift or availability or robust
-                                   or kernels))
+                                   or kernels or scale))
     new = _load(paths[1], required=True)
     if drift:
         return check_drift(baseline, new)
@@ -299,6 +360,8 @@ def main(argv: list[str]) -> int:
         return check_robust(baseline, new)
     if kernels:
         return check_kernels(baseline, new)
+    if scale:
+        return check_scale(baseline, new)
     return (check_table2 if table2 else check_fused)(baseline, new)
 
 

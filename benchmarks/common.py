@@ -33,6 +33,16 @@ def env_info() -> dict:
     }
 
 
+def peak_rss_kb() -> int:
+    """Peak resident-set size of THIS process in KB (Linux ru_maxrss units).
+
+    A high-water mark since process start — meaningful per *leg* only when
+    each leg runs in its own subprocess (the bench_scale pattern): a parent
+    measuring after leg N would report max over legs 1..N."""
+    import resource
+    return int(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss)
+
+
 def time_fn(fn: Callable, *, repeats: int = 5, warmup: int = 1) -> float:
     """Median wall time per call in microseconds."""
     for _ in range(warmup):

@@ -24,6 +24,7 @@ from . import (
     bench_robust,
     bench_roofline,
     bench_samplers,
+    bench_scale,
     bench_time_model,
 )
 
@@ -39,6 +40,7 @@ SUITES = {
     "drift": bench_drift.run,                # dynamic environments (§13)
     "availability": bench_availability.run,  # churn robustness (§14)
     "robust": bench_robust.run,              # corruption robustness (§15)
+    "scale": bench_scale.run,                # million-device sweep (§17)
 }
 
 

@@ -55,6 +55,27 @@ def reset_op_modes() -> None:
     kcommon.reset_modes()
 
 
+def internal_avg_route(backend: str, n_members: int, n_params: int, *,
+                       force_interpret: bool = False) -> str:
+    """Trace-time probe: how would the Eq. 4 internal average over
+    ``n_members`` stacked trees of ``n_params`` total parameters run —
+    ``'compiled'``, ``'interpret'`` or ``'jnp'``?
+
+    This is the same routing decision ``weighted_average_tree`` makes
+    internally (``route_op('agg_weighted', k·p)``), surfaced *before* the
+    caller builds the kernel's inputs: when the answer is ``'jnp'``, the
+    engine's grad_avg path skips materializing the per-member gradient
+    stack entirely and takes the fused single-backward path instead
+    (DESIGN.md §16.2 — the PR 8 bench showed the blind fallback running
+    the pallas linear leg at 0.49× jnp). Also records the mode in the
+    ``op_modes`` registry so benches still see the routing decision."""
+    if check_backend(backend) == "jnp":
+        return "jnp"
+    from repro.kernels import common as kcommon
+    return kcommon.route_op("agg_weighted", n_members * n_params,
+                            force_interpret=force_interpret)
+
+
 def internal_avg_fn(backend: str, *, force_interpret: bool = False
                     ) -> Callable[[PyTree, jax.Array], PyTree]:
     """Weighted average over a leading client axis (Eq. 4) — applies to

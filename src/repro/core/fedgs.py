@@ -237,9 +237,15 @@ def _per_group_train(params_m: PyTree, batches_m: PyTree, loss_fn: LossFn,
       weighted mean of per-device losses, so one backward pass over the
       (L, n) superbatch produces the already-averaged gradient and ONE SGD
       update follows — no per-device model (or gradient) stack is ever
-      live. With ``kernel_backend='pallas'`` the per-device gradients are
-      materialized instead and reduced by the ``agg_weighted`` kernel
-      (the TPU-resident weighted segment mean).
+      live. With ``kernel_backend='pallas'`` the routing is probed FIRST
+      (:func:`dispatch.internal_avg_route`): only when the ``agg_weighted``
+      kernel would actually run (compiled / pinned interpret) are the
+      per-device gradients materialized and reduced by it; when the
+      compiled-aware dispatch would fall back to jnp anyway, the step takes
+      the fused single-backward path directly — bit-identical math to the
+      jnp backend without paying L backward passes for a reduction that
+      never runs as a kernel (the 0.49× linear-leg regression of
+      BENCH_fedgs_fused.json, DESIGN.md §16.2).
 
     ``weights`` are the n^{m,k} internal-sync weights; uniform (paper §V.A)
     if None.
@@ -260,11 +266,18 @@ def _per_group_train(params_m: PyTree, batches_m: PyTree, loss_fn: LossFn,
             lambda s, p: jnp.where(total > 0, s, p), synced, params_m)
         return synced, jnp.mean(losses)
     if cfg.kernel_backend == "pallas":
-        losses, grads = jax.vmap(
-            lambda b: sync.local_grads(params_m, b, loss_fn))(batches_m)
-        g = dispatch.internal_avg_fn(
-            "pallas", force_interpret=cfg.force_interpret)(grads, weights)
-        return sync.apply_sgd(params_m, g, cfg.lr), jnp.mean(losses)
+        n_params = sum(leaf.size for leaf in jax.tree.leaves(params_m))
+        route = dispatch.internal_avg_route(
+            "pallas", cfg.num_selected, n_params,
+            force_interpret=cfg.force_interpret)
+        if route != "jnp":
+            losses, grads = jax.vmap(
+                lambda b: sync.local_grads(params_m, b, loss_fn))(batches_m)
+            g = dispatch.internal_avg_fn(
+                "pallas", force_interpret=cfg.force_interpret)(grads, weights)
+            return sync.apply_sgd(params_m, g, cfg.lr), jnp.mean(losses)
+        # route == 'jnp': the kernel would fall back anyway — skip the
+        # member-gradient stack and take the fused single-backward below
     wn = weights / jnp.maximum(jnp.sum(weights), 1e-12)
 
     def weighted_loss(p):
@@ -666,6 +679,11 @@ def run_fedgs(
     flat_ids = jnp.arange(cfg.num_groups * cfg.devices_per_group,
                           dtype=jnp.int32)
     gids = jnp.arange(cfg.num_groups, dtype=jnp.int32)
+    # resident population ids (DESIGN.md §17) — same contract as the fused
+    # body: DeviceBackedStreams forwards its sampler's `device_ids`;
+    # FactoryStreams et al. fall back to the dense arange grid
+    ids_fn = getattr(streams, "device_ids", None)
+    ids_jit = jax.jit(ids_fn) if ids_fn is not None else None
     logs: list[RoundLog] = []
     t = 0
     for r in range(cfg.rounds):
@@ -682,7 +700,9 @@ def run_fedgs(
             if avail_fn is None:
                 avail = None
             else:
-                up, _lat = avail_jit(jnp.int32(t), flat_ids)
+                ids_t = flat_ids if ids_jit is None else \
+                    ids_jit(jnp.int32(t), gids).reshape(-1)
+                up, _lat = avail_jit(jnp.int32(t), ids_t)
                 avail = up.reshape((cfg.num_groups, cfg.devices_per_group))
             sel_avail = avail if cfg.avail_selection == "aware" else None
             if quarantined:
@@ -711,8 +731,13 @@ def run_fedgs(
             batches = (jnp.asarray(imgs), jnp.asarray(labs))
             if robust:
                 vals, idx = jax.lax.top_k(mask_c, cfg.num_selected)
-                dev_ids = (gids[:, None] * cfg.devices_per_group
-                           + idx).astype(jnp.int32)
+                if ids_jit is None:
+                    dev_ids = (gids[:, None] * cfg.devices_per_group
+                               + idx).astype(jnp.int32)
+                else:
+                    dev_ids = jnp.take_along_axis(
+                        ids_jit(jnp.int32(t), gids), idx,
+                        axis=-1).astype(jnp.int32)
                 if avail is None:
                     fresh_w = vals
                 elif bounded:
@@ -953,6 +978,9 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
         raise ValueError(
             f"num_groups={m} must divide over {n_shards} '{axis_name}' shards")
     m_local = m // n_shards
+    # lazy/candidate samplers expose the (t, gids) -> (G, K) population-id
+    # map; dense samplers predating DESIGN.md §17 may not
+    ids_fn = getattr(sampler, "device_ids", None)
     # XLA:CPU runs ops inside a rolled loop body single-threaded, which costs
     # ~3x on the conv train step; fully unrolling the scan restores intra-op
     # parallelism. On accelerators the rolled loop is fine (and compiles T
@@ -968,8 +996,6 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
             shard = jax.lax.axis_index(axis_name)
             gids = (shard * m_local
                     + jnp.arange(m_local, dtype=jnp.int32)).astype(jnp.int32)
-        flat_ids = (gids[:, None] * k
-                    + jnp.arange(k, dtype=jnp.int32)).reshape(-1)
 
         def iteration(carry, t):
             gp, key, sel = carry
@@ -979,10 +1005,22 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
             key, sub = jax.random.split(key)
             keys = jnp.take(jax.random.split(sub, m), gids, axis=0)
             counts = sampler.counts(t, gids)
+            # Resident ids (DESIGN.md §17): schedules evaluate on the (G, K)
+            # flat POPULATION ids of the devices seated this iteration — the
+            # sampler's `device_ids` when it draws from a larger universe
+            # (lazy population / candidate subsampling), else the historical
+            # dense gid·K+slot grid (bit-identical values). Built only when a
+            # schedule or the robust path consumes them.
+            if avail_fn is not None or robust:
+                if ids_fn is None:
+                    dev_ids_all = gids[:, None] * k + jnp.arange(
+                        k, dtype=jnp.int32)
+                else:
+                    dev_ids_all = ids_fn(t, gids).astype(jnp.int32)
             if avail_fn is None:
                 avail = None
             else:
-                up, _lat = avail_fn(t, flat_ids)
+                up, _lat = avail_fn(t, dev_ids_all.reshape(-1))
                 avail = up.reshape((gids.shape[0], k))
             sel_avail = avail if cfg.avail_selection == "aware" else None
             quar = sel[-1] if quarantined else None
@@ -1023,7 +1061,7 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
                 # per-member gradients, injected fault trace, robust Eq. 4,
                 # isfinite rollback, quarantine feedback
                 vals, idx = jax.lax.top_k(mask, l)
-                dev_ids = (gids[:, None] * k + idx).astype(jnp.int32)
+                dev_ids = jnp.take_along_axis(dev_ids_all, idx, axis=-1)
                 if avail is None:
                     fresh_w = vals
                 elif bounded:

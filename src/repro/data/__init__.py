@@ -1,5 +1,6 @@
-from . import femnist, lm_data, partition, streaming  # noqa: F401
+from . import femnist, lm_data, partition, population, streaming  # noqa: F401
 from .partition import Partition, PartitionConfig, make_partition  # noqa: F401
+from .population import LazyPopulation, PopulationConfig  # noqa: F401
 from .streaming import (  # noqa: F401
     AVAILABILITY_SCHEDULES,
     AvailabilityConfig,

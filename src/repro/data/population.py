@@ -1,0 +1,202 @@
+"""Lazy million-device population (DESIGN.md §17).
+
+``partition.make_partition`` builds the device universe *densely*: every
+device's class distribution, writer id and data rate is a resident numpy
+row, so the population is capped by host memory (and by the O(D) build
+loop) long before the "millions of endpoints" regime the IIoT surveys
+describe. This module replaces the build with the same idiom the
+drift/availability/corruption schedules already use: the population is a
+*pure function of the flat device id*. A device's class distribution is a
+Dirichlet draw keyed by ``fold_in(seed, id)`` around its factory's
+concentration (itself keyed by ``fold_in(seed, factory)``), and its writer
+style is a row of the fixed 3550-writer style bank selected by another id
+hash — so evaluating any subset of devices costs O(|subset|), the global
+class marginal ``p_real`` is analytic (the Dirichlet mean), and a
+materialized small population is *bit-identical* to the lazy one gathered
+at the same ids (the equivalence tests/test_population.py pins).
+
+:class:`LazyPopulation` exposes the same population-view interface as the
+dense :class:`repro.data.streaming.DeviceStream` (``probs_for`` /
+``styles_for`` + shape attributes), so ``make_device_sampler`` and
+``make_client_pool`` consume either interchangeably.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import femnist
+from .streaming import DeviceStream
+
+# the writer-id universe make_partition draws from (rng.integers(0, 3550))
+NUM_WRITERS = 3550
+
+# probs_for/p_real evaluate factories in bounded slices so even M in the
+# hundreds of thousands never materializes more than this many rows at once
+_CHUNK = 4096
+
+
+@functools.lru_cache(maxsize=1)
+def _style_bank() -> np.ndarray:
+    """(3550, 6) float32 — every writer's persistent style row, host-computed
+    once. Population-independent (~85 KB whatever D is), so styles of any
+    device subset are a gather, not a per-device host loop. Cached as host
+    numpy (a trace-safe constant); callers jnp.asarray it at use site."""
+    return femnist.writer_style_table(
+        np.arange(NUM_WRITERS)).astype(np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class PopulationConfig:
+    """Shape + skew of a lazy device universe.
+
+    Mirrors :class:`repro.data.partition.PartitionConfig` (same α skew and
+    factory-bias blend semantics), but the draws live in jax.random fold_in
+    space instead of a numpy build loop, so ``devices_per_factory`` can be
+    five orders of magnitude larger. The two RNG families differ, so a lazy
+    population is *statistically* equivalent to a dense partition with the
+    same knobs, not bit-equal to it — bit-identity holds between the lazy
+    view and its own :meth:`LazyPopulation.materialize` image.
+    """
+    num_factories: int = 10            # M
+    devices_per_factory: int = 35      # K_pop (physical, not engine slots)
+    alpha: float = 0.3                 # Dirichlet skew
+    factory_bias: float = 0.5          # 0 = iid factories, 1 = strongly biased
+    num_classes: int = femnist.NUM_CLASSES
+    batch_size: int = 32               # n
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.num_factories < 1:
+            raise ValueError(f"num_factories must be >= 1, "
+                             f"got {self.num_factories}")
+        if self.devices_per_factory < 1:
+            raise ValueError(f"devices_per_factory must be >= 1, "
+                             f"got {self.devices_per_factory}")
+        if self.alpha <= 0:
+            raise ValueError(f"alpha must be > 0, got {self.alpha}")
+        if not 0.0 <= self.factory_bias <= 1.0:
+            raise ValueError(f"factory_bias must be in [0, 1], "
+                             f"got {self.factory_bias}")
+
+    @property
+    def total_devices(self) -> int:
+        return self.num_factories * self.devices_per_factory
+
+
+@dataclasses.dataclass(frozen=True)
+class LazyPopulation:
+    """Pure-function-of-id device universe over a :class:`PopulationConfig`.
+
+    Key chains (all under ``PRNGKey(seed)``): factory concentration
+    fold_in 808, per-device Dirichlet fold_in 809, per-device writer
+    fold_in 810 — disjoint from every schedule/sampler chain (101/202/303/
+    404/505/606/707), so one seed drives population, streams and
+    environments without collisions.
+    """
+    config: PopulationConfig
+
+    # -- population-view interface (shared with DeviceStream) ---------------
+    @property
+    def num_factories(self) -> int:
+        return self.config.num_factories
+
+    @property
+    def devices_per_factory(self) -> int:
+        return self.config.devices_per_factory
+
+    @property
+    def num_classes(self) -> int:
+        return self.config.num_classes
+
+    @property
+    def batch_size(self) -> int:
+        return self.config.batch_size
+
+    @property
+    def seed(self) -> int:
+        return self.config.seed
+
+    def _key(self, tag: int) -> jax.Array:
+        return jax.random.fold_in(jax.random.PRNGKey(self.config.seed), tag)
+
+    def factory_concentration(self, mids: jax.Array) -> jax.Array:
+        """(G,) factory ids -> (G, F) per-factory Dirichlet concentrations.
+
+        The partition recipe, id-hashed: a factory prior ~ Dirichlet(1) is
+        blended with uniform by ``factory_bias`` and scaled to concentration
+        ``F·α`` (floored at 1e-3), exactly mirroring ``make_partition``'s
+        ``rng.dirichlet(maximum(prior·F·α, 1e-3))`` centring."""
+        c = self.config
+        k_prior = self._key(808)
+        ones = jnp.ones((c.num_classes,), jnp.float32)
+
+        def per_factory(mi):
+            prior = jax.random.dirichlet(jax.random.fold_in(k_prior, mi),
+                                         ones)
+            blended = (1.0 - c.factory_bias) / c.num_classes \
+                + c.factory_bias * prior
+            return jnp.maximum(blended * c.num_classes * c.alpha, 1e-3)
+
+        return jax.vmap(per_factory)(jnp.asarray(mids, jnp.int32))
+
+    def probs_for(self, ids: jax.Array) -> jax.Array:
+        """(D,) flat device ids -> (D, F) class-distribution rows, pure in
+        (id, seed): device i ~ Dirichlet(concentration of factory i//K_pop)
+        keyed by fold_in(809, i). Cost/memory O(|ids|·F)."""
+        c = self.config
+        ids = jnp.asarray(ids, jnp.int32)
+        conc = self.factory_concentration(ids // c.devices_per_factory)
+        k_dev = self._key(809)
+        return jax.vmap(lambda i, a: jax.random.dirichlet(
+            jax.random.fold_in(k_dev, i), a))(ids, conc)
+
+    def styles_for(self, ids: jax.Array) -> jax.Array:
+        """(D,) flat device ids -> (D, 6) writer-style rows: each device is
+        a virtual writer drawn uniformly from the 3550-writer bank by
+        fold_in(810, id)."""
+        ids = jnp.asarray(ids, jnp.int32)
+        k_writer = self._key(810)
+        wid = jax.vmap(lambda i: jax.random.randint(
+            jax.random.fold_in(k_writer, i), (), 0, NUM_WRITERS))(ids)
+        return jnp.asarray(_style_bank())[wid]
+
+    @property
+    def p_real(self) -> np.ndarray:
+        """(F,) analytic global class marginal — no device draw needed.
+
+        E[Dirichlet(a)] = a / Σa, and devices are uniform within and across
+        factories (unit data rates), so p_real is the factory-mean of the
+        normalized concentrations, computed in :data:`_CHUNK`-factory slices
+        (O(chunk·F) peak whatever M is)."""
+        c = self.config
+        total = np.zeros((c.num_classes,), np.float64)
+        for lo in range(0, c.num_factories, _CHUNK):
+            mids = jnp.arange(lo, min(lo + _CHUNK, c.num_factories),
+                              dtype=jnp.int32)
+            conc = self.factory_concentration(mids)
+            total += np.asarray(
+                jnp.sum(conc / jnp.sum(conc, axis=-1, keepdims=True),
+                        axis=0), np.float64)
+        p = total / c.num_factories
+        return (p / p.sum()).astype(np.float32)
+
+    def materialize(self) -> DeviceStream:
+        """Evaluate the WHOLE population into a dense :class:`DeviceStream`
+        — small-M×K test/parity use only (this is exactly the array the
+        lazy path exists to avoid). Bit-identical to the lazy gathers:
+        ``materialize().probs_for(ids) == probs_for(ids)`` for every id."""
+        c = self.config
+        ids = jnp.arange(c.total_devices, dtype=jnp.int32)
+        return DeviceStream(
+            class_probs=self.probs_for(ids).reshape(
+                c.num_factories, c.devices_per_factory, c.num_classes),
+            styles=self.styles_for(ids).reshape(
+                c.num_factories, c.devices_per_factory, -1),
+            batch_size=c.batch_size,
+            seed=c.seed,
+        )

@@ -177,9 +177,10 @@ def make_drift_fn(drift: DriftConfig | None, seed: int, num_classes: int,
     total flat-id range M·K), ``t`` the traced iteration index. Pure and
     jittable; ``drift=None`` or ``static`` returns ``base`` unchanged (the
     same array, so the no-drift path is bit-identical to the pre-drift
-    engine). ``step_shift``'s t-invariant per-device offsets are
-    precomputed once over ``num_devices`` at build time — not re-derived
-    (D threefry hashes) on every scan iteration.
+    engine). ``step_shift``'s t-invariant per-device offsets are hashed
+    per *resident* id at call time (DESIGN.md §17) — the same fold_in keys
+    the old build-time ``(num_devices,)`` table hashed, so the trace is
+    bit-identical while no O(D) state ever materializes.
     """
     f = num_classes
     if drift is None or drift.schedule == "static":
@@ -188,12 +189,10 @@ def make_drift_fn(drift: DriftConfig | None, seed: int, num_classes: int,
 
     if drift.schedule == "step_shift":
         k_off = jax.random.fold_in(base_key, 1)
-        table = jax.vmap(lambda i: jax.random.randint(
-            jax.random.fold_in(k_off, i), (), 1, f))(
-                jnp.arange(num_devices, dtype=jnp.int32))
 
         def step_shift(base, t, ids):
-            offs = table[ids]                                      # (D,)
+            offs = jax.vmap(lambda i: jax.random.randint(
+                jax.random.fold_in(k_off, i), (), 1, f))(ids)      # (D,)
             cols = (jnp.arange(f)[None, :] - offs[:, None]) % f    # (D, F)
             shifted = jnp.take_along_axis(base, cols, axis=-1)
             return jnp.where(t >= drift.t0, shifted, base)
@@ -272,9 +271,11 @@ class AvailabilityConfig:
         ``P(down→up) = up_prob/dwell`` give stationary up-probability
         ``up_prob`` and mean sojourn ~``dwell`` iterations; the initial
         state is Bernoulli(``up_prob``), i.e. the chain starts at
-        stationarity. To stay pure in (t, id) the chain is unrolled once at
-        build time into a ``(horizon, D)`` state table (a ``lax.scan`` over
-        the carried bit); ``avail_fn`` then just indexes ``t % horizon``.
+        stationarity. The chain is evaluated *lazily per resident id*
+        (DESIGN.md §17): ``avail_fn(t, ids)`` replays each id's chain from
+        the ``t % horizon`` block start with a ``fori_loop`` — no
+        ``(horizon, D)`` state table ever materializes, and the trace
+        repeats with period ``horizon`` exactly like the old unroll.
       * ``straggler_tail``— every device is up, but a deterministic
         ``straggler_frac`` tail of devices (hashed from the seed) runs
         ``slow_factor``× slower; draws above ``deadline`` miss the
@@ -322,16 +323,18 @@ def make_availability_fn(avail: AvailabilityConfig | None, seed: int,
     ``ids`` is a (D,) vector of flat device ids (gid·K + k, all <
     ``num_devices``), ``t`` the traced iteration index. Returns the (D,)
     float32 effective up-mask (0/1 — latency deadline already applied) and
-    the (D,) latency draws. Pure and jittable; t-invariant per-device
-    tables (markov phases, the straggler tail) are precomputed once over
-    ``num_devices`` at build time, like drift's ``step_shift`` offsets.
+    the (D,) latency draws. Pure and jittable; every schedule — including
+    the markov chain and the straggler tail — is hashed per *resident* id
+    at call time (DESIGN.md §17), so cost and memory scale with
+    ``ids.shape``, never with ``num_devices`` (which is kept only as the
+    nominal flat-id range of the population the schedule describes).
     """
+    del num_devices  # the lazy schedules never materialize the universe
     if avail is None or avail.schedule == "always":
         return lambda t, ids: (jnp.ones(ids.shape, jnp.float32),
                                jnp.ones(ids.shape, jnp.float32))
     base_key = jax.random.fold_in(jax.random.PRNGKey(seed), 505)
     k_lat = jax.random.fold_in(base_key, 9)
-    all_ids = jnp.arange(num_devices, dtype=jnp.int32)
 
     def base_latency(t, ids):
         def per_dev(i):
@@ -353,49 +356,51 @@ def make_availability_fn(avail: AvailabilityConfig | None, seed: int,
         return bernoulli
 
     if avail.schedule == "markov":
-        # True 2-state Markov churn via a carried state bit: the chain is
-        # stepped ONCE at build time (a lax.scan carrying the per-device
-        # up/down bit over ``horizon`` iterations) into a (horizon, D) state
-        # table, so avail_fn stays a pure function of (t, ids) — same purity
-        # discipline as every other schedule, and every engine replays the
-        # identical trace. Transition probs (1-p)/dwell and p/dwell keep the
-        # chain at its stationary distribution p = up_prob from t = 0, with
-        # mean sojourn ~dwell in the up state; both probs are <= 1/dwell so
-        # any dwell >= 1 is valid.
+        # True 2-state Markov churn via a carried state bit, evaluated
+        # LAZILY per resident id (DESIGN.md §17): the old build-time unroll
+        # materialized a (horizon, D) state table — the O(horizon·D) memory
+        # cliff that capped the population. Instead the chain is replayed on
+        # demand: a fori_loop carries each queried id's up/down bit from the
+        # block-start Bernoulli(up_prob) init (per-step key fold_in(k_m, id,
+        # s), the SAME hashes the unroll consumed), so the trace is
+        # bit-identical to the retired table at every t — including the
+        # period-``horizon`` wrap, which is now the chain regenerating at
+        # each block boundary. avail_fn stays a pure function of (t, ids);
+        # cost is O(|ids| · (t mod horizon)) compute and O(|ids|) memory.
+        # Transition probs (1-p)/dwell and p/dwell keep the chain at its
+        # stationary distribution p = up_prob from t = 0, with mean sojourn
+        # ~dwell in the up state; both probs are <= 1/dwell so any
+        # dwell >= 1 is valid.
         k_m = jax.random.fold_in(base_key, 2)
         p_ud = (1.0 - avail.up_prob) / avail.dwell   # P(up -> down)
         p_du = avail.up_prob / avail.dwell           # P(down -> up)
-        init_up = jax.vmap(lambda i: jax.random.bernoulli(
-            jax.random.fold_in(jax.random.fold_in(k_m, i), 0),
-            avail.up_prob))(all_ids)
-
-        def transition(state, t):
-            u = jax.vmap(lambda i: jax.random.uniform(
-                jax.random.fold_in(jax.random.fold_in(k_m, i), t)))(all_ids)
-            nxt = jnp.where(state, u >= p_ud, u < p_du)
-            return nxt, nxt
-
-        _, rest = jax.lax.scan(transition, init_up,
-                               jnp.arange(1, avail.horizon, dtype=jnp.int32))
-        table = jnp.concatenate([init_up[None], rest], axis=0) \
-            if avail.horizon > 1 else init_up[None]      # (horizon, D) bool
 
         def markov(t, ids):
-            row = jnp.take(table, t % avail.horizon, axis=0)
-            up = row[ids].astype(jnp.float32)
+            tm = t % avail.horizon
+            init = jax.vmap(lambda i: jax.random.bernoulli(
+                jax.random.fold_in(jax.random.fold_in(k_m, i), 0),
+                avail.up_prob))(ids)
+
+            def step(s, state):
+                u = jax.vmap(lambda i: jax.random.uniform(
+                    jax.random.fold_in(jax.random.fold_in(k_m, i), s)))(ids)
+                return jnp.where(state, u >= p_ud, u < p_du)
+
+            up = jax.lax.fori_loop(1, tm + 1, step, init).astype(jnp.float32)
             lat = base_latency(t, ids)
             return up * (lat <= avail.deadline), lat
 
         return markov
 
-    # straggler_tail: fixed hashed tail of slow devices, always nominally up
-    tail = jax.vmap(lambda i: jax.random.bernoulli(
-        jax.random.fold_in(jax.random.fold_in(base_key, 4), i),
-        avail.straggler_frac))(all_ids)
+    # straggler_tail: fixed hashed tail of slow devices, always nominally
+    # up; membership is re-hashed per resident id on every call (same
+    # fold_in keys as the old build-time table — bit-identical, O(D)-free)
+    k_tail = jax.random.fold_in(base_key, 4)
 
     def straggler_tail(t, ids):
-        lat = base_latency(t, ids) * jnp.where(tail[ids], avail.slow_factor,
-                                               1.0)
+        tail = jax.vmap(lambda i: jax.random.bernoulli(
+            jax.random.fold_in(k_tail, i), avail.straggler_frac))(ids)
+        lat = base_latency(t, ids) * jnp.where(tail, avail.slow_factor, 1.0)
         return (lat <= avail.deadline).astype(jnp.float32), lat
 
     return straggler_tail
@@ -478,31 +483,33 @@ def make_corruption_fn(corrupt: CorruptionConfig | None, seed: int,
     (D,) float32 ground-truth hit mask (1 where the member's gradient was
     corrupted this iteration). Pure and jittable — vmappable over groups and
     scannable over t; faulty-device membership and per-device mode
-    assignment are precomputed once over ``num_devices`` at build time.
+    assignment are hashed per *resident* id at call time (DESIGN.md §17) —
+    the same fold_in keys the old build-time ``(num_devices,)`` tables
+    hashed, so the fault trace is bit-identical with no O(D) state.
     ``corrupt=None`` returns None (callers keep the exact corruption-free
     code path, DESIGN.md §15.5 bit-identity).
     """
     if corrupt is None:
         return None
+    del num_devices  # lazy membership hashes never materialize the universe
     modes = corrupt.modes
     base_key = jax.random.fold_in(jax.random.PRNGKey(seed), 606)
-    all_ids = jnp.arange(num_devices, dtype=jnp.int32)
-    faulty = jax.vmap(lambda i: jax.random.bernoulli(
-        jax.random.fold_in(jax.random.fold_in(base_key, 1), i),
-        corrupt.frac))(all_ids)                            # (D,) bool
-    mode_idx = jax.vmap(lambda i: jax.random.randint(
-        jax.random.fold_in(jax.random.fold_in(base_key, 2), i),
-        (), 0, len(modes)))(all_ids)                       # (D,) int32
+    k_faulty = jax.random.fold_in(base_key, 1)
+    k_mode = jax.random.fold_in(base_key, 2)
     k_fire = jax.random.fold_in(base_key, 3)
     k_noise = jax.random.fold_in(base_key, 4)
 
     def corrupt_fn(grads, t, ids):
+        faulty = jax.vmap(lambda i: jax.random.bernoulli(
+            jax.random.fold_in(k_faulty, i), corrupt.frac))(ids)  # (D,) bool
+
         def fire(i):
             kd = jax.random.fold_in(jax.random.fold_in(k_fire, i), t)
             return jax.random.bernoulli(kd, corrupt.prob)
-        hit = (faulty[ids] & jax.vmap(fire)(ids)
+        hit = (faulty & jax.vmap(fire)(ids)
                & (t >= corrupt.t0)).astype(jnp.float32)    # (D,)
-        midx = mode_idx[ids]
+        midx = jax.vmap(lambda i: jax.random.randint(
+            jax.random.fold_in(k_mode, i), (), 0, len(modes)))(ids)
         nkeys = None
         if "gauss_noise" in modes:
             nkeys = jax.vmap(lambda i: jax.random.fold_in(
@@ -558,6 +565,13 @@ class DeviceStream:
 
     Everything data-dependent lives in two device arrays; per-writer styles
     are host-precomputed once (they are constants of the partition).
+
+    ``DeviceStream`` is the *dense* population view (DESIGN.md §17): it
+    exposes the same per-flat-id gather interface
+    (``probs_for``/``styles_for`` + the shape/seed attributes) as
+    ``data.population.LazyPopulation``, so :func:`make_device_sampler` and
+    :func:`make_client_pool` run over either without caring whether the
+    universe is materialized.
     """
     class_probs: jax.Array   # (M, K, F) per-device class distributions
     styles: jax.Array        # (M, K, 6) persistent writer styles
@@ -575,6 +589,27 @@ class DeviceStream:
             seed=seed,
         )
 
+    # -- population-view interface (shared with LazyPopulation) -------------
+    @property
+    def num_factories(self) -> int:
+        return self.class_probs.shape[0]
+
+    @property
+    def devices_per_factory(self) -> int:
+        return self.class_probs.shape[1]
+
+    @property
+    def num_classes(self) -> int:
+        return self.class_probs.shape[2]
+
+    def probs_for(self, ids: jax.Array) -> jax.Array:
+        """(D,) flat device ids -> (D, F) class-distribution rows."""
+        return self.class_probs.reshape(-1, self.class_probs.shape[-1])[ids]
+
+    def styles_for(self, ids: jax.Array) -> jax.Array:
+        """(D,) flat device ids -> (D, 6) writer-style rows."""
+        return self.styles.reshape(-1, self.styles.shape[-1])[ids]
+
 
 class DeviceSampler(NamedTuple):
     """Pure, jittable sampling interface consumed by the fused engine.
@@ -588,6 +623,13 @@ class DeviceSampler(NamedTuple):
     selected_batch(t, gids, masks, l) -> (images (G, l, n, 28, 28),
         labels (G, l, n)); device order within a group is
         ``argsort(-mask)[:l]`` — the same gather order as the host loop.
+    device_ids(t, gids) -> (G, K) int32 flat *population* ids occupying the
+        K engine slots of each group at iteration t (DESIGN.md §17) — under
+        candidate subsampling the slot→device binding changes per candidate
+        epoch, so the engines evaluate availability/corruption schedules on
+        these instead of ``gid·K + arange(K)``.
+    ``population_per_group`` is the PHYSICAL per-factory device count K_pop
+    (== ``devices_per_group`` without candidate subsampling).
     """
     counts: Callable[..., jax.Array]
     selected_batch: Callable[..., tuple[jax.Array, jax.Array]]
@@ -595,27 +637,73 @@ class DeviceSampler(NamedTuple):
     devices_per_group: int
     num_classes: int
     batch_size: int
+    device_ids: Callable[..., jax.Array] | None = None
+    population_per_group: int = 0
 
 
-def make_device_sampler(stream: DeviceStream,
-                        drift: DriftConfig | None = None) -> DeviceSampler:
-    probs = stream.class_probs
-    styles = stream.styles
-    m, k, f = probs.shape
+def make_device_sampler(stream, drift: DriftConfig | None = None, *,
+                        candidates: int | None = None,
+                        candidate_every: int = 0) -> DeviceSampler:
+    """Pure device sampler over any population view (DESIGN.md §17).
+
+    ``stream`` is the dense :class:`DeviceStream` or a lazy
+    ``data.population.LazyPopulation`` — anything exposing
+    ``num_factories`` / ``devices_per_factory`` / ``num_classes`` /
+    ``batch_size`` / ``seed`` plus the pure per-flat-id gathers
+    ``probs_for(ids)`` / ``styles_for(ids)``. Only the ids a call actually
+    touches are ever evaluated, so the population can be far larger than
+    memory.
+
+    ``candidates=C`` turns on candidate subsampling: each factory polls
+    only C of its ``devices_per_factory`` physical devices — the engine's
+    per-group device axis K becomes C (set ``FedGSConfig.devices_per_group
+    = C``), and per-iteration cost scales with M·C, not the population.
+    The candidate committee is re-drawn (per-slot hash, fold_in 707) every
+    ``candidate_every`` internal iterations (0 = one fixed draw for the
+    whole run); keep it a multiple of the GBP-CS ``reselect_every`` cadence
+    so a selected committee is not silently rebound mid-epoch. Slots are
+    drawn independently, so a slot pair within a group may (rarely, ~C²/2K
+    per group) alias the same physical device — the price of O(C) draws
+    without a K_pop-length permutation. Without ``candidates`` the sampler
+    is bit-identical to the historical dense one.
+    """
+    m = stream.num_factories
+    k_pop = stream.devices_per_factory
+    f = stream.num_classes
     n = stream.batch_size
+    if candidates is not None and not 0 < candidates <= k_pop:
+        raise ValueError(f"candidates={candidates} must be in "
+                         f"[1, devices_per_factory={k_pop}]")
+    if candidate_every < 0:
+        raise ValueError(f"candidate_every must be >= 0, "
+                         f"got {candidate_every}")
+    k = candidates if candidates is not None else k_pop   # engine slots
     protos = jnp.asarray(femnist.class_prototypes())
     base = jax.random.PRNGKey(stream.seed)
     label_key = jax.random.fold_in(base, 101)
     img_key = jax.random.fold_in(base, 202)
-    drift_fn = make_drift_fn(drift, stream.seed, f, m * k)
+    cand_key = jax.random.fold_in(base, 707)
+    drift_fn = make_drift_fn(drift, stream.seed, f, m * k_pop)
+
+    def _slot_ids(t, gid):
+        """Flat population ids bound to the K engine slots of one group."""
+        if candidates is None:
+            return gid * k_pop + jnp.arange(k, dtype=jnp.int32)
+        epoch = t // candidate_every if candidate_every else 0
+        kc = jax.random.fold_in(jax.random.fold_in(cand_key, epoch), gid)
+        local = jax.random.randint(kc, (k,), 0, k_pop, dtype=jnp.int32)
+        return gid * k_pop + local
+
+    def device_ids(t, gids):
+        return jax.vmap(lambda g: _slot_ids(t, g))(gids)         # (G, K)
 
     def _group_labels(t, gid):
         """Next-batch labels of one group: (K, n) int32, pure in (t, gid).
         Under drift the group's class distributions evolve with t
         (DESIGN.md §13) — same purity, so counts stay repeatable."""
         kg = jax.random.fold_in(jax.random.fold_in(label_key, t), gid)
-        ids = gid * k + jnp.arange(k, dtype=jnp.int32)      # flat device ids
-        p = drift_fn(probs[gid], t, ids)                    # (K, F)
+        ids = _slot_ids(t, gid)                             # flat device ids
+        p = drift_fn(stream.probs_for(ids), t, ids)         # (K, F)
         u = jax.random.uniform(kg, (k, n, 1))
         cdf = jnp.cumsum(p, axis=-1)[:, None, :]            # (K, 1, F)
         labels = (u > cdf).sum(axis=-1)
@@ -631,7 +719,8 @@ def make_device_sampler(stream: DeviceStream,
             labels = _group_labels(t, gid)                 # (K, n)
             _, idx = jax.lax.top_k(mask, l)                # stable, like host
             lab_sel = labels[idx]                          # (l, n)
-            sty_sel = jnp.repeat(styles[gid][idx], n, axis=0)   # (l*n, 6)
+            sty = stream.styles_for(_slot_ids(t, gid))     # (K, 6)
+            sty_sel = jnp.repeat(sty[idx], n, axis=0)      # (l*n, 6)
             kg = jax.random.fold_in(jax.random.fold_in(img_key, t), gid)
             imgs = femnist.generate_images_jax(
                 protos, lab_sel.reshape(-1), sty_sel, kg)
@@ -641,7 +730,8 @@ def make_device_sampler(stream: DeviceStream,
 
     return DeviceSampler(counts=counts, selected_batch=selected_batch,
                          num_groups=m, devices_per_group=k, num_classes=f,
-                         batch_size=n)
+                         batch_size=n, device_ids=device_ids,
+                         population_per_group=k_pop)
 
 
 class ClientPool(NamedTuple):
@@ -665,16 +755,25 @@ class ClientPool(NamedTuple):
     num_classes: int
 
 
-def make_client_pool(stream: DeviceStream, clients: int, steps: int,
+# pools larger than this draw client ids by per-slot hashing instead of an
+# exact no-replacement choice — jax.random.choice(replace=False) sorts a
+# pool-length key vector, which would materialize the universe (DESIGN.md
+# §17); at C ≪ √pool collisions are vanishingly rare anyway
+LAZY_POOL_THRESHOLD = 1 << 16
+
+
+def make_client_pool(stream, clients: int, steps: int,
                      drift: DriftConfig | None = None,
                      iters_per_round: int = 1) -> ClientPool:
     """``drift`` evolves the pool's device distributions with time
     (DESIGN.md §13); round r maps to environment time t = r·``iters_per_round``
     so baselines can share a clock with a FEDGS run of T internal iterations
-    per round."""
-    probs = stream.class_probs.reshape(-1, stream.class_probs.shape[-1])
-    styles = stream.styles.reshape(-1, stream.styles.shape[-1])
-    pool_size, f = probs.shape
+    per round. ``stream`` is any population view (dense
+    :class:`DeviceStream` or lazy ``LazyPopulation``); pools above
+    :data:`LAZY_POOL_THRESHOLD` devices switch the per-round client draw to
+    O(C) id hashing so the universe is never instantiated."""
+    pool_size = stream.num_factories * stream.devices_per_factory
+    f = stream.num_classes
     if clients > pool_size:
         raise ValueError(f"clients={clients} exceeds pool of {pool_size} "
                          "devices")
@@ -686,12 +785,19 @@ def make_client_pool(stream: DeviceStream, clients: int, steps: int,
     def round_batches(r):
         k_sel, k_lab, k_img = jax.random.split(
             jax.random.fold_in(pool_key, r), 3)
-        ids = jax.random.choice(k_sel, pool_size, (clients,), replace=False)
-        p = drift_fn(probs[ids], r * iters_per_round, ids)       # (C, F)
+        if pool_size <= LAZY_POOL_THRESHOLD:
+            # exact no-replacement draw — bit-identical to the historical
+            # dense pool at every size the committed runs use
+            ids = jax.random.choice(k_sel, pool_size, (clients,),
+                                    replace=False)
+        else:
+            ids = jax.random.randint(k_sel, (clients,), 0, pool_size)
+        p = drift_fn(stream.probs_for(ids), r * iters_per_round, ids)  # (C,F)
         u = jax.random.uniform(k_lab, (clients, steps, n, 1))
         cdf = jnp.cumsum(p, axis=-1)[:, None, None, :]           # (C,1,1,F)
         labels = jnp.minimum((u > cdf).sum(axis=-1), f - 1).astype(jnp.int32)
-        sty = jnp.repeat(styles[ids], steps * n, axis=0)     # (C*S*n, 6)
+        sty = jnp.repeat(stream.styles_for(ids), steps * n, axis=0)
+        #                                                      (C*S*n, 6)
         imgs = femnist.generate_images_jax(
             protos, labels.reshape(-1), sty, k_img)
         imgs = imgs.reshape(clients, steps, n, femnist.IMAGE_SIZE,
@@ -733,6 +839,13 @@ class DeviceBackedStreams:
         self._gids = jnp.arange(sampler.num_groups, dtype=jnp.int32)
         self._counts = jax.jit(sampler.counts)
         self._batch = jax.jit(sampler.selected_batch, static_argnums=(3,))
+
+    @property
+    def device_ids(self):
+        """Forward the sampler's slot→population-id binding so the host
+        loop evaluates schedules on the same resident ids as the fused
+        engine (DESIGN.md §17)."""
+        return self.sampler.device_ids
 
     def next_counts(self) -> np.ndarray:
         return np.asarray(self._counts(jnp.int32(self._t), self._gids))

@@ -43,6 +43,15 @@ quarantined out of GBP-CS after ``--quarantine-limit`` flags:
   PYTHONPATH=src python -m repro.launch.train --engine fused \
       --corrupt scale+nan_burst --corrupt-frac 0.2 \
       --robust-agg trimmed_mean --quarantine-limit 3
+
+Million-device populations (DESIGN.md §17): ``--devices`` (or
+``--population-per-group``) switches the universe to the lazy pure-function-
+of-id population — only the K sampled slots per group ever become resident
+arrays, so D scales to millions with flat memory:
+
+  PYTHONPATH=src python -m repro.launch.train --engine fused \
+      --devices 1000000 --groups 8 --devices-per-group 16 \
+      --reselect-every 10 --rounds 5 --iters 10
 """
 from __future__ import annotations
 
@@ -61,8 +70,9 @@ from repro.core import sync as sync_lib
 from repro.data import (AVAILABILITY_SCHEDULES, AvailabilityConfig,
                         CORRUPTION_MODES, CorruptionConfig, DRIFT_SCHEDULES,
                         DeviceBackedStreams, DeviceStream, DriftConfig,
-                        FactoryStreams, HostClientPool, PartitionConfig,
-                        femnist, make_availability_fn, make_client_pool,
+                        FactoryStreams, HostClientPool, LazyPopulation,
+                        PartitionConfig, PopulationConfig, femnist,
+                        make_availability_fn, make_client_pool,
                         make_corruption_fn, make_device_sampler,
                         make_partition)
 from repro.launch.mesh import make_group_mesh
@@ -185,6 +195,20 @@ def main() -> None:
     ap.add_argument("--no-nan-guard", action="store_true",
                     help="disable the per-iteration NaN/Inf rollback guard "
                          "(DESIGN.md §15.3)")
+    ap.add_argument("--population-per-group", type=int, default=0,
+                    help="lazy population (DESIGN.md §17): PHYSICAL devices "
+                         "per factory, evaluated as a pure function of the "
+                         "flat device id — never materialized. The engine "
+                         "still trains K = --devices-per-group slots per "
+                         "group, rebound to fresh candidate ids every "
+                         "--reselect-every iterations. 0 = historical dense "
+                         "partition")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="total population size shorthand: sets "
+                         "--population-per-group to --devices / --groups "
+                         "(must divide evenly). Scales to millions with "
+                         "flat memory — see README 'Scaling to millions of "
+                         "devices'")
     ap.add_argument("--init", choices=("mpinv", "zero", "random"),
                     default="mpinv")
     ap.add_argument("--alpha", type=float, default=0.3, help="Dirichlet skew")
@@ -196,9 +220,31 @@ def main() -> None:
     ap.add_argument("--log-json", default=None)
     args = ap.parse_args()
 
-    part = make_partition(PartitionConfig(
-        num_factories=args.groups, devices_per_factory=args.devices_per_group,
-        alpha=args.alpha, seed=args.seed))
+    k_pop = args.population_per_group
+    if args.devices:
+        if args.devices % args.groups:
+            ap.error("--devices must be divisible by --groups")
+        k_pop = args.devices // args.groups
+    if k_pop and k_pop < args.devices_per_group:
+        ap.error("--population-per-group / --devices per factory must be "
+                 ">= --devices-per-group (the engine slots draw from it)")
+    if k_pop:
+        # lazy universe (DESIGN.md §17): O(resident) memory however large
+        # D = M·K_pop gets; p_real is analytic, no build loop
+        pop = LazyPopulation(PopulationConfig(
+            num_factories=args.groups, devices_per_factory=k_pop,
+            alpha=args.alpha, batch_size=args.batch_size, seed=args.seed))
+        part = None
+        p_real = pop.p_real
+        num_devices = args.groups * k_pop
+    else:
+        pop = None
+        part = make_partition(PartitionConfig(
+            num_factories=args.groups,
+            devices_per_factory=args.devices_per_group,
+            alpha=args.alpha, seed=args.seed))
+        p_real = part.p_real
+        num_devices = args.groups * args.devices_per_group
     test_x, test_y = femnist.make_test_set(n_per_class=20)
     # device-cached, jittable eval: test set uploaded once, usable both by
     # host loops and on-device inside the engine's round scan
@@ -241,13 +287,13 @@ def main() -> None:
             straggler_frac=args.avail_straggler_frac,
             slow_factor=args.avail_slow_factor,
             deadline=args.avail_deadline),
-        args.seed, args.groups * args.devices_per_group)
+        args.seed, num_devices)
     corrupt_fn = None if args.corrupt == "none" else make_corruption_fn(
         CorruptionConfig(
             mode=args.corrupt, frac=args.corrupt_frac,
             prob=args.corrupt_prob, t0=args.corrupt_t0,
             scale=args.corrupt_scale, sigma=args.corrupt_sigma),
-        args.seed, args.groups * args.devices_per_group)
+        args.seed, num_devices)
 
     if args.strategy == "fedgs":
         fcfg = fedgs.FedGSConfig(
@@ -274,34 +320,43 @@ def main() -> None:
         group_loss_fn = cnn.make_group_loss_fn(
             args.kernel_backend, force_interpret=args.force_interpret) \
             if grouped_ok else None
+        def make_sampler():
+            if pop is not None:
+                # candidate subsampling only when the universe exceeds the
+                # engine slots; equal sizes keep the dense slot binding
+                return make_device_sampler(
+                    pop, drift=drift,
+                    candidates=args.devices_per_group
+                    if k_pop > args.devices_per_group else None,
+                    candidate_every=args.reselect_every)
+            return make_device_sampler(DeviceStream.from_partition(
+                part, batch_size=args.batch_size, seed=args.seed),
+                drift=drift)
+
         if args.engine == "host":
-            if drift is None:
+            if pop is None and drift is None:
                 streams = FactoryStreams(part, batch_size=args.batch_size,
                                          seed=args.seed)
             else:
-                # drift schedules live on the device-resident stream (pure
-                # in t, DESIGN.md §13); the host loop replays the same
-                # environment through the DeviceBackedStreams adapter
-                streams = DeviceBackedStreams(make_device_sampler(
-                    DeviceStream.from_partition(
-                        part, batch_size=args.batch_size, seed=args.seed),
-                    drift=drift))
+                # drift schedules and the lazy population live on the
+                # device-resident stream (pure in (t, id), DESIGN.md §13,
+                # §17); the host loop replays the same environment through
+                # the DeviceBackedStreams adapter
+                streams = DeviceBackedStreams(make_sampler())
             final, _ = fedgs.run_fedgs(
-                params, cnn.loss_fn, streams, part.p_real, fcfg,
+                params, cnn.loss_fn, streams, p_real, fcfg,
                 avail_fn=avail_fn, corrupt_fn=corrupt_fn,
                 group_loss_fn=group_loss_fn, eval_fn=eval_fn,
                 eval_every=args.eval_every, log_fn=log_fn)
         else:
-            sampler = make_device_sampler(DeviceStream.from_partition(
-                part, batch_size=args.batch_size, seed=args.seed),
-                drift=drift)
+            sampler = make_sampler()
             mesh = make_group_mesh(args.groups) if args.engine == "sharded" \
                 else None
             # chunk=1 inlines the single round (the fast CPU path); larger
             # chunks keep the rounds scan rolled — inlining chunk·T round
             # bodies would blow up compile time (DESIGN.md §12.2)
             final, _ = fedgs.run_fedgs_fused(
-                params, cnn.loss_fn, sampler, part.p_real, fcfg, mesh=mesh,
+                params, cnn.loss_fn, sampler, p_real, fcfg, mesh=mesh,
                 avail_fn=avail_fn, corrupt_fn=corrupt_fn,
                 group_loss_fn=group_loss_fn, eval_fn=eval_fn,
                 eval_every=args.eval_every, log_fn=log_fn,
@@ -324,8 +379,8 @@ def main() -> None:
         # the baselines share FEDGS's environment clock: round r sits at
         # t = r·T so --drift schedules hit both at the same wall time
         pool = make_client_pool(
-            DeviceStream.from_partition(part, batch_size=args.batch_size,
-                                        seed=args.seed),
+            pop if pop is not None else DeviceStream.from_partition(
+                part, batch_size=args.batch_size, seed=args.seed),
             clients=clients, steps=args.local_steps, drift=drift,
             iters_per_round=args.iters)
         # the baselines evaluate through the shared backbone + head

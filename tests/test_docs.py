@@ -37,7 +37,9 @@ def test_design_has_sections():
     assert "14" in secs, "DESIGN.md §14 (device availability) missing"
     assert "15" in secs, "DESIGN.md §15 (corruption robustness) missing"
     assert "16" in secs, "DESIGN.md §16 (conv fusion + dispatch) missing"
-    for sub in ("16.1", "16.2", "16.3", "16.4"):
+    assert "17" in secs, "DESIGN.md §17 (lazy million-device population) missing"
+    for sub in ("16.1", "16.2", "16.3", "16.4",
+                "17.1", "17.2", "17.3", "17.4"):
         assert sub in secs, f"DESIGN.md §{sub} missing"
 
 
@@ -72,6 +74,16 @@ def test_readme_documents_kernel_dispatch():
     design = DESIGN.read_text()
     for claim in ("custom_vjp", "im2col", "route_op", "roofline"):
         assert claim.lower() in design.lower(), f"DESIGN.md §16 missing {claim}"
+
+
+def test_readme_documents_scale():
+    """README's million-device quickstart must mention the lazy-population
+    flags and the scale bench artifact (§17)."""
+    readme = (REPO / "README.md").read_text()
+    for flag in ("--devices", "--population-per-group"):
+        assert flag in readme, f"README missing {flag} quickstart"
+    for word in ("BENCH_scale.json", "LazyPopulation", "1000000"):
+        assert word in readme, f"README scale section missing {word}"
 
 
 def test_readme_documents_robustness():

@@ -1,0 +1,270 @@
+"""Lazy population (DESIGN.md §17): lazy == dense equivalence + scale.
+
+Covers the ISSUE 9 acceptance surface: the lazy pure-function-of-id
+population gathered at small M×K bit-matches its dense materialization —
+standalone (``probs_for``/``styles_for``), through ``make_device_sampler``
+(counts / selected batches), and through short fused runs under every
+drift × availability × corruption schedule combination; every schedule
+evaluated on a resident-id subset equals the gather of its full-population
+evaluation (the lazy-table property that retired the ``(horizon, D)``
+Markov unroll); candidate subsampling binds engine slots to in-range
+population ids with per-epoch persistence; and the host==fused==sharded
+parity triangle (≤1e-5) holds over a lazy universe orders of magnitude
+larger than the resident slots. Property-based tests run via the
+``hypothesis_compat`` shim.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from hypothesis_compat import given, settings, st
+from repro.core import baselines, fedgs
+from repro.data import (AVAILABILITY_SCHEDULES, AvailabilityConfig,
+                        CORRUPTION_MODES, CorruptionConfig,
+                        DRIFT_SCHEDULES, DeviceBackedStreams, DriftConfig,
+                        LazyPopulation, PopulationConfig,
+                        make_availability_fn, make_client_pool,
+                        make_corruption_fn, make_device_sampler)
+
+_PROBE = baselines.linear_probe_model()
+
+
+def linear_loss(params, batch):
+    x, y = batch
+    return baselines.softmax_xent(_PROBE.apply(params, x), y)
+
+
+def _max_diff(a, b):
+    return max(float(jnp.max(jnp.abs(x - y)))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+@pytest.fixture(scope="module")
+def pop():
+    return LazyPopulation(PopulationConfig(
+        num_factories=3, devices_per_factory=6, batch_size=8, seed=0))
+
+
+@pytest.fixture(scope="module")
+def dense(pop):
+    return pop.materialize()
+
+
+class TestLazyDenseEquivalence:
+    def test_gathers_bit_match(self, pop, dense):
+        ids = jnp.arange(pop.config.total_devices, dtype=jnp.int32)
+        assert jnp.array_equal(pop.probs_for(ids), dense.probs_for(ids))
+        assert jnp.array_equal(pop.styles_for(ids), dense.styles_for(ids))
+
+    def test_subset_equals_gather_of_full(self, pop):
+        full = jnp.arange(pop.config.total_devices, dtype=jnp.int32)
+        sub = jnp.array([1, 7, 16], jnp.int32)
+        assert jnp.array_equal(pop.probs_for(sub), pop.probs_for(full)[sub])
+        assert jnp.array_equal(pop.styles_for(sub),
+                               pop.styles_for(full)[sub])
+
+    def test_probs_are_distributions(self, pop):
+        p = pop.probs_for(jnp.arange(6, dtype=jnp.int32))
+        assert bool(jnp.all(p >= 0))
+        assert jnp.allclose(jnp.sum(p, axis=-1), 1.0, atol=1e-5)
+
+    def test_p_real_is_analytic_mean(self, pop):
+        # Monte-Carlo over every device's exact Dirichlet mean == p_real
+        ids = jnp.arange(pop.config.total_devices, dtype=jnp.int32)
+        conc = pop.factory_concentration(ids // pop.devices_per_factory)
+        mean = jnp.mean(conc / jnp.sum(conc, -1, keepdims=True), axis=0)
+        assert jnp.allclose(jnp.asarray(pop.p_real), mean, atol=1e-5)
+        assert abs(float(jnp.sum(jnp.asarray(pop.p_real))) - 1.0) < 1e-5
+
+    def test_sampler_counts_and_batches_bit_match(self, pop, dense):
+        s_lazy = make_device_sampler(pop)
+        s_dense = make_device_sampler(dense)
+        gids = jnp.arange(3, dtype=jnp.int32)
+        for t in (0, 3):
+            t = jnp.int32(t)
+            assert jnp.array_equal(s_lazy.counts(t, gids),
+                                   s_dense.counts(t, gids))
+            mask = jnp.zeros((3, 6)).at[:, :2].set(1.0)
+            bl = s_lazy.selected_batch(t, gids, mask, 2)
+            bd = s_dense.selected_batch(t, gids, mask, 2)
+            assert all(jnp.array_equal(a, b) for a, b in zip(bl, bd))
+
+    def test_client_pool_bit_match(self, pop, dense):
+        pl = make_client_pool(pop, clients=4, steps=2)
+        pd = make_client_pool(dense, clients=4, steps=2)
+        (il, ll), wl = pl.round_batches(jnp.int32(1))
+        (id_, ld), wd = pd.round_batches(jnp.int32(1))
+        assert jnp.array_equal(il, id_) and jnp.array_equal(ll, ld)
+        assert jnp.array_equal(wl, wd)
+
+
+# every drift schedule × a representative availability and corruption
+# schedule: the full cross product of *all* schedules is covered by the
+# union of these sweeps (each axis varies independently per DESIGN.md §17 —
+# the schedules hash disjoint fold_in chains of the same ids)
+_DRIFTS = [None] + [DriftConfig(s, t0=2, period=3)
+                    for s in DRIFT_SCHEDULES if s != "static"]
+_AVAILS = [None] + [AvailabilityConfig(s, up_prob=0.7, dwell=2, horizon=5)
+                    for s in AVAILABILITY_SCHEDULES if s != "always"]
+_CORRUPTS = [None] + [CorruptionConfig(m, frac=0.4, prob=0.7)
+                      for m in CORRUPTION_MODES]
+
+
+def _axis_cases():
+    cases = []
+    for d in _DRIFTS:
+        cases.append((d, _AVAILS[1], _CORRUPTS[3]))
+    for a in _AVAILS:
+        cases.append((_DRIFTS[1], a, None))
+    for c in _CORRUPTS:
+        cases.append((None, _AVAILS[2], c))
+    return cases
+
+
+@pytest.mark.parametrize("drift,avail,corrupt", _axis_cases())
+def test_lazy_fused_run_bit_matches_dense(pop, dense, drift, avail, corrupt):
+    """Short fused runs over the lazy population and its materialization
+    produce BIT-identical final params and fault telemetry under every
+    schedule axis — the ISSUE 9 lazy==dense property."""
+    d_total = pop.config.total_devices
+    avail_fn = None if avail is None else make_availability_fn(avail, 0,
+                                                               d_total)
+    corrupt_fn = None if corrupt is None else make_corruption_fn(corrupt, 0,
+                                                                 d_total)
+    cfg = fedgs.FedGSConfig(
+        num_groups=3, devices_per_group=6, num_selected=3, num_presampled=1,
+        iters_per_round=3, rounds=2, lr=0.05, batch_size=8,
+        gbp_max_iters=8, engine="fused")
+    params = _PROBE.init(jax.random.PRNGKey(0))
+    finals, logs = [], []
+    for stream in (pop, dense):
+        sampler = make_device_sampler(stream, drift=drift)
+        final, log = fedgs.run_fedgs(
+            params, linear_loss, sampler, jnp.asarray(pop.p_real), cfg,
+            avail_fn=avail_fn, corrupt_fn=corrupt_fn)
+        finals.append(final)
+        logs.append(log)
+    assert _max_diff(finals[0], finals[1]) == 0.0
+    for a, b in zip(logs[0], logs[1]):
+        assert a.loss == b.loss
+        if corrupt is not None:
+            assert a.corrupted_selected == b.corrupted_selected
+
+
+class TestScheduleResidentSubset:
+    """avail/corrupt/drift keyed by flat id: any resident subset equals the
+    gather of the full-population evaluation (kills the (·, D) tables)."""
+
+    @given(t=st.integers(0, 11), sched_ix=st.integers(1, 3))
+    @settings(max_examples=12, deadline=None)
+    def test_availability_subset(self, t, sched_ix):
+        schedule = AVAILABILITY_SCHEDULES[sched_ix]  # skips 'always'
+        d = 40
+        fn = make_availability_fn(
+            AvailabilityConfig(schedule, up_prob=0.6, dwell=3, horizon=6),
+            0, d)
+        full = jnp.arange(d, dtype=jnp.int32)
+        sub = jnp.array([0, 7, 19, 33], jnp.int32)
+        up_f, lat_f = fn(jnp.int32(t), full)
+        up_s, lat_s = fn(jnp.int32(t), sub)
+        assert jnp.array_equal(up_s, up_f[sub])
+        assert jnp.array_equal(lat_s, lat_f[sub])
+
+    @given(t=st.integers(0, 9))
+    @settings(max_examples=8, deadline=None)
+    def test_corruption_subset(self, t):
+        d = 30
+        fn = make_corruption_fn(
+            CorruptionConfig("scale+gauss_noise", frac=0.5, prob=0.8), 0, d)
+        g_full = {"w": jnp.ones((d, 4), jnp.float32)}
+        full = jnp.arange(d, dtype=jnp.int32)
+        sub = jnp.array([2, 11, 29], jnp.int32)
+        out_f, hit_f = fn(g_full, jnp.int32(t), full)
+        out_s, hit_s = fn({"w": g_full["w"][sub]}, jnp.int32(t), sub)
+        assert jnp.array_equal(hit_s, hit_f[sub])
+        assert jnp.array_equal(out_s["w"], out_f["w"][sub])
+
+    def test_markov_chain_replay_matches_unrolled_table(self):
+        """The lazy per-id chain replay is bit-identical to the retired
+        (horizon, D) build-time unroll at every t, including the wrap."""
+        d, av = 15, AvailabilityConfig("markov", up_prob=0.6, dwell=3,
+                                       horizon=7)
+        fn = make_availability_fn(av, 0, d)
+        ids = jnp.arange(d, dtype=jnp.int32)
+        base = jax.random.fold_in(jax.random.PRNGKey(0), 505)
+        k_m = jax.random.fold_in(base, 2)
+        p_ud = (1 - av.up_prob) / av.dwell
+        p_du = av.up_prob / av.dwell
+        state = jax.vmap(lambda i: jax.random.bernoulli(
+            jax.random.fold_in(jax.random.fold_in(k_m, i), 0),
+            av.up_prob))(ids)
+        table = [state]
+        for s in range(1, av.horizon):
+            u = jax.vmap(lambda i: jax.random.uniform(
+                jax.random.fold_in(jax.random.fold_in(k_m, i), s)))(ids)
+            state = jnp.where(state, u >= p_ud, u < p_du)
+            table.append(state)
+        k_lat = jax.random.fold_in(base, 9)
+        for t in (0, 3, 6, 7, 10, 13, 14):
+            lat = jax.vmap(lambda i: jax.random.uniform(
+                jax.random.fold_in(jax.random.fold_in(k_lat, i),
+                                   jnp.int32(t)), (),
+                minval=0.5, maxval=1.5))(ids)
+            ref = (table[t % av.horizon].astype(jnp.float32)
+                   * (lat <= av.deadline))
+            up, _ = fn(jnp.int32(t), ids)
+            assert jnp.array_equal(up, ref), f"mismatch at t={t}"
+
+
+class TestCandidateSubsampling:
+    @given(seed=st.integers(0, 5))
+    @settings(max_examples=6, deadline=None)
+    def test_slot_ids_in_group_range(self, seed):
+        pop = LazyPopulation(PopulationConfig(
+            num_factories=3, devices_per_factory=100, batch_size=8,
+            seed=seed))
+        s = make_device_sampler(pop, candidates=5, candidate_every=4)
+        gids = jnp.arange(3, dtype=jnp.int32)
+        ids = s.device_ids(jnp.int32(seed), gids)
+        assert ids.shape == (3, 5)
+        lo = gids[:, None] * 100
+        assert bool(jnp.all((ids >= lo) & (ids < lo + 100)))
+
+    def test_epoch_persistence_and_redraw(self):
+        pop = LazyPopulation(PopulationConfig(
+            num_factories=2, devices_per_factory=50, batch_size=8, seed=1))
+        s = make_device_sampler(pop, candidates=6, candidate_every=3)
+        gids = jnp.arange(2, dtype=jnp.int32)
+        e0 = [s.device_ids(jnp.int32(t), gids) for t in (0, 1, 2)]
+        e1 = s.device_ids(jnp.int32(3), gids)
+        assert all(jnp.array_equal(e0[0], e) for e in e0[1:])
+        assert not jnp.array_equal(e0[0], e1)
+        # frozen committee: candidate_every=0 never redraws
+        s0 = make_device_sampler(pop, candidates=6, candidate_every=0)
+        assert jnp.array_equal(s0.device_ids(jnp.int32(0), gids),
+                               s0.device_ids(jnp.int32(99), gids))
+
+    def test_fused_run_over_large_universe(self):
+        """End-to-end: K=8 engine slots drawing from K_pop=5000 per factory
+        (D=20k), parity host == fused == sharded ≤ 1e-5."""
+        pop = LazyPopulation(PopulationConfig(
+            num_factories=4, devices_per_factory=5000, batch_size=8,
+            seed=2))
+        sampler = make_device_sampler(pop, candidates=8, candidate_every=2)
+        avail_fn = make_availability_fn(
+            AvailabilityConfig("markov", up_prob=0.8, dwell=2, horizon=4),
+            0, pop.config.total_devices)
+        cfg = dict(num_groups=4, devices_per_group=8, num_selected=3,
+                   num_presampled=1, iters_per_round=3, rounds=2, lr=0.05,
+                   batch_size=8, gbp_max_iters=8)
+        params = _PROBE.init(jax.random.PRNGKey(0))
+        p_real = jnp.asarray(pop.p_real)
+        outs = {}
+        for eng in ("host", "fused", "sharded"):
+            c = fedgs.FedGSConfig(engine=eng, **cfg)
+            streams = DeviceBackedStreams(sampler) if eng == "host" \
+                else sampler
+            outs[eng], _ = fedgs.run_fedgs(params, linear_loss, streams,
+                                           p_real, c, avail_fn=avail_fn)
+        assert _max_diff(outs["host"], outs["fused"]) <= 1e-5
+        assert _max_diff(outs["fused"], outs["sharded"]) <= 1e-5
