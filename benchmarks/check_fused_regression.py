@@ -6,11 +6,12 @@ committed numbers.
   python benchmarks/check_fused_regression.py --drift BASELINE.json NEW.json
   python benchmarks/check_fused_regression.py --availability B.json NEW.json
   python benchmarks/check_fused_regression.py --robust B.json NEW.json
+  python benchmarks/check_fused_regression.py --comm B.json NEW.json
   python benchmarks/check_fused_regression.py --kernels B.json NEW.json
   python benchmarks/check_fused_regression.py --scale B.json NEW.json
 
 A missing BASELINE file is tolerated in ``--drift``, ``--availability``,
-``--robust``, ``--kernels`` and ``--scale`` modes only (first-run tolerance: those gates
+``--robust``, ``--comm``, ``--kernels`` and ``--scale`` modes only (first-run tolerance: those gates
 check the NEW json's invariant and report "no committed baseline", so a
 suite can be introduced before its JSON lands on the branch). The fused/table2 modes
 keep failing loudly on a missing baseline — their committed JSONs exist, so
@@ -37,6 +38,14 @@ plain-mean ablation on mean final test accuracy over the gate seeds, and on
 the pure NaN-burst leg the guard must have fired at least once while the
 final parameters stayed finite. Corruption/clip/rollback telemetry and
 throughput are reported only.
+
+``--comm`` gates ``BENCH_comm.json`` on THREE invariants (DESIGN.md §18):
+1% external top-k with error feedback must reach the dense run's final
+accuracy − 0.02 (mean over the gate seeds) while its per-round
+``bytes_ext`` ledger shrinks ≥ 20×, and ``theory.measured_crossover`` fed
+the engine's own dense byte ledgers at equal rounds and t_select = 0 must
+reproduce the Prop. 4 constant TL/(M(L−1)) to float precision. The
+observed (rounds-to-target) crossover numbers are reported only.
 
 Default mode compares ``BENCH_fedgs_fused.json``'s ``fused_iters_per_sec``
 (the default engine config: ``train_step='grad_avg'``,
@@ -224,6 +233,54 @@ def check_robust(baseline: dict | None, new: dict) -> int:
     return rc
 
 
+def check_comm(baseline: dict | None, new: dict) -> int:
+    for leg, rec in new["legs"].items():
+        row = f"{leg}: acc={rec['final_test_accuracy']}"
+        if "bytes_ext_per_round" in rec:
+            row += f" bytes_ext/round={rec['bytes_ext_per_round']}"
+        if "bytes_int_per_round" in rec:
+            row += f" bytes_int/round={rec['bytes_int_per_round']}"
+        old = (baseline or {}).get("legs", {}).get(leg)
+        if old:
+            row += f" (committed acc {old['final_test_accuracy']})"
+        print(row)
+    rc = 0
+    legs = new["legs"]
+    if not new.get("invariant_topk_ef_tracks_dense", False):
+        print("FAIL: 1% external top-k with error feedback "
+              f"({legs['fedgs_topk_ext']['final_test_accuracy']}) trails "
+              "the dense run "
+              f"({legs['fedgs_dense']['final_test_accuracy']}) by more "
+              f"than {new.get('acc_tolerance')} — the compression-accuracy "
+              "invariant (DESIGN.md §18) is broken", file=sys.stderr)
+        rc = 1
+    else:
+        print("OK: topk+EF accuracy tracks dense (gap "
+              f"{new.get('topk_minus_dense_acc')})")
+    if not new.get("invariant_bytes_ext_saving", False):
+        print("FAIL: external byte saving is only "
+              f"{new.get('bytes_ext_ratio')}x "
+              f"(< {new.get('bytes_ext_floor')}x) — the byte ledger no "
+              "longer reflects 1% top-k (DESIGN.md §18.3)", file=sys.stderr)
+        rc = 1
+    else:
+        print(f"OK: bytes_ext shrinks {new.get('bytes_ext_ratio')}x "
+              f">= {new.get('bytes_ext_floor')}x")
+    if not new.get("invariant_crossover_matches_prop4", False):
+        xo = new.get("crossover", {})
+        print("FAIL: measured_crossover on dense ledgers gives "
+              f"{xo.get('identity', {}).get('measured_ratio')} vs the "
+              f"Prop. 4 constant {xo.get('predicted_ratio_prop4')} "
+              f"(rel err {xo.get('identity_rel_err')}) — the Eq. 24/25 "
+              "byte accounting drifted (DESIGN.md §18.4)", file=sys.stderr)
+        rc = 1
+    else:
+        print("OK: measured crossover == Prop. 4 constant "
+              f"({new['crossover']['predicted_ratio_prop4']}) on dense "
+              "ledgers")
+    return rc
+
+
 def check_kernels(baseline: dict | None, new: dict) -> int:
     rc = 0
     speedup = new.get("cnn_speedup_vs_host_device")
@@ -339,18 +396,19 @@ def main(argv: list[str]) -> int:
     drift = "--drift" in argv
     availability = "--availability" in argv
     robust = "--robust" in argv
+    comm = "--comm" in argv
     kernels = "--kernels" in argv
     scale = "--scale" in argv
     paths = [a for a in argv
              if a not in ("--table2", "--drift", "--availability",
-                          "--robust", "--kernels", "--scale")]
+                          "--robust", "--comm", "--kernels", "--scale")]
     if len(paths) != 2 or (table2 + drift + availability + robust
-                           + kernels + scale) > 1:
+                           + comm + kernels + scale) > 1:
         print(__doc__, file=sys.stderr)
         return 2
     baseline = _load(paths[0],
                      required=not (drift or availability or robust
-                                   or kernels or scale))
+                                   or comm or kernels or scale))
     new = _load(paths[1], required=True)
     if drift:
         return check_drift(baseline, new)
@@ -358,6 +416,8 @@ def main(argv: list[str]) -> int:
         return check_availability(baseline, new)
     if robust:
         return check_robust(baseline, new)
+    if comm:
+        return check_comm(baseline, new)
     if kernels:
         return check_kernels(baseline, new)
     if scale:

@@ -15,6 +15,7 @@ import traceback
 
 from . import (
     bench_availability,
+    bench_comm,
     bench_drift,
     bench_fedgs_fused,
     bench_fedgs_vs_baselines,
@@ -40,6 +41,7 @@ SUITES = {
     "drift": bench_drift.run,                # dynamic environments (§13)
     "availability": bench_availability.run,  # churn robustness (§14)
     "robust": bench_robust.run,              # corruption robustness (§15)
+    "comm": bench_comm.run,                  # communication efficiency (§18)
     "scale": bench_scale.run,                # million-device sweep (§17)
 }
 

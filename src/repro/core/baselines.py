@@ -398,13 +398,19 @@ def make_baseline_experiment(
     """
     round_step = make_round_step(model, strategy, cfg)
     state = init_strategy_state(model, strategy, cfg.seed, params)
+    # §18.3 byte ledger: every baseline client syncs the dense f32 model
+    # with the cloud directly (no BS tier, no compression) — the FedAvg
+    # side of the Prop. 4 measured-crossover check
+    n_par = sum(leaf.size for leaf in jax.tree.leaves(state[0]))
+    bytes_ext = 2.0 * 4.0 * n_par * cfg.clients_per_round
 
     def round_fn(state, r):
         params, extras, server_state = state
         batches, weights = pool.round_batches(r)
         params, extras, server_state, loss = round_step(
             params, extras, server_state, batches, weights)
-        return (params, extras, server_state), {"loss": loss}
+        return (params, extras, server_state), {
+            "loss": loss, "bytes_ext": jnp.float32(bytes_ext)}
 
     # unroll=1: the round body's local-steps scan is rolled, so its ops run
     # single-threaded on XLA:CPU either way (DESIGN.md §7) — unrolling the

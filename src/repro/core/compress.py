@@ -1,0 +1,225 @@
+"""Gradient compression for the Eq. 4 / Eq. 5 sync links (DESIGN.md §18).
+
+The paper's efficiency claim (Prop. 4) is about *bytes*: FedGS wins wall
+clock because external sync moves M models over the slow BS↔cloud link
+instead of M·L. This module makes the byte count itself a knob: top-k
+magnitude sparsification and stochastic int8 quantization, composable as
+``'topk:FRAC'``, ``'int8'``, ``'topk:FRAC+int8'``, applied independently at
+the internal (Eq. 4) and external (Eq. 5) sync boundaries via
+``FedGSConfig.compress_int`` / ``compress_ext``.
+
+Both compressors run with *error feedback* (EF): the quantity actually
+transmitted is ``y = C(g + e)`` and the residual ``e' = (g + e) − y`` is
+carried to the next sync event, one residual per group, riding the scan
+carry exactly like the §14.3 staleness state (sharded ``P('groups')``).
+EF makes the compression error telescope — over a run the sum of
+transmitted updates plus the final residual equals the sum of raw
+gradients exactly — which is what lets 1% top-k track the dense run.
+
+``parse_compress('none')`` returns ``None`` and every caller gates on it
+*statically* (Python-level), so the uncompressed engine traces exactly the
+pre-§18 graph: bit-identity is structural, not a tolerance.
+
+Byte accounting is analytic (DESIGN.md §18.3): :func:`payload_bytes` maps
+(|θ|, spec) to the one-direction wire size — 4|θ| dense, k·(value+index)
+for top-k, |θ|+scale for dense int8 — and the engines multiply by the
+actual uplink/downlink count per sync event into
+``RoundRecord.bytes_int`` / ``bytes_ext``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import dispatch
+
+PyTree = Any
+Array = jax.Array
+
+# PRNG domain for compression keys (availability=505, corruption=606,
+# committees=707, population=808..810 — DESIGN.md §14.1/§15.1/§17.1)
+FOLD_COMPRESS = 909
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressSpec:
+    """One parsed compression operator: optional top-k sparsification
+    (fraction of coordinates kept) followed by optional stochastic int8
+    quantization of the survivors."""
+    topk_frac: float | None = None
+    int8: bool = False
+
+
+def parse_compress(spec: str) -> CompressSpec | None:
+    """Parse a ``compress_int``/``compress_ext`` config string.
+
+    Grammar: ``'none'`` → None (compression statically off),
+    ``'topk:FRAC'``, ``'int8'``, and their '+'-composition
+    ``'topk:FRAC+int8'`` (top-k first, then quantize the kept values).
+    """
+    if spec is None or spec == "none":
+        return None
+    topk_frac, int8 = None, False
+    for part in str(spec).split("+"):
+        part = part.strip()
+        if part.startswith("topk:"):
+            if topk_frac is not None:
+                raise ValueError(f"duplicate topk term in {spec!r}")
+            try:
+                topk_frac = float(part[len("topk:"):])
+            except ValueError:
+                raise ValueError(
+                    f"bad topk fraction in {spec!r} (expected 'topk:FRAC')")
+            if not 0.0 < topk_frac <= 1.0:
+                raise ValueError(
+                    f"topk fraction must be in (0, 1], got {topk_frac}")
+        elif part == "int8":
+            if int8:
+                raise ValueError(f"duplicate int8 term in {spec!r}")
+            int8 = True
+        else:
+            raise ValueError(
+                f"unknown compression term {part!r} in {spec!r} "
+                "(expected 'none', 'topk:FRAC', 'int8', or a '+' mix)")
+    return CompressSpec(topk_frac=topk_frac, int8=int8)
+
+
+def topk_count(n_params: int, frac: float) -> int:
+    """Coordinates kept by ``topk:frac`` on an |θ|=n_params vector —
+    ``⌈frac·n⌉`` clamped to [1, n] so the operator never degenerates to
+    an all-zero transmit."""
+    return max(1, min(n_params, int(math.ceil(frac * n_params))))
+
+
+def payload_bytes(n_params: int, spec: CompressSpec | None) -> float:
+    """Analytic one-direction wire size in bytes for one |θ|=n_params
+    payload under ``spec`` (DESIGN.md §18.3): dense fp32 is 4|θ|; top-k
+    ships k (value, int32 index) pairs — 1-byte values (+ one fp32 scale)
+    when int8-quantized, fp32 otherwise; dense int8 ships |θ| bytes + the
+    scale."""
+    if spec is None:
+        return 4.0 * n_params
+    if spec.topk_frac is not None:
+        k = topk_count(n_params, spec.topk_frac)
+        value_bytes = 1.0 if spec.int8 else 4.0
+        scale = 4.0 if spec.int8 else 0.0
+        return k * (value_bytes + 4.0) + scale
+    return float(n_params) + 4.0
+
+
+# ---------------------------------------------------------------------------
+# Primitive compressors (flat (P,) f32 vectors).
+# ---------------------------------------------------------------------------
+
+def topk_select_dense(x: Array, k: int) -> Array:
+    """jnp reference: keep exactly the k largest-|x| coordinates (ties break
+    toward the LOWER index, matching ``jax.lax.top_k``'s stable order and
+    the Pallas kernel's pairwise rank), zero the rest."""
+    n = x.shape[0]
+    if k <= 0:
+        return jnp.zeros_like(x)
+    if k >= n:
+        return x
+    _, idx = jax.lax.top_k(jnp.abs(x), k)
+    return jnp.zeros_like(x).at[idx].set(x[idx])
+
+
+def int8_quantize(x: Array, key: Array) -> Array:
+    """Stochastic int8 quantization, returned dequantized: scale by
+    max|x|/127, stochastically round (floor + Bernoulli(frac)) so the
+    operator is *unbiased in expectation over keys* — E[Q(x)] = x — and
+    rescale. Exact zeros stay exactly zero (floor(0)=0, frac 0), so int8
+    composes with top-k without densifying the sparsity pattern."""
+    x = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)) / 127.0, 1e-30)
+    y = x / scale
+    lo = jnp.floor(y)
+    q = lo + jax.random.bernoulli(key, y - lo).astype(jnp.float32)
+    return jnp.clip(q, -127.0, 127.0) * scale
+
+
+def compress_flat(x: Array, spec: CompressSpec, key: Array, *,
+                  backend: str = "jnp", force_interpret: bool = False
+                  ) -> Array:
+    """Apply one parsed spec to a flat vector: top-k (routed through
+    :func:`dispatch.topk_select_fn` — Pallas kernel or jnp fallback per the
+    compiled-aware router, DESIGN.md §16.2/§18.2), then int8."""
+    if spec.topk_frac is not None:
+        k = topk_count(x.shape[0], spec.topk_frac)
+        x = dispatch.topk_select_fn(
+            backend, force_interpret=force_interpret)(x, k)
+    if spec.int8:
+        x = int8_quantize(x, key)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Error-feedback over pytrees (one residual stream per group).
+# ---------------------------------------------------------------------------
+
+def _flatten(tree: PyTree) -> tuple[Array, list, Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    flat = jnp.concatenate(
+        [leaf.reshape(-1).astype(jnp.float32) for leaf in leaves])
+    return flat, leaves, treedef
+
+
+def _unflatten(flat: Array, leaves: list, treedef) -> PyTree:
+    out, off = [], 0
+    for leaf in leaves:
+        out.append(flat[off:off + leaf.size].reshape(leaf.shape)
+                   .astype(leaf.dtype))
+        off += leaf.size
+    return jax.tree.unflatten(treedef, out)
+
+
+def ef_compress(tree: PyTree, residual: PyTree, spec: CompressSpec,
+                key: Array, *, backend: str = "jnp",
+                force_interpret: bool = False
+                ) -> tuple[PyTree, PyTree, Array]:
+    """One error-feedback compression event (DESIGN.md §18.1):
+
+        x = g + e,   y = C(x),   e' = x − y
+
+    over the whole tree flattened to one (|θ|,) vector (top-k is *global*
+    across layers — the paper's S is the full model size). Returns
+    ``(y, e', ‖e'‖₂)``: the transmitted update in the tree's
+    structure/dtypes, the carried f32 residual, and the compression-error
+    norm for telemetry. The telescoping identity Σ_t y_t + e_T = Σ_t g_t
+    holds exactly (up to f32 addition), tested in tests/test_compress.py.
+    """
+    flat, leaves, treedef = _flatten(tree)
+    r, rleaves, rtreedef = _flatten(residual)
+    x = flat + r
+    y = compress_flat(x, spec, key, backend=backend,
+                      force_interpret=force_interpret)
+    e = x - y
+    err = jnp.sqrt(jnp.sum(e * e))
+    return (_unflatten(y, leaves, treedef),
+            _unflatten(e, rleaves, rtreedef), err)
+
+
+def make_grad_tx(spec: CompressSpec | None, *, backend: str = "jnp",
+                 force_interpret: bool = False):
+    """Per-group gradient transform for the train steps: ``tx(g, e, key) ->
+    (y, e', err)`` — or ``None`` when ``spec`` is None, which callers use to
+    keep the uncompressed code path literally unchanged (bit-identity)."""
+    if spec is None:
+        return None
+
+    def tx(g: PyTree, e: PyTree, key: Array):
+        return ef_compress(g, e, spec, key, backend=backend,
+                           force_interpret=force_interpret)
+
+    return tx
+
+
+def zero_residual(params: PyTree) -> PyTree:
+    """f32 zero residual tree matching ``params`` (one per group once
+    replicated over the M axis by the caller)."""
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

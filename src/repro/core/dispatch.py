@@ -11,6 +11,7 @@ either plain jnp reductions or the repo's Pallas kernels:
 | GBP-CS permutation step | `gbp_cs._default_step` (None) | `kernels.gbp_cs.ops.fused_step` |
 | robust Eq. 4 (DESIGN.md §15.2) | `sync.robust_aggregate` | `kernels.robust_agg.ops.robust_aggregate_tree` |
 | conv superbatch block (§16.1) | `kernels.conv_fused` im2col+einsum | `kernels.conv_fused.ops.conv_block_grouped` |
+| top-k compression (§18.2) | `compress.topk_select_dense` | `kernels.topk_compress.ops.topk_select_flat` |
 
 The dispatch layer is *compiled-aware* (DESIGN.md §16.2): every kernel op
 records whether it ran compiled, interpret, or fell back to jnp
@@ -125,6 +126,23 @@ def robust_agg_fn(backend: str, method: str, *, clip: float = 10.0,
         return sync.weighted_average
     return functools.partial(sync.robust_aggregate, method=method,
                              clip=clip, trim=trim)
+
+
+def topk_select_fn(backend: str, *, force_interpret: bool = False
+                   ) -> Callable[[jax.Array, int], jax.Array]:
+    """Top-k magnitude selection over a flat (P,) vector (the sparsification
+    half of §18 gradient compression): ``fn(x, k) -> x`` with everything
+    but the k largest-|x| coordinates zeroed, ties broken toward the lower
+    index. ``'pallas'`` routes through the pairwise rank-selection kernel
+    (``kernels.topk_compress``, compiled-aware like every kernel op —
+    O(P²) compares, so the CPU router falls back to the identical-math
+    ``jax.lax.top_k`` scatter for heavy sizes unless pinned)."""
+    if check_backend(backend) == "pallas":
+        from repro.kernels.topk_compress import ops as topk_ops
+        return functools.partial(topk_ops.topk_select_flat,
+                                 force_interpret=force_interpret)
+    from . import compress
+    return compress.topk_select_dense
 
 
 def gbp_step_fn(backend: str):

@@ -65,6 +65,12 @@ class RoundRecord(NamedTuple):
     pairs the NaN guard rolled back, and ``agg_residual`` the mean L2
     distance between the robust aggregate and the finite-masked mean (how
     much the robust aggregator actually changed the update).
+    The communication fields (DESIGN.md §18.3) account link traffic
+    analytically from the compression spec and |θ|: ``bytes_int`` is the
+    round's total device↔BS bytes (Eq. 4, download + upload per seated
+    contributor over all T iterations), ``bytes_ext`` the BS↔cloud bytes
+    (Eq. 5, 2·payload·M), and ``compress_error`` the mean per-transmission
+    L2 norm of the error-feedback residual (NaN when compression is off).
     """
     round: int
     loss: float
@@ -83,6 +89,9 @@ class RoundRecord(NamedTuple):
     clipped_fraction: float = _NAN
     rollbacks: float = _NAN
     agg_residual: float = _NAN
+    bytes_int: float = _NAN
+    bytes_ext: float = _NAN
+    compress_error: float = _NAN
 
     def to_dict(self) -> dict:
         d = dict(self._asdict())
@@ -97,7 +106,8 @@ class RoundRecord(NamedTuple):
 _OPTIONAL_METRICS = ("divergence", "group_discrepancy", "selection_distance",
                      "reselections", "participation", "staleness_mean",
                      "staleness_max", "dark_selected", "corrupted_selected",
-                     "clipped_fraction", "rollbacks", "agg_residual")
+                     "clipped_fraction", "rollbacks", "agg_residual",
+                     "bytes_int", "bytes_ext", "compress_error")
 
 
 def records_from_metrics(r0: int, metrics: dict, *, strategy: str = ""

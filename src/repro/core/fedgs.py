@@ -37,7 +37,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from . import dispatch, distributions, engine, gbp_cs, selection, sync
+from . import (compress, dispatch, distributions, engine, gbp_cs, selection,
+               sync)
 
 PyTree = Any
 Array = jax.Array
@@ -99,6 +100,16 @@ class FedGSConfig:
     nan_guard: bool = True        # per-iteration isfinite audit + rollback of
     #                               poisoned group states when corruption is
     #                               injected (DESIGN.md §15.3)
+    compress_int: str = "none"    # Eq. 4 internal-sync compression
+    #                               (DESIGN.md §18): 'none' | 'topk:FRAC' |
+    #                               'int8' | 'topk:FRAC+int8' — applied to
+    #                               each group's aggregated gradient with a
+    #                               per-group error-feedback residual in the
+    #                               scan carry
+    compress_ext: str = "none"    # Eq. 5 external-sync compression (same
+    #                               grammar): each group's round delta
+    #                               ω_t^m − ω_{t-1} is EF-compressed before
+    #                               the cloud average
 
     def __post_init__(self):
         if self.train_step not in ("grad_avg", "model_avg"):
@@ -140,6 +151,13 @@ class FedGSConfig:
             raise ValueError("quarantine_limit must be >= 0 (0 = off), got "
                              f"{self.quarantine_limit}")
         dispatch.check_backend(self.kernel_backend)
+        ci = compress.parse_compress(self.compress_int)  # raises on bad spec
+        compress.parse_compress(self.compress_ext)
+        if ci is not None and self.train_step != "grad_avg":
+            raise ValueError(
+                "compress_int compresses the per-group aggregated gradient "
+                "and requires train_step='grad_avg' (model_avg averages "
+                "models, not gradients)")
 
     @property
     def l_sel(self) -> int:
@@ -222,7 +240,9 @@ def global_params(group_params: PyTree) -> PyTree:
 
 def _per_group_train(params_m: PyTree, batches_m: PyTree, loss_fn: LossFn,
                      cfg: FedGSConfig,
-                     weights: Array | None = None) -> tuple[PyTree, Array]:
+                     weights: Array | None = None,
+                     grad_tx=None, e: PyTree | None = None,
+                     ckey: Array | None = None):
     """Lines 5–8 for one group — shared verbatim by the host loop and the
     fused scan so both engines are numerically interchangeable.
 
@@ -249,6 +269,13 @@ def _per_group_train(params_m: PyTree, batches_m: PyTree, loss_fn: LossFn,
 
     ``weights`` are the n^{m,k} internal-sync weights; uniform (paper §V.A)
     if None.
+
+    ``grad_tx`` (with the carried residual ``e`` and a per-group ``ckey``)
+    is the §18 internal-sync compression transform
+    (:func:`compress.make_grad_tx`): the aggregated gradient is
+    EF-compressed before the SGD update and the return value extends to
+    ``(params', loss, e', err)``. ``grad_tx=None`` (the default) leaves
+    this function literally byte-for-byte the pre-§18 code path.
     """
     if weights is None:
         weights = jnp.ones((cfg.num_selected,), jnp.float32)
@@ -275,6 +302,10 @@ def _per_group_train(params_m: PyTree, batches_m: PyTree, loss_fn: LossFn,
                 lambda b: sync.local_grads(params_m, b, loss_fn))(batches_m)
             g = dispatch.internal_avg_fn(
                 "pallas", force_interpret=cfg.force_interpret)(grads, weights)
+            if grad_tx is not None:
+                g, e, err = grad_tx(g, e, ckey)
+                return (sync.apply_sgd(params_m, g, cfg.lr),
+                        jnp.mean(losses), e, err)
             return sync.apply_sgd(params_m, g, cfg.lr), jnp.mean(losses)
         # route == 'jnp': the kernel would fall back anyway — skip the
         # member-gradient stack and take the fused single-backward below
@@ -285,13 +316,17 @@ def _per_group_train(params_m: PyTree, batches_m: PyTree, loss_fn: LossFn,
         return jnp.sum(losses * wn), losses
 
     (_, losses), g = jax.value_and_grad(weighted_loss, has_aux=True)(params_m)
+    if grad_tx is not None:
+        g, e, err = grad_tx(g, e, ckey)
+        return sync.apply_sgd(params_m, g, cfg.lr), jnp.mean(losses), e, err
     return sync.apply_sgd(params_m, g, cfg.lr), jnp.mean(losses)
 
 
 def _per_group_train_avail(params_m: PyTree, batches_m: PyTree,
                            loss_fn: LossFn, cfg: FedGSConfig,
-                           fresh_w: Array, stale_sum: Array, g_prev: PyTree
-                           ) -> tuple[PyTree, Array, PyTree]:
+                           fresh_w: Array, stale_sum: Array, g_prev: PyTree,
+                           grad_tx=None, e: PyTree | None = None,
+                           ckey: Array | None = None):
     """Staleness-bounded Eq. (4) for one group (DESIGN.md §14.3):
 
         g = Σ_k (w_k/D) g_k + (S/D) ḡ,   D = Σ_k w_k + S,  S = Σ_j γ^{s_j}
@@ -304,6 +339,11 @@ def _per_group_train_avail(params_m: PyTree, batches_m: PyTree,
     grad_avg path (÷ same denominator, + S·ḡ/D = + 0·ḡ), and with an
     all-dark committee D's 1e-12 floor yields g = 0 → params unchanged.
     Returns ``(params', mean loss, g)`` — the blend is the next ḡ.
+
+    With ``grad_tx`` (§18 compression) the blended g is EF-compressed
+    before the update and the *transmitted* gradient becomes the next ḡ —
+    the BS only ever holds what crossed the link — extending the return to
+    ``(params', loss, ḡ', e', err)``.
     """
     denom = jnp.maximum(fresh_w.sum() + stale_sum, 1e-12)
     wn = fresh_w / denom
@@ -317,6 +357,11 @@ def _per_group_train_avail(params_m: PyTree, batches_m: PyTree,
     frac = stale_sum / denom
     g = jax.tree.map(lambda gf, gp: gf + frac * gp.astype(jnp.float32),
                      g_f, g_prev)
+    if grad_tx is not None:
+        g, e, err = grad_tx(g, e, ckey)
+        g_out = jax.tree.map(lambda gl, gp: gl.astype(gp.dtype), g, g_prev)
+        return (sync.apply_sgd(params_m, g, cfg.lr), jnp.mean(losses),
+                g_out, e, err)
     g_out = jax.tree.map(lambda gl, gp: gl.astype(gp.dtype), g, g_prev)
     return sync.apply_sgd(params_m, g, cfg.lr), jnp.mean(losses), g_out
 
@@ -324,7 +369,9 @@ def _per_group_train_avail(params_m: PyTree, batches_m: PyTree,
 def _train_all_groups(gp: PyTree, batches: PyTree, group_loss_fn, cfg:
                       FedGSConfig, weights: Array | None = None,
                       stale_sum: Array | None = None,
-                      g_prev: PyTree | None = None):
+                      g_prev: PyTree | None = None,
+                      grad_tx=None, e: PyTree | None = None,
+                      ckeys: Array | None = None):
     """All-groups superbatch form of the ``grad_avg`` train step
     (DESIGN.md §16.1): ONE backward over a loss summed across every group
     replaces the per-group ``jax.vmap`` of :func:`_per_group_train`.
@@ -341,7 +388,9 @@ def _train_all_groups(gp: PyTree, batches: PyTree, group_loss_fn, cfg:
     ``weights`` (M, L) are the internal-sync weights (uniform if None);
     with ``stale_sum`` (M,)/``g_prev`` the §14.3 bounded-async blend
     composes exactly as in :func:`_per_group_train_avail`, returning
-    ``(gp', (M,) mean loss, ḡ')`` instead of ``(gp', loss)``.
+    ``(gp', (M,) mean loss, ḡ')`` instead of ``(gp', loss)``. ``grad_tx``
+    (§18, vmapped over the group axis with per-group residuals ``e`` and
+    keys ``ckeys``) appends ``(e', (M,) err)`` to either form.
     """
     m = jax.tree.leaves(gp)[0].shape[0]
     if weights is None:
@@ -356,11 +405,20 @@ def _train_all_groups(gp: PyTree, batches: PyTree, group_loss_fn, cfg:
 
     (_, losses), g = jax.value_and_grad(weighted_loss, has_aux=True)(gp)
     if stale_sum is None:
+        if grad_tx is not None:
+            g, e, err = jax.vmap(grad_tx)(g, e, ckeys)
+            return (sync.apply_sgd(gp, g, cfg.lr), jnp.mean(losses, axis=-1),
+                    e, err)
         return sync.apply_sgd(gp, g, cfg.lr), jnp.mean(losses, axis=-1)
     frac = stale_sum / denom                      # (M,)
     g = jax.tree.map(
         lambda gf, gpv: gf + frac.reshape((m,) + (1,) * (gf.ndim - 1))
         * gpv.astype(jnp.float32), g, g_prev)
+    if grad_tx is not None:
+        g, e, err = jax.vmap(grad_tx)(g, e, ckeys)
+        g_out = jax.tree.map(lambda gl, gpv: gl.astype(gpv.dtype), g, g_prev)
+        return (sync.apply_sgd(gp, g, cfg.lr), jnp.mean(losses, axis=-1),
+                g_out, e, err)
     g_out = jax.tree.map(lambda gl, gpv: gl.astype(gpv.dtype), g, g_prev)
     return sync.apply_sgd(gp, g, cfg.lr), jnp.mean(losses, axis=-1), g_out
 
@@ -435,7 +493,9 @@ def _per_group_train_robust(params_m: PyTree, batches_m: PyTree,
                             weights: Array, t: Array, dev_ids: Array,
                             corrupt_fn, agg_fn,
                             stale_sum: Array | None = None,
-                            g_prev: PyTree | None = None):
+                            g_prev: PyTree | None = None,
+                            grad_tx=None, e: PyTree | None = None,
+                            ckey: Array | None = None):
     """Corruption-exposed Eq. (4) for one group (DESIGN.md §15).
 
     Unlike the fused-backward ``grad_avg`` path, the L per-member gradients
@@ -452,6 +512,9 @@ def _per_group_train_robust(params_m: PyTree, batches_m: PyTree,
 
     Returns ``(params', mean loss, g_out, RobustStep)``; ``g_out`` is the
     blended gradient (the next ḡ for bounded_async; ignored otherwise).
+    ``grad_tx`` (§18) EF-compresses the post-blend gradient — after robust
+    aggregation, so the compressor never sees raw corrupted members —
+    extending the return with ``(e', err)``.
     """
     losses, grads = jax.vmap(
         lambda b: sync.local_grads(params_m, b, loss_fn))(batches_m)
@@ -477,11 +540,19 @@ def _per_group_train_robust(params_m: PyTree, batches_m: PyTree,
             lambda gf, gp: (w_fresh * gf.astype(jnp.float32)
                             + stale_sum * gp.astype(jnp.float32)) / denom,
             g, g_prev)
+        if grad_tx is not None:
+            g, e, err = grad_tx(g, e, ckey)
         g_out = jax.tree.map(lambda gl, gp: gl.astype(gp.dtype), g, g_prev)
     else:
+        if grad_tx is not None:
+            g, e, err = grad_tx(g, e, ckey)
         g_out = g
+    step = RobustStep(hit=hit, flags=flags, residual=residual)
+    if grad_tx is not None:
+        return (sync.apply_sgd(params_m, g, cfg.lr), jnp.mean(losses), g_out,
+                step, e, err)
     return (sync.apply_sgd(params_m, g, cfg.lr), jnp.mean(losses), g_out,
-            RobustStep(hit=hit, flags=flags, residual=residual))
+            step)
 
 
 def _group_finite(tree: PyTree) -> Array:
@@ -506,16 +577,31 @@ def _where_groups(pred: Array, new: PyTree, old: PyTree) -> PyTree:
 
 
 def make_robust_train_step(loss_fn: LossFn, cfg: FedGSConfig, corrupt_fn, *,
-                           bounded: bool = False):
+                           bounded: bool = False, grad_tx=None):
     """Jitted robust train step for the two-phase host loop (DESIGN.md §15):
     ``step(gp, batches, fresh_w, t, dev_ids)`` — or with ``bounded``,
     ``step(gp, batches, fresh_w, stale_sum, g_prev, t, dev_ids)`` — vmapping
     :func:`_per_group_train_robust` over groups, with ``t`` a traced scalar
-    so one compilation serves every iteration of the fault trace."""
+    so one compilation serves every iteration of the fault trace. With
+    ``grad_tx`` (§18) every variant takes trailing ``(e, ckeys)`` args and
+    returns trailing ``(e', err)``."""
     agg_fn = dispatch.robust_agg_fn(cfg.kernel_backend, cfg.robust_agg,
                                     clip=cfg.robust_clip,
                                     trim=cfg.robust_trim,
                                     force_interpret=cfg.force_interpret)
+
+    if bounded and grad_tx is not None:
+        @jax.jit
+        def step_async_tx(group_params, batches, fresh_w, stale_sum, g_prev,
+                          t, dev_ids, e, ckeys):
+            return jax.vmap(
+                lambda p, b, w, ss, gpv, di, ev, ck: _per_group_train_robust(
+                    p, b, loss_fn, cfg, w, t, di, corrupt_fn, agg_fn,
+                    stale_sum=ss, g_prev=gpv, grad_tx=grad_tx, e=ev, ckey=ck)
+            )(group_params, batches, fresh_w, stale_sum, g_prev, dev_ids,
+              e, ckeys)
+
+        return step_async_tx
 
     if bounded:
         @jax.jit
@@ -529,6 +615,17 @@ def make_robust_train_step(loss_fn: LossFn, cfg: FedGSConfig, corrupt_fn, *,
 
         return step_async
 
+    if grad_tx is not None:
+        @jax.jit
+        def step_tx(group_params, batches, fresh_w, t, dev_ids, e, ckeys):
+            return jax.vmap(
+                lambda p, b, w, di, ev, ck: _per_group_train_robust(
+                    p, b, loss_fn, cfg, w, t, di, corrupt_fn, agg_fn,
+                    grad_tx=grad_tx, e=ev, ckey=ck)
+            )(group_params, batches, fresh_w, dev_ids, e, ckeys)
+
+        return step_tx
+
     @jax.jit
     def step(group_params, batches, fresh_w, t, dev_ids):
         return jax.vmap(
@@ -540,7 +637,8 @@ def make_robust_train_step(loss_fn: LossFn, cfg: FedGSConfig, corrupt_fn, *,
 
 
 def make_group_train_step(loss_fn: LossFn, cfg: FedGSConfig, *,
-                          availability: bool = False, group_loss_fn=None):
+                          availability: bool = False, group_loss_fn=None,
+                          grad_tx=None):
     """Train-only half of the iteration (used by the two-phase host loop):
     selected batches (M, L, n, ...) -> internally-synced group params.
 
@@ -552,10 +650,33 @@ def make_group_train_step(loss_fn: LossFn, cfg: FedGSConfig, *,
     ``group_loss_fn`` (requires ``train_step='grad_avg'``) switches every
     variant to the §16.1 all-groups superbatch backward
     (:func:`_train_all_groups`) — same signatures, same math, one fused
-    dispatch instead of a vmap of per-group backwards."""
+    dispatch instead of a vmap of per-group backwards.
+
+    ``grad_tx`` (§18 internal-sync compression) extends every variant with
+    trailing ``(e, ckeys)`` args and trailing ``(e', err)`` returns; when
+    None the built steps are exactly the pre-§18 callables."""
     grouped = _check_group_loss_fn(group_loss_fn, cfg, False)
 
     if availability and cfg.sync == "bounded_async":
+        if grad_tx is not None:
+            @jax.jit
+            def step_async_tx(group_params: PyTree, batches: PyTree,
+                              fresh_w: Array, stale_sum: Array,
+                              g_prev: PyTree, e: PyTree, ckeys: Array):
+                if grouped:
+                    return _train_all_groups(
+                        group_params, batches, group_loss_fn, cfg,
+                        weights=fresh_w, stale_sum=stale_sum, g_prev=g_prev,
+                        grad_tx=grad_tx, e=e, ckeys=ckeys)
+                return jax.vmap(
+                    lambda p, b, fw, ss, gp, ev, ck: _per_group_train_avail(
+                        p, b, loss_fn, cfg, fw, ss, gp,
+                        grad_tx=grad_tx, e=ev, ckey=ck)
+                )(group_params, batches, fresh_w, stale_sum, g_prev,
+                  e, ckeys)
+
+            return step_async_tx
+
         @jax.jit
         def step_async(group_params: PyTree, batches: PyTree, fresh_w: Array,
                        stale_sum: Array, g_prev: PyTree):
@@ -571,6 +692,21 @@ def make_group_train_step(loss_fn: LossFn, cfg: FedGSConfig, *,
         return step_async
 
     if availability:
+        if grad_tx is not None:
+            @jax.jit
+            def step_weighted_tx(group_params: PyTree, batches: PyTree,
+                                 fresh_w: Array, e: PyTree, ckeys: Array):
+                if grouped:
+                    return _train_all_groups(
+                        group_params, batches, group_loss_fn, cfg,
+                        weights=fresh_w, grad_tx=grad_tx, e=e, ckeys=ckeys)
+                return jax.vmap(
+                    lambda p, b, w, ev, ck: _per_group_train(
+                        p, b, loss_fn, cfg, w, grad_tx, ev, ck)
+                )(group_params, batches, fresh_w, e, ckeys)
+
+            return step_weighted_tx
+
         @jax.jit
         def step_weighted(group_params: PyTree, batches: PyTree,
                           fresh_w: Array):
@@ -583,6 +719,21 @@ def make_group_train_step(loss_fn: LossFn, cfg: FedGSConfig, *,
 
         return step_weighted
 
+    if grad_tx is not None:
+        @jax.jit
+        def step_tx(group_params: PyTree, batches: PyTree, e: PyTree,
+                    ckeys: Array):
+            if grouped:
+                return _train_all_groups(group_params, batches,
+                                         group_loss_fn, cfg,
+                                         grad_tx=grad_tx, e=e, ckeys=ckeys)
+            return jax.vmap(
+                lambda p, b, ev, ck: _per_group_train(
+                    p, b, loss_fn, cfg, None, grad_tx, ev, ck)
+            )(group_params, batches, e, ckeys)
+
+        return step_tx
+
     @jax.jit
     def step(group_params: PyTree, batches: PyTree):
         if grouped:
@@ -593,6 +744,50 @@ def make_group_train_step(loss_fn: LossFn, cfg: FedGSConfig, *,
         )(group_params, batches)
 
     return step
+
+
+def _compress_specs(cfg: FedGSConfig):
+    """(internal, external) parsed §18 compression specs — (None, None) on
+    the default config, which every caller treats as 'trace the pre-§18
+    graph exactly'."""
+    return (compress.parse_compress(cfg.compress_int),
+            compress.parse_compress(cfg.compress_ext))
+
+
+def _compress_carry_index(cfg: FedGSConfig, which: str) -> int:
+    """Static position of the §18 EF residual leaves inside the carried
+    selection state (see :func:`init_selection_state` for the layout)."""
+    spec_int, _ = _compress_specs(cfg)
+    base = 4 if cfg.sync == "bounded_async" else 2
+    if which == "int":
+        return base
+    return base + (1 if spec_int is not None else 0)
+
+
+def _group_params_count(group_params: PyTree) -> int:
+    """Per-group |θ| from a group-stacked tree (leaves (M, ...)) — static
+    at trace time, the S of the §18 byte accounting."""
+    return sum(leaf.size // leaf.shape[0]
+               for leaf in jax.tree.leaves(group_params))
+
+
+def _external_compress(gp0: PyTree, gp: PyTree, e_ext: PyTree, keys: Array,
+                       spec, *, backend: str, force_interpret: bool):
+    """§18 Eq. 5 compression, delta form: each group transmits
+    ``y = C(Δ^m + e^m)`` of its round delta ``Δ^m = ω_t^m − ω_{t-1}`` and
+    the cloud averages the reconstructed ``ω_{t-1} + y`` (``gp0`` rows all
+    equal the round-entry broadcast model, so the mean telescopes to
+    ``ω_{t-1} + mean_m y``). Returns ``(gp_tx, e_ext', (M,) err)``."""
+    delta = jax.tree.map(
+        lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32), gp, gp0)
+    y, e_new, err = jax.vmap(
+        lambda d, ev, k: compress.ef_compress(
+            d, ev, spec, k, backend=backend,
+            force_interpret=force_interpret))(delta, e_ext, keys)
+    gp_tx = jax.tree.map(
+        lambda b, yv: (b.astype(jnp.float32) + yv.astype(jnp.float32))
+        .astype(b.dtype), gp0, y)
+    return gp_tx, e_new, err
 
 
 # The typed per-round log record lives in core.engine and is shared by the
@@ -660,13 +855,16 @@ def run_fedgs(
     _check_group_loss_fn(group_loss_fn, cfg, robust)
     quarantined = corrupt_fn is not None and cfg.quarantine_limit > 0
     guard = corrupt_fn is not None and cfg.nan_guard
+    spec_int, spec_ext = _compress_specs(cfg)
+    grad_tx = compress.make_grad_tx(spec_int, backend=cfg.kernel_backend,
+                                    force_interpret=cfg.force_interpret)
     if robust:
         train_step = make_robust_train_step(loss_fn, cfg, corrupt_fn,
-                                            bounded=bounded)
+                                            bounded=bounded, grad_tx=grad_tx)
     else:
         train_step = make_group_train_step(
             loss_fn, cfg, availability=avail_fn is not None,
-            group_loss_fn=group_loss_fn)
+            group_loss_fn=group_loss_fn, grad_tx=grad_tx)
     gp = replicate_for_groups(params, cfg.num_groups)
     key = jax.random.PRNGKey(cfg.seed)
     p_real = jnp.asarray(p_real, jnp.float32)
@@ -674,6 +872,18 @@ def run_fedgs(
     mask_c, dist_c = sel_state[0], sel_state[1]
     if bounded:
         staleness, g_prev = sel_state[2], sel_state[3]
+    # §18 byte accounting + EF residual state (mirrors the fused carry)
+    n_par = sum(leaf.size for leaf in jax.tree.leaves(params))
+    payload_int = compress.payload_bytes(n_par, spec_int)
+    payload_ext = compress.payload_bytes(n_par, spec_ext)
+    e_int = sel_state[_compress_carry_index(cfg, "int")] \
+        if spec_int is not None else None
+    e_ext = sel_state[_compress_carry_index(cfg, "ext")] \
+        if spec_ext is not None else None
+    ext_fn = jax.jit(functools.partial(
+        _external_compress, spec=spec_ext, backend=cfg.kernel_backend,
+        force_interpret=cfg.force_interpret)) if spec_ext is not None \
+        else None
     quar = jnp.zeros((cfg.num_groups, cfg.devices_per_group), jnp.int32)
     avail_jit = jax.jit(avail_fn) if avail_fn is not None else None
     flat_ids = jnp.arange(cfg.num_groups * cfg.devices_per_group,
@@ -690,11 +900,19 @@ def run_fedgs(
         losses, divs, discs, dists = [], [], [], []
         parts, darks, smeans, smaxs = [], [], [], []
         corrs, clipfs, rbs, resids = [], [], [], []
+        bints, cerrs = [], []
+        gp_round0 = gp  # round-entry broadcast model (Δ base for Eq. 5)
         resel = 0
         for _ in range(cfg.iters_per_round):
             key, sub = jax.random.split(key)
             counts = jnp.asarray(streams.next_counts())
             keys = jax.random.split(sub, cfg.num_groups)
+            if spec_int is not None:
+                # §18 compression keys: folded off the iteration key so the
+                # main selection/sampling chain is untouched
+                ckeys = jax.random.split(
+                    jax.random.fold_in(sub, compress.FOLD_COMPRESS),
+                    cfg.num_groups)
             discs.append(float(jnp.mean(
                 distributions.group_discrepancy(counts, p_real))))
             if avail_fn is None:
@@ -746,12 +964,24 @@ def run_fedgs(
                 else:
                     fresh_w = vals * jnp.take_along_axis(avail, idx, axis=-1)
                 gp_old = gp
+                uploads = float(jnp.sum(fresh_w > 0))
                 if bounded:
                     g_prev_old, stale_old = g_prev, staleness
-                    gp, loss, g_prev, rs = train_step(
-                        gp, batches, fresh_w, st.stale_sum, g_prev_old,
-                        jnp.int32(t), dev_ids)
+                    if spec_int is not None:
+                        e_old = e_int
+                        gp, loss, g_prev, rs, e_int, errs = train_step(
+                            gp, batches, fresh_w, st.stale_sum, g_prev_old,
+                            jnp.int32(t), dev_ids, e_old, ckeys)
+                    else:
+                        gp, loss, g_prev, rs = train_step(
+                            gp, batches, fresh_w, st.stale_sum, g_prev_old,
+                            jnp.int32(t), dev_ids)
                     staleness = st.staleness
+                elif spec_int is not None:
+                    e_old = e_int
+                    gp, loss, _g, rs, e_int, errs = train_step(
+                        gp, batches, fresh_w, jnp.int32(t), dev_ids,
+                        e_old, ckeys)
                 else:
                     gp, loss, _g, rs = train_step(gp, batches, fresh_w,
                                                   jnp.int32(t), dev_ids)
@@ -760,11 +990,15 @@ def run_fedgs(
                     finite_m = _group_finite(gp)
                     if bounded:
                         finite_m = finite_m & _group_finite(g_prev)
+                    if spec_int is not None:
+                        finite_m = finite_m & _group_finite(e_int)
                     gp = _where_groups(finite_m, gp, gp_old)
                     if bounded:
                         g_prev = _where_groups(finite_m, g_prev, g_prev_old)
                         staleness = jnp.where(finite_m[:, None],
                                               staleness, stale_old)
+                    if spec_int is not None:
+                        e_int = _where_groups(finite_m, e_int, e_old)
                     rollbacks = float(jnp.sum(1.0 - finite_m))
                 if quarantined:
                     quar = jax.vmap(
@@ -785,11 +1019,22 @@ def run_fedgs(
                     else:
                         darks.append(float(jnp.sum(mask_c * (1.0 - avail))))
             elif avail is None:
-                gp, loss = train_step(gp, batches)
+                uploads = float(cfg.num_groups * cfg.num_selected)
+                if spec_int is not None:
+                    gp, loss, e_int, errs = train_step(gp, batches, e_int,
+                                                       ckeys)
+                else:
+                    gp, loss = train_step(gp, batches)
             elif bounded:
                 st = _avail_weights(mask_c, avail, staleness, cfg)
-                gp, loss, g_prev = train_step(gp, batches, st.fresh_w,
-                                              st.stale_sum, g_prev)
+                uploads = float(jnp.sum(st.fresh_w > 0))
+                if spec_int is not None:
+                    gp, loss, g_prev, e_int, errs = train_step(
+                        gp, batches, st.fresh_w, st.stale_sum, g_prev,
+                        e_int, ckeys)
+                else:
+                    gp, loss, g_prev = train_step(gp, batches, st.fresh_w,
+                                                  st.stale_sum, g_prev)
                 staleness = st.staleness
                 darks.append(float(jnp.sum(st.dark)))
                 smeans.append(float(jnp.mean(st.stale_mean)))
@@ -798,15 +1043,33 @@ def run_fedgs(
             else:
                 vals, idx = jax.lax.top_k(mask_c, cfg.num_selected)
                 fresh_w = vals * jnp.take_along_axis(avail, idx, axis=-1)
-                gp, loss = train_step(gp, batches, fresh_w)
+                uploads = float(jnp.sum(fresh_w > 0))
+                if spec_int is not None:
+                    gp, loss, e_int, errs = train_step(gp, batches, fresh_w,
+                                                       e_int, ckeys)
+                else:
+                    gp, loss = train_step(gp, batches, fresh_w)
                 darks.append(float(jnp.sum(mask_c * (1.0 - avail))))
                 parts.append(float(jnp.mean(avail)))
+            bints.append(2.0 * payload_int * uploads)
+            if spec_int is not None:
+                cerrs.append(float(jnp.mean(errs)))
             losses.append(float(jnp.mean(loss)))
             divs.append(float(jnp.mean(div)))
             dists.append(float(jnp.mean(dist_c)))
             t += 1
-        gp = external_sync_and_broadcast(gp, backend=cfg.kernel_backend,
-                                         force_interpret=cfg.force_interpret)
+        if spec_ext is not None:
+            key, esub = jax.random.split(key)
+            ekeys = jax.random.split(esub, cfg.num_groups)
+            gp_tx, e_ext, err_ext = ext_fn(gp_round0, gp, e_ext, ekeys)
+            cerrs.append(float(jnp.mean(err_ext)))
+            gp = external_sync_and_broadcast(
+                gp_tx, backend=cfg.kernel_backend,
+                force_interpret=cfg.force_interpret)
+        else:
+            gp = external_sync_and_broadcast(
+                gp, backend=cfg.kernel_backend,
+                force_interpret=cfg.force_interpret)
         tl = ta = None
         if eval_fn is not None and (r + 1) % eval_every == 0:
             tl, ta = eval_fn(global_params(gp))
@@ -829,7 +1092,11 @@ def run_fedgs(
             else float("nan"),
             rollbacks=float(np.sum(rbs)) if rbs else float("nan"),
             agg_residual=float(np.mean(resids)) if resids
-            else float("nan"))
+            else float("nan"),
+            bytes_int=float(np.sum(bints)),
+            bytes_ext=2.0 * payload_ext * cfg.num_groups,
+            compress_error=float(np.sum(cerrs) / max(len(cerrs), 1))
+            if cerrs else float("nan"))
         logs.append(log)
         if log_fn is not None:
             log_fn(log)
@@ -874,6 +1141,14 @@ def init_selection_state(cfg: FedGSConfig, params: PyTree | None = None,
     fresh gradient instead of fabricating an update — ``params`` (the
     zero-template) is required then.
 
+    With compression (``cfg.compress_int`` / ``cfg.compress_ext`` not
+    'none', DESIGN.md §18.1) the per-group error-feedback residuals join
+    next — ``e_int`` then ``e_ext``, each an ``(M, |θ|)``-shaped f32 params
+    tree initialized at zero (nothing has been dropped yet), sharded
+    ``P('groups')`` like the carried gradient. ``params`` is required to
+    size them. Their static carry indices come from
+    :func:`_compress_carry_index`.
+
     With ``quarantine=True`` (corruption injection + ``quarantine_limit`` >
     0, DESIGN.md §15.4) the per-device outlier-flag counters ``(M, K)
     int32`` join as the LAST leaf — always last, whatever the ``sync`` mode,
@@ -889,6 +1164,18 @@ def init_selection_state(cfg: FedGSConfig, params: PyTree | None = None,
         g_prev = replicate_for_groups(
             jax.tree.map(jnp.zeros_like, params), cfg.num_groups)
         sel = sel + (staleness, g_prev)
+    spec_int, spec_ext = _compress_specs(cfg)
+    if spec_int is not None or spec_ext is not None:
+        if params is None:
+            raise ValueError("compression needs the params template to size "
+                             "the error-feedback residuals")
+        zeros = replicate_for_groups(compress.zero_residual(params),
+                                     cfg.num_groups)
+        if spec_int is not None:
+            sel = sel + (zeros,)
+        if spec_ext is not None:
+            sel = sel + (jax.tree.map(jnp.copy, zeros)
+                         if spec_int is not None else zeros,)
     if quarantine:
         sel = sel + (jnp.zeros((cfg.num_groups, cfg.devices_per_group),
                                jnp.int32),)
@@ -973,6 +1260,15 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
         cfg.kernel_backend, cfg.robust_agg, clip=cfg.robust_clip,
         trim=cfg.robust_trim,
         force_interpret=cfg.force_interpret) if robust else None
+    # §18: compression specs resolve at trace time — spec None keeps every
+    # code path below literally the pre-compression program (no extra PRNG
+    # splits, no extra carry leaves), which is what the bit-identity test
+    # pins down.
+    spec_int, spec_ext = _compress_specs(cfg)
+    grad_tx = compress.make_grad_tx(spec_int, backend=cfg.kernel_backend,
+                                    force_interpret=cfg.force_interpret)
+    i_eint = _compress_carry_index(cfg, "int")
+    i_eext = _compress_carry_index(cfg, "ext")
     n_shards = 1 if mesh is None else _mesh_axis_size(mesh, axis_name)
     if m % n_shards != 0:
         raise ValueError(
@@ -990,6 +1286,9 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
 
     def round_body(group_params: PyTree, key: Array, sel: tuple,
                    t0: Array, p_real: Array):
+        n_par = _group_params_count(group_params)
+        payload_int = compress.payload_bytes(n_par, spec_int)
+        payload_ext = compress.payload_bytes(n_par, spec_ext)
         if mesh is None:
             gids = jnp.arange(m, dtype=jnp.int32)
         else:
@@ -1004,6 +1303,14 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
             # key, fan out to all M groups, take this shard's slice.
             key, sub = jax.random.split(key)
             keys = jnp.take(jax.random.split(sub, m), gids, axis=0)
+            if spec_int is not None:
+                # side-chained like the fault/availability streams: fold_in
+                # off the round sub-key so the selection PRNG chain is
+                # untouched, then the global-fan-out/take slice keeps the
+                # stochastic rounding invariant to the shard count
+                csub = jax.random.fold_in(sub, compress.FOLD_COMPRESS)
+                ckeys = jnp.take(jax.random.split(csub, m), gids, axis=0)
+            e_int = sel[i_eint] if spec_int is not None else None
             counts = sampler.counts(t, gids)
             # Resident ids (DESIGN.md §17): schedules evaluate on the (G, K)
             # flat POPULATION ids of the devices seated this iteration — the
@@ -1072,29 +1379,57 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
                 gp_old = gp
                 if bounded:
                     g_prev_old = sel[3]
-                    gp, losses, g_prev, rs = jax.vmap(
-                        lambda p, b, w, ss, gpv, di: _per_group_train_robust(
-                            p, b, loss_fn, cfg, w, t, di, corrupt_fn, agg_fn,
-                            stale_sum=ss, g_prev=gpv)
-                    )(gp, (imgs, labs), fresh_w, st.stale_sum, g_prev_old,
-                      dev_ids)
+                    if grad_tx is not None:
+                        e_old = e_int
+                        gp, losses, g_prev, rs, e_int, cerr = jax.vmap(
+                            lambda p, b, w, ss, gpv, di, ev, ck:
+                            _per_group_train_robust(
+                                p, b, loss_fn, cfg, w, t, di, corrupt_fn,
+                                agg_fn, stale_sum=ss, g_prev=gpv,
+                                grad_tx=grad_tx, e=ev, ckey=ck)
+                        )(gp, (imgs, labs), fresh_w, st.stale_sum,
+                          g_prev_old, dev_ids, e_int, ckeys)
+                    else:
+                        gp, losses, g_prev, rs = jax.vmap(
+                            lambda p, b, w, ss, gpv, di:
+                            _per_group_train_robust(
+                                p, b, loss_fn, cfg, w, t, di, corrupt_fn,
+                                agg_fn, stale_sum=ss, g_prev=gpv)
+                        )(gp, (imgs, labs), fresh_w, st.stale_sum,
+                          g_prev_old, dev_ids)
                     staleness = st.staleness
                 else:
-                    gp, losses, _g, rs = jax.vmap(
-                        lambda p, b, w, di: _per_group_train_robust(
-                            p, b, loss_fn, cfg, w, t, di, corrupt_fn,
-                            agg_fn)
-                    )(gp, (imgs, labs), fresh_w, dev_ids)
+                    if grad_tx is not None:
+                        e_old = e_int
+                        gp, losses, _g, rs, e_int, cerr = jax.vmap(
+                            lambda p, b, w, di, ev, ck:
+                            _per_group_train_robust(
+                                p, b, loss_fn, cfg, w, t, di, corrupt_fn,
+                                agg_fn, grad_tx=grad_tx, e=ev, ckey=ck)
+                        )(gp, (imgs, labs), fresh_w, dev_ids, e_int, ckeys)
+                    else:
+                        gp, losses, _g, rs = jax.vmap(
+                            lambda p, b, w, di: _per_group_train_robust(
+                                p, b, loss_fn, cfg, w, t, di, corrupt_fn,
+                                agg_fn)
+                        )(gp, (imgs, labs), fresh_w, dev_ids)
                 rollbacks = jnp.float32(0.0)
                 if guard:
                     finite_m = _group_finite(gp)
                     if bounded:
                         finite_m = finite_m & _group_finite(g_prev)
+                    if grad_tx is not None:
+                        # a poisoned residual would re-inject the fault next
+                        # iteration via error feedback — roll it back with
+                        # the group (DESIGN.md §18.1)
+                        finite_m = finite_m & _group_finite(e_int)
                     gp = _where_groups(finite_m, gp, gp_old)
                     if bounded:
                         g_prev = _where_groups(finite_m, g_prev, g_prev_old)
                         staleness = jnp.where(finite_m[:, None],
                                               staleness, sel[2])
+                    if grad_tx is not None:
+                        e_int = _where_groups(finite_m, e_int, e_old)
                     rollbacks = jnp.sum(1.0 - finite_m.astype(jnp.float32))
                 sel_new = (mask, dist, staleness, g_prev) if bounded \
                     else (mask, dist)
@@ -1102,7 +1437,7 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
                     quar_new = jax.vmap(
                         lambda q, i, f: q.at[i].add(f.astype(jnp.int32))
                     )(quar, idx, rs.flags * vals)
-                    sel_new = sel_new + (quar_new,)
+                uploads = jnp.sum((fresh_w > 0).astype(jnp.float32))
                 seated = jnp.sum(vals)
                 extra = {"corrupted_selected": jnp.sum(rs.hit * vals),
                          "clipped_fraction": (jnp.sum(rs.flags * vals)
@@ -1119,7 +1454,17 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
                         extra["dark_selected"] = jnp.sum(
                             mask * (1.0 - avail))
             elif avail is None:
-                if grouped:
+                if grad_tx is not None:
+                    if grouped:
+                        gp, losses, e_int, cerr = _train_all_groups(
+                            gp, (imgs, labs), group_loss_fn, cfg,
+                            grad_tx=grad_tx, e=e_int, ckeys=ckeys)
+                    else:
+                        gp, losses, e_int, cerr = jax.vmap(
+                            lambda p, b, ev, ck: _per_group_train(
+                                p, b, loss_fn, cfg, None, grad_tx, ev, ck)
+                        )(gp, (imgs, labs), e_int, ckeys)
+                elif grouped:
                     gp, losses = _train_all_groups(gp, (imgs, labs),
                                                    group_loss_fn, cfg)
                 else:
@@ -1127,9 +1472,25 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
                         lambda p, b: _per_group_train(p, b, loss_fn, cfg)
                     )(gp, (imgs, labs))
                 sel_new = (mask, dist)
+                uploads = jnp.float32(gids.shape[0] * l)
             elif bounded:
                 st = _avail_weights(mask, avail, sel[2], cfg)
-                if grouped:
+                if grad_tx is not None:
+                    if grouped:
+                        gp, losses, g_prev, e_int, cerr = _train_all_groups(
+                            gp, (imgs, labs), group_loss_fn, cfg,
+                            weights=st.fresh_w, stale_sum=st.stale_sum,
+                            g_prev=sel[3], grad_tx=grad_tx, e=e_int,
+                            ckeys=ckeys)
+                    else:
+                        gp, losses, g_prev, e_int, cerr = jax.vmap(
+                            lambda p, b, fw, ss, gpv, ev, ck:
+                            _per_group_train_avail(
+                                p, b, loss_fn, cfg, fw, ss, gpv,
+                                grad_tx, ev, ck)
+                        )(gp, (imgs, labs), st.fresh_w, st.stale_sum,
+                          sel[3], e_int, ckeys)
+                elif grouped:
                     gp, losses, g_prev = _train_all_groups(
                         gp, (imgs, labs), group_loss_fn, cfg,
                         weights=st.fresh_w, stale_sum=st.stale_sum,
@@ -1140,6 +1501,7 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
                             p, b, loss_fn, cfg, fw, ss, gpv)
                     )(gp, (imgs, labs), st.fresh_w, st.stale_sum, sel[3])
                 sel_new = (mask, dist, st.staleness, g_prev)
+                uploads = jnp.sum((st.fresh_w > 0).astype(jnp.float32))
                 extra = {"participation": jnp.mean(avail),
                          "dark_selected": jnp.sum(st.dark),
                          "staleness_mean": jnp.mean(st.stale_mean),
@@ -1147,7 +1509,18 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
             else:
                 vals, idx = jax.lax.top_k(mask, l)
                 fresh_w = vals * jnp.take_along_axis(avail, idx, axis=-1)
-                if grouped:
+                if grad_tx is not None:
+                    if grouped:
+                        gp, losses, e_int, cerr = _train_all_groups(
+                            gp, (imgs, labs), group_loss_fn, cfg,
+                            weights=fresh_w, grad_tx=grad_tx, e=e_int,
+                            ckeys=ckeys)
+                    else:
+                        gp, losses, e_int, cerr = jax.vmap(
+                            lambda p, b, w, ev, ck: _per_group_train(
+                                p, b, loss_fn, cfg, w, grad_tx, ev, ck)
+                        )(gp, (imgs, labs), fresh_w, e_int, ckeys)
+                elif grouped:
                     gp, losses = _train_all_groups(gp, (imgs, labs),
                                                    group_loss_fn, cfg,
                                                    weights=fresh_w)
@@ -1157,8 +1530,23 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
                                                          cfg, w)
                     )(gp, (imgs, labs), fresh_w)
                 sel_new = (mask, dist)
+                uploads = jnp.sum((fresh_w > 0).astype(jnp.float32))
                 extra = {"participation": jnp.mean(avail),
                          "dark_selected": jnp.sum(mask * (1.0 - avail))}
+            # §18 carry layout: EF residuals slot in after the sync leaves,
+            # quarantine counters stay LAST (init_selection_state)
+            if spec_int is not None:
+                sel_new = sel_new + (e_int,)
+                extra["compress_error_int"] = jnp.mean(cerr)
+            if spec_ext is not None:
+                sel_new = sel_new + (sel[i_eext],)
+            if quarantined:
+                sel_new = sel_new + (quar_new,)
+            # bytes over the BS↔device links this iteration: download +
+            # upload per seated contributor (DESIGN.md §18.3) — emitted on
+            # the dense path too, so FedAvg-vs-FedGS byte ledgers always
+            # compare like for like
+            extra["bytes_int"] = 2.0 * payload_int * uploads
             disc = jnp.mean(distributions.group_discrepancy(counts, p_real))
             loss, div, d = jnp.mean(losses), jnp.mean(div), jnp.mean(dist)
             if mesh is not None:
@@ -1167,11 +1555,12 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
                 disc = jax.lax.pmean(disc, axis_name)
                 d = jax.lax.pmean(d, axis_name)
                 for name in ("participation", "staleness_mean",
-                             "clipped_fraction", "agg_residual"):
+                             "clipped_fraction", "agg_residual",
+                             "compress_error_int"):
                     if name in extra:
                         extra[name] = jax.lax.pmean(extra[name], axis_name)
                 for name in ("dark_selected", "corrupted_selected",
-                             "rollbacks"):
+                             "rollbacks", "bytes_int"):
                     if name in extra:
                         extra[name] = jax.lax.psum(extra[name], axis_name)
                 if "staleness_max" in extra:
@@ -1184,6 +1573,27 @@ def make_round_body(loss_fn: LossFn, cfg: FedGSConfig, sampler, *,
         (gp, key, sel), mets = jax.lax.scan(
             iteration, (group_params, key, tuple(sel)),
             t0 + jnp.arange(t_per_round, dtype=jnp.int32), unroll=unroll)
+        mets = dict(mets)
+        if spec_ext is not None:
+            # §18 Eq. 5 compression: each group transmits the compressed
+            # round delta against the round-entry broadcast model
+            # (group_params — every row identical), with per-group error
+            # feedback carried in the selection state at i_eext. Key split
+            # only on this path so the 'none' chain stays untouched.
+            key, esub = jax.random.split(key)
+            ekeys = jnp.take(jax.random.split(esub, m), gids, axis=0)
+            gp, e_ext, err_ext = _external_compress(
+                group_params, gp, sel[i_eext], ekeys, spec_ext,
+                backend=cfg.kernel_backend,
+                force_interpret=cfg.force_interpret)
+            sel = sel[:i_eext] + (e_ext,) + sel[i_eext + 1:]
+            err_ext_m = jnp.mean(err_ext)
+            if mesh is not None:
+                err_ext_m = jax.lax.pmean(err_ext_m, axis_name)
+            mets["compress_error_ext"] = err_ext_m
+        # per-round BS↔cloud bytes: download + upload for each of the M
+        # base stations (static — Eq. 5 always moves the full payload)
+        mets["bytes_ext"] = jnp.float32(2.0 * payload_ext * m)
         # epilogue: external sync (Eq. 5) + broadcast back to the group axis
         g = sync.external_sync_grouped(
             gp, axis_name if mesh is not None else None,
@@ -1266,6 +1676,7 @@ def make_fedgs_experiment(
     gp = replicate_for_groups(params, cfg.num_groups)
     quarantined = corrupt_fn is not None and cfg.quarantine_limit > 0
     robust = _robust_active(cfg, corrupt_fn)
+    spec_int, spec_ext = _compress_specs(cfg)
     state = (gp, jax.random.PRNGKey(cfg.seed),
              init_selection_state(cfg, params, quarantine=quarantined))
     bounded = cfg.sync == "bounded_async"
@@ -1293,6 +1704,21 @@ def make_fedgs_experiment(
             out["clipped_fraction"] = jnp.mean(mets["clipped_fraction"])
             out["rollbacks"] = jnp.sum(mets["rollbacks"])
             out["agg_residual"] = jnp.mean(mets["agg_residual"])
+        # §18.3 byte ledger — always emitted (dense numbers when
+        # compression is off) so crossover sweeps compare like for like
+        out["bytes_int"] = jnp.sum(mets["bytes_int"])
+        out["bytes_ext"] = mets["bytes_ext"]
+        if spec_int is not None or spec_ext is not None:
+            # same estimator as the host loop: mean over every transmission
+            # event's per-group ‖e‖₂ — T internal events plus one external
+            errs = []
+            if spec_int is not None:
+                errs.append(jnp.sum(mets["compress_error_int"]))
+            if spec_ext is not None:
+                errs.append(mets["compress_error_ext"])
+            n_ev = (cfg.iters_per_round if spec_int is not None else 0) + \
+                (1 if spec_ext is not None else 0)
+            out["compress_error"] = sum(errs) / n_ev
         return (gp, key, sel), out
 
     def params_fn(state):

@@ -1,0 +1,41 @@
+"""Jit'd wrapper: flat top-k magnitude selection via the Pallas kernel.
+
+Drop-in for ``core.compress.topk_select_dense`` (same contract, DESIGN.md
+§18.2): routes through the compiled-aware ``route_op`` registry like every
+kernel op. The routing size is the kernel's *work*, P² pairwise compares —
+not P — so on CPU anything beyond a toy vector falls back to the
+identical-math ``jax.lax.top_k`` scatter instead of eating the interpret
+grid-walk penalty, unless ``force_interpret`` pins the kernel (parity
+tests / benches).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import common
+from ..common import pad_to, use_interpret
+from . import kernel
+
+OP_NAME = "topk_compress"
+
+
+def topk_select_flat(x, k: int, *, block_p: int = 512,
+                     interpret: bool | None = None,
+                     force_interpret: bool = False):
+    """x (P,) — keep exactly the k largest-|x| coordinates (ties toward the
+    lower index), zero the rest. k clamped to [0, P]."""
+    (n,) = x.shape
+    if k <= 0:
+        return jnp.zeros_like(x)
+    if k >= n:
+        return x
+    route = common.route_op(OP_NAME, n * n, interpret=interpret,
+                            force_interpret=force_interpret)
+    if route == "jnp":
+        from repro.core import compress
+        return compress.topk_select_dense(x, k)
+    pp = pad_to(n, block_p)
+    buf = jnp.pad(x.astype(jnp.float32), (0, pp - n))
+    out = kernel.topk_select_kernel(buf, k=k, block_p=block_p,
+                                    interpret=use_interpret(interpret))
+    return out[:n].astype(x.dtype)

@@ -1,0 +1,23 @@
+"""jnp oracle for the top-k magnitude-selection kernel (DESIGN.md §18.2).
+
+``jax.lax.top_k`` is stable — equal values surface in ascending-index
+order — so scattering its k winners back into a zero vector implements
+exactly the pairwise-rank tie-break the kernel uses (lower index wins).
+The kernel test asserts bitwise equality against this on tied inputs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_select_ref(x: jax.Array, k: int) -> jax.Array:
+    """Keep exactly the k largest-|x| coordinates (ties toward the lower
+    index), zero the rest. k is clamped to [0, P]."""
+    n = x.shape[0]
+    if k <= 0:
+        return jnp.zeros_like(x)
+    if k >= n:
+        return x
+    _, idx = jax.lax.top_k(jnp.abs(x.astype(jnp.float32)), k)
+    return jnp.zeros_like(x).at[idx].set(x[idx])

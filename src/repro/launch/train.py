@@ -44,6 +44,15 @@ quarantined out of GBP-CS after ``--quarantine-limit`` flags:
       --corrupt scale+nan_burst --corrupt-frac 0.2 \
       --robust-agg trimmed_mean --quarantine-limit 3
 
+Communication-efficient sync (DESIGN.md §18): ``--compress-int`` /
+``--compress-ext`` compress the Eq. 4 (device↔BS) and Eq. 5 (BS↔cloud)
+payloads independently — top-k sparsification and/or stochastic int8
+quantization, each with per-group error feedback; every round logs its
+analytic ``bytes_int`` / ``bytes_ext`` ledger:
+
+  PYTHONPATH=src python -m repro.launch.train --engine fused \
+      --compress-int topk:0.01+int8 --compress-ext int8
+
 Million-device populations (DESIGN.md §17): ``--devices`` (or
 ``--population-per-group``) switches the universe to the lazy pure-function-
 of-id population — only the K sampled slots per group ever become resident
@@ -192,6 +201,14 @@ def main() -> None:
     ap.add_argument("--quarantine-limit", type=int, default=3,
                     help="outlier flags before a device is barred from "
                          "selection (0 disables quarantine)")
+    ap.add_argument("--compress-int", default="none",
+                    help="Eq. 4 device->BS gradient compression "
+                         "(DESIGN.md §18): 'none', 'topk:FRAC', 'int8' or "
+                         "'topk:FRAC+int8' — top-k sparsification and/or "
+                         "stochastic int8, with per-group error feedback")
+    ap.add_argument("--compress-ext", default="none",
+                    help="Eq. 5 BS->cloud round-delta compression, same "
+                         "grammar as --compress-int")
     ap.add_argument("--no-nan-guard", action="store_true",
                     help="disable the per-iteration NaN/Inf rollback guard "
                          "(DESIGN.md §15.3)")
@@ -310,7 +327,8 @@ def main() -> None:
             robust_agg=args.robust_agg, robust_clip=args.robust_clip,
             robust_trim=args.robust_trim,
             quarantine_limit=args.quarantine_limit,
-            nan_guard=not args.no_nan_guard)
+            nan_guard=not args.no_nan_guard,
+            compress_int=args.compress_int, compress_ext=args.compress_ext)
         # §16.1 all-groups superbatch CNN backward: one fused conv dispatch
         # per layer across all M·L members. grad_avg-only, and the robust
         # path needs per-member gradients, so it falls back there.
@@ -365,7 +383,8 @@ def main() -> None:
     else:
         for flag in ("train_step", "kernel_backend", "force_interpret",
                      "selection", "init", "reselect_every", "avail", "sync",
-                     "corrupt", "robust_agg", "quarantine_limit"):
+                     "corrupt", "robust_agg", "quarantine_limit",
+                     "compress_int", "compress_ext"):
             if getattr(args, flag) != ap.get_default(flag):
                 print(f"warning: --{flag.replace('_', '-')} applies only to "
                       f"--strategy fedgs; ignored for {args.strategy}",

@@ -38,8 +38,10 @@ def test_design_has_sections():
     assert "15" in secs, "DESIGN.md §15 (corruption robustness) missing"
     assert "16" in secs, "DESIGN.md §16 (conv fusion + dispatch) missing"
     assert "17" in secs, "DESIGN.md §17 (lazy million-device population) missing"
+    assert "18" in secs, "DESIGN.md §18 (communication-efficient sync) missing"
     for sub in ("16.1", "16.2", "16.3", "16.4",
-                "17.1", "17.2", "17.3", "17.4"):
+                "17.1", "17.2", "17.3", "17.4",
+                "18.1", "18.2", "18.3", "18.4"):
         assert sub in secs, f"DESIGN.md §{sub} missing"
 
 
@@ -84,6 +86,20 @@ def test_readme_documents_scale():
         assert flag in readme, f"README missing {flag} quickstart"
     for word in ("BENCH_scale.json", "LazyPopulation", "1000000"):
         assert word in readme, f"README scale section missing {word}"
+
+
+def test_readme_documents_communication():
+    """README's communication quickstart must mention the compression flags
+    the CLI actually exposes and the comm bench artifact (§18)."""
+    readme = (REPO / "README.md").read_text()
+    for flag in ("--compress-int", "--compress-ext"):
+        assert flag in readme, f"README missing {flag} quickstart"
+    for word in ("topk", "int8", "error feedback", "bytes_ext",
+                 "BENCH_comm.json"):
+        assert word in readme, f"README communication section missing {word}"
+    design = DESIGN.read_text()
+    for claim in ("error feedback", "measured_crossover", "payload_bytes"):
+        assert claim.lower() in design.lower(), f"DESIGN.md §18 missing {claim}"
 
 
 def test_readme_documents_robustness():

@@ -116,6 +116,60 @@ def test_ssd_scan_matches_model_chunked():
 
 
 # ---------------------------------------------------------------------------
+# topk_compress
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("p,k,block_p", [
+    (256, 1, 128), (256, 13, 64), (512, 100, 512), (1024, 512, 256)])
+def test_topk_compress_kernel_sweep(p, k, block_p):
+    """Pairwise-rank kernel == stable top_k scatter, bitwise — including on
+    tied magnitudes (values quantized to a coarse grid to force ties)."""
+    from repro.kernels.topk_compress import kernel, ref
+    rng = np.random.default_rng(p + k)
+    x = jnp.asarray(
+        np.round(rng.normal(size=p) * 4) / 4, jnp.float32)
+    o_ref = ref.topk_select_ref(x, k)
+    o_k = kernel.topk_select_kernel(x, k=k, block_p=block_p, interpret=True)
+    np.testing.assert_array_equal(np.asarray(o_k), np.asarray(o_ref))
+    assert int(jnp.sum(o_k != 0)) <= k
+
+
+def test_topk_compress_edges_and_padding():
+    """k<=0 / k>=P early-return exactly; non-block-multiple P exercises the
+    rank-safe zero padding (DESIGN.md §18.2)."""
+    from repro.core import compress
+    from repro.kernels.topk_compress import ops, ref
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=300), jnp.float32)   # 300 % 128 != 0
+    np.testing.assert_array_equal(
+        np.asarray(ops.topk_select_flat(x, 0)), np.zeros(300, np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(ops.topk_select_flat(x, 300)), np.asarray(x))
+    o_k = ops.topk_select_flat(x, 7, block_p=128, force_interpret=True)
+    np.testing.assert_array_equal(np.asarray(o_k),
+                                  np.asarray(ref.topk_select_ref(x, 7)))
+    np.testing.assert_array_equal(np.asarray(o_k),
+                                  np.asarray(compress.topk_select_dense(x, 7)))
+
+
+def test_topk_compress_op_registry():
+    """The op reports its routing like every kernel op: pinned interpret
+    under force_interpret, jnp fallback at CPU-heavy P² work sizes."""
+    from repro.core import dispatch
+    from repro.kernels.topk_compress import ops
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=256), jnp.float32)
+    dispatch.reset_op_modes()
+    ops.topk_select_flat(x, 5, force_interpret=True)
+    assert dispatch.op_modes()["topk_compress"] == "interpret"
+    dispatch.reset_op_modes()
+    xl = jnp.asarray(rng.normal(size=4096), jnp.float32)  # 4096² >> heavy cut
+    ops.topk_select_flat(xl, 5)
+    if jax.default_backend() == "cpu":
+        assert dispatch.op_modes()["topk_compress"] == "jnp"
+
+
+# ---------------------------------------------------------------------------
 # agg_weighted
 # ---------------------------------------------------------------------------
 

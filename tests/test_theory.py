@@ -36,6 +36,24 @@ def test_convergence_bound_decreases_with_R():
     b1 = theory.convergence_upper_bound(50, 100, **kw)
     b2 = theory.convergence_upper_bound(50, 500, **kw)
     assert b2 < b1
+    assert math.isfinite(b1) and b1 > 0.0
+
+
+def test_convergence_bound_raises_when_vacuous():
+    """ISSUE 10 satellite: a non-positive denominator (drift term swamps
+    the descent term) used to return inf silently — now it raises, and the
+    positive branch still returns a finite bound."""
+    with pytest.raises(ValueError, match="vacuous"):
+        theory.convergence_upper_bound(8, 10, eta=10.0, beta=1.0, rho=1.0,
+                                       delta=1.0, varphi=0.01, epsilon=0.1)
+    # exactly-zero denominator is vacuous too (eta*varphi == drift/T/eps^2)
+    hT = theory.h(2, eta=1.0, beta=1.0)
+    eps = 1.0
+    varphi = hT / (2 * eps ** 2)  # makes denom == 0 at rho=delta=1
+    with pytest.raises(ValueError):
+        theory.convergence_upper_bound(2, 10, eta=1.0, beta=1.0, rho=1.0,
+                                       delta=1.0, varphi=varphi / 1.0,
+                                       epsilon=eps)
 
 
 def test_gap_bound_requires_eta_leq_inv_beta():
@@ -62,6 +80,18 @@ def test_paper_default_setting_is_efficient():
     assert theory.efficiency_condition(50, 10, 10, net)
     net2 = theory.NetworkModel(b_int=1e9, b_ext=5e8)  # ratio 2 < 5.6
     assert not theory.efficiency_condition(50, 10, 10, net2)
+
+
+def test_efficiency_condition_L1_degenerate():
+    """ISSUE 10 satellite: L=1 (one device per group) divides by L−1=0 in
+    the relaxed constant — both forms must return False (FEDGS moves the
+    same external traffic as FedAvg plus T internal rounds), never raise."""
+    net = theory.NetworkModel()
+    for T, M in [(1, 1), (50, 10), (500, 2)]:
+        assert theory.efficiency_condition(T, M, 1, net) is False
+        assert theory.efficiency_condition_exact(T, M, 1, net) is False
+    # and L=2 right next to the edge still evaluates the real inequality
+    assert isinstance(theory.efficiency_condition(2, 100, 2, net), bool)
 
 
 def test_exact_condition_stricter_with_selection_cost():
@@ -173,3 +203,93 @@ def test_prop4_on_measured_rounds_to_target(measured_runs):
     assert not theory.efficiency_condition(T, M, L, net_sym)
     assert theory.t_fedgs_round(T, M, L, net_sym) \
         >= theory.t_fedavg_round(T, M, L, net_sym)
+
+
+# ---------------------------------------------------------------------------
+# §18.4 measured crossover: Prop. 4 fed with byte ledgers.
+# ---------------------------------------------------------------------------
+
+def test_t_round_measured_reduces_to_eq24_25():
+    """Dense ledgers make the generalized per-round time EXACTLY Eq. 24/25."""
+    net = theory.NetworkModel()
+    S = net.model_size_bytes
+    for T, M, L in [(50, 10, 10), (16, 4, 5), (200, 2, 40)]:
+        a = theory.t_round_measured(2 * S * L * T * M, 2 * S * M, T, M, net)
+        assert a == pytest.approx(theory.t_fedgs_round(T, M, L, net),
+                                  rel=1e-12)
+        b = theory.t_round_measured(0.0, 2 * S * M * L, T, M, net,
+                                    select=False)
+        assert b == pytest.approx(theory.t_fedavg_round(T, M, L, net),
+                                  rel=1e-12)
+
+
+def test_measured_crossover_roundtrips_predicted():
+    """ISSUE 10 acceptance: dense bytes + equal rounds + t_select=0 make
+    the measured crossover ratio equal the relaxed Prop. 4 constant
+    TL/(M(L−1)) exactly, and the efficiency verdict flips at the known
+    (T, M, L) boundary."""
+    for T, M, L in [(16, 20, 5), (50, 10, 10), (8, 4, 2)]:
+        net = theory.NetworkModel(t_select=0.0)
+        S = net.model_size_bytes
+        rep = theory.measured_crossover(
+            bytes_int_g=2 * S * L * T * M, bytes_ext_g=2 * S * M,
+            rounds_g=30, bytes_ext_a=2 * S * M * L, rounds_a=30,
+            T=T, M=M, L=L, net=net)
+        want = (T * L) / (M * (L - 1))
+        assert rep.predicted_ratio == pytest.approx(want, rel=1e-12)
+        assert rep.measured_ratio == pytest.approx(want, rel=1e-9)
+        # verdict at the model's own links agrees with the closed form
+        assert rep.fedgs_wins == \
+            theory.efficiency_condition(T, M, L, net)
+        # the condition flips exactly at r*: wins above, loses below
+        above = theory.NetworkModel(t_select=0.0, b_int=want * 1.01 * 5e7,
+                                    b_ext=5e7)
+        below = theory.NetworkModel(t_select=0.0, b_int=want * 0.99 * 5e7,
+                                    b_ext=5e7)
+        assert theory.measured_crossover(
+            bytes_int_g=2 * S * L * T * M, bytes_ext_g=2 * S * M,
+            rounds_g=30, bytes_ext_a=2 * S * M * L, rounds_a=30,
+            T=T, M=M, L=L, net=above).fedgs_wins
+        assert not theory.measured_crossover(
+            bytes_int_g=2 * S * L * T * M, bytes_ext_g=2 * S * M,
+            rounds_g=30, bytes_ext_a=2 * S * M * L, rounds_a=30,
+            T=T, M=M, L=L, net=below).fedgs_wins
+
+
+def test_measured_crossover_on_synthetic_records():
+    """The measured-bytes variant agrees with hand algebra on synthetic
+    RoundRecords: compression shrinks FEDGS's external ledger, lowering
+    the crossover ratio (FEDGS wins on slower internal links); a FEDGS
+    that needs too many rounds pushes the ratio to inf."""
+    net = theory.NetworkModel(t_select=0.0, t_comp=0.0)
+    S = net.model_size_bytes
+    T, M, L = 16, 10, 5
+    recs_g = [engine.RoundRecord(round=r, loss=1.0,
+                                 bytes_int=2 * S * L * T * M,
+                                 bytes_ext=2 * S * M * 0.05)  # 20x ext comp
+              for r in range(3)]
+    recs_a = [engine.RoundRecord(round=r, loss=1.0,
+                                 bytes_ext=2 * S * M * L)
+              for r in range(3)]
+    rep = theory.measured_crossover(
+        bytes_int_g=recs_g[0].bytes_int, bytes_ext_g=recs_g[0].bytes_ext,
+        rounds_g=3, bytes_ext_a=recs_a[0].bytes_ext, rounds_a=3,
+        T=T, M=M, L=L, net=net)
+    # gap algebra by hand: r* = R_g·8·(I_g/M) / (β·B_ext·gap)
+    beta = net.beta_link
+    gap = 3 * 8 * recs_a[0].bytes_ext / (beta * net.b_ext) \
+        - 3 * 8 * recs_g[0].bytes_ext / (beta * net.b_ext)
+    want = 3 * 8 * (recs_g[0].bytes_int / M) / (beta * net.b_ext * gap)
+    assert rep.measured_ratio == pytest.approx(want, rel=1e-12)
+    # shrinking E_g grows the gap => smaller measured ratio than dense
+    dense = theory.measured_crossover(
+        bytes_int_g=2 * S * L * T * M, bytes_ext_g=2 * S * M, rounds_g=3,
+        bytes_ext_a=2 * S * M * L, rounds_a=3, T=T, M=M, L=L, net=net)
+    assert rep.measured_ratio < dense.measured_ratio
+    # a FEDGS needing vastly more rounds can never win: ratio == inf
+    hopeless = theory.measured_crossover(
+        bytes_int_g=2 * S * L * T * M, bytes_ext_g=2 * S * M,
+        rounds_g=3000, bytes_ext_a=2 * S * M * L, rounds_a=3,
+        T=T, M=M, L=L, net=net)
+    assert hopeless.measured_ratio == math.inf
+    assert not hopeless.fedgs_wins
